@@ -1,0 +1,93 @@
+"""Shared benchmark machinery: orthoptimizer registry, timed optimization
+runs, CSV emission (``name,us_per_call,derived``)."""
+
+from __future__ import annotations
+
+import time
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro import optim
+from repro.core import landing, landing_pc, pogo, rgd, rsdm, slpg, stiefel
+
+
+def method_registry(lr_scale: float = 1.0, rsdm_dim: int = 64):
+    """The paper's Sec.-5 baseline set. Learning rates follow the paper's
+    per-method tuning ratios (App. C), scaled by ``lr_scale``."""
+    return {
+        "pogo": lambda: pogo.pogo(0.25 * lr_scale,
+                                  base_optimizer=optim.chain(optim.trace(0.3))),
+        "pogo_root": lambda: pogo.pogo(0.15 * lr_scale, find_root=True),
+        "pogo_vadam": lambda: pogo.pogo(
+            0.5 * lr_scale, base_optimizer=optim.chain(optim.scale_by_vadam())
+        ),
+        "landing": lambda: landing.landing(0.25 * lr_scale,
+                                           base_optimizer=optim.chain(optim.trace(0.1))),
+        "landing_pc": lambda: landing.landing_pc(0.5 * lr_scale),
+        "rgd_qr": lambda: rgd.rgd(0.15 * lr_scale, retraction="qr"),
+        "slpg": lambda: slpg.slpg(0.125 * lr_scale),
+        "rsdm": lambda: rsdm.rsdm(1.0 * lr_scale, submanifold_dim=rsdm_dim),
+    }
+
+
+def run_method(
+    opt,
+    loss_fn: Callable,
+    x0: jax.Array,
+    *,
+    max_iters: int = 1000,
+    gap_fn: Optional[Callable] = None,
+    target_gap: float = 1e-6,
+    record_every: int = 10,
+):
+    """Optimize; returns dict(time_s, iters, final_gap, final_dist, trace)."""
+    state = opt.init(x0)
+
+    @jax.jit
+    def step(x, state):
+        g = jax.grad(loss_fn)(x)
+        if jnp.issubdtype(x.dtype, jnp.complexfloating):
+            g = jnp.conj(g)
+        u, state = opt.update(g, state, x)
+        return x + u, state
+
+    x, state = step(x0, state)  # compile outside the timer
+    jax.block_until_ready(x)
+    x = x0
+    state = opt.init(x0)
+
+    trace = []
+    t0 = time.perf_counter()
+    it = 0
+    for it in range(1, max_iters + 1):
+        x, state = step(x, state)
+        if it % record_every == 0 or it == max_iters:
+            jax.block_until_ready(x)
+            gap = float(gap_fn(x)) if gap_fn else float("nan")
+            dist = float(jnp.max(stiefel.manifold_distance(_widen(x))))
+            trace.append((it, time.perf_counter() - t0, gap, dist))
+            if gap_fn and gap < target_gap:
+                break
+    total = time.perf_counter() - t0
+    gap = float(gap_fn(x)) if gap_fn else float("nan")
+    dist = float(jnp.max(stiefel.manifold_distance(_widen(x))))
+    return {
+        "time_s": total,
+        "iters": it,
+        "us_per_call": 1e6 * total / max(it, 1),
+        "final_gap": gap,
+        "final_dist": dist,
+        "trace": trace,
+    }
+
+
+def _widen(x):
+    if x.shape[-2] > x.shape[-1]:
+        return jnp.swapaxes(x, -1, -2)
+    return x
+
+
+def emit(name: str, us_per_call: float, derived: str):
+    print(f"{name},{us_per_call:.1f},{derived}", flush=True)

@@ -1,0 +1,56 @@
+"""Lambda ablation (paper Figs. C.2/C.3): find_root vs lambda = 1/2 across
+learning rates; plus POGO+VAdam as the reference.
+
+Expected pattern (paper Sec. C.6): at small eta the two are
+indistinguishable; at large eta lambda=1/2 diverges off the manifold while
+the quartic root survives; VAdam's norm control allows the largest stable
+learning rates.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro import optim
+from repro.core import pogo, stiefel
+
+from .common import emit, run_method
+from .pca import build_problem
+
+ETAS = [0.05, 0.1, 0.25, 0.5, 1.0]
+
+
+def run(full: bool = False, iters: int = 200):
+    n, p = (512, 384) if full else (192, 128)
+    results = {}
+    for eta in ETAS:
+        for mode, make in [
+            ("fixed", lambda e=eta: pogo.pogo(e, lam=0.5)),
+            ("root", lambda e=eta: pogo.pogo(e, find_root=True)),
+        ]:
+            loss, gap, x0 = build_problem(n, p)
+            out = run_method(make(), loss, x0, max_iters=iters, gap_fn=gap)
+            key = f"eta{eta}/{mode}"
+            results[key] = out
+            emit(
+                f"lambda_ablation/{key}",
+                out["us_per_call"],
+                f"gap={out['final_gap']:.2e};dist={out['final_dist']:.2e}",
+            )
+    # reference: VAdam base at the largest eta (norm control keeps xi < 1)
+    loss, gap, x0 = build_problem(n, p)
+    out = run_method(
+        pogo.pogo(1.0, base_optimizer=optim.chain(optim.scale_by_vadam())),
+        loss, x0, max_iters=iters, gap_fn=gap,
+    )
+    results["eta1.0/vadam"] = out
+    emit(
+        "lambda_ablation/eta1.0/vadam", out["us_per_call"],
+        f"gap={out['final_gap']:.2e};dist={out['final_dist']:.2e}",
+    )
+    return results
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,61 @@
+"""Precision ablation (paper Fig. C.1): matmul precision vs feasibility.
+
+POGO in fp64 / fp32 / bf16-matmul (fp32 master): manifold distance and
+per-step time on the PCA problem — reproduces the paper's trade-off (lower
+mantissa => faster steps, looser feasibility; POGO benefits most since it
+is pure matmul).
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import stiefel
+from repro.kernels import ref
+
+from .common import emit
+from .pca import build_problem
+
+
+def run(full: bool = False, iters: int = 150):
+    n, p = (512, 384) if full else (192, 128)
+    results = {}
+    for name, dtype, matmul_dtype in [
+        ("f64", jnp.float64, jnp.float64),
+        ("f32", jnp.float32, jnp.float32),
+        ("bf16mm", jnp.float32, jnp.bfloat16),
+    ]:
+        if dtype == jnp.float64:
+            jax.config.update("jax_enable_x64", True)
+        loss, gap, x0 = build_problem(n, p)
+        x0 = x0.astype(dtype)
+
+        @jax.jit
+        def step(x):
+            g = jax.grad(lambda v: loss(v.astype(jnp.float32)).astype(jnp.float32))(x)
+            xm = x.astype(matmul_dtype)
+            gm = g.astype(matmul_dtype)
+            out = ref.pogo_update_ref(xm, gm, 0.25, 0.5)
+            return out.astype(dtype)
+
+        x = step(x0)
+        jax.block_until_ready(x)
+        x = x0
+        t0 = time.perf_counter()
+        for _ in range(iters):
+            x = step(x)
+        jax.block_until_ready(x)
+        dt = (time.perf_counter() - t0) / iters
+        dist = float(stiefel.manifold_distance(x.astype(jnp.float64 if name == "f64" else jnp.float32)))
+        results[name] = dict(dist=dist, step_s=dt)
+        emit(f"precision/{name}", dt * 1e6, f"dist={dist:.2e}")
+        if dtype == jnp.float64:
+            jax.config.update("jax_enable_x64", False)
+    return results
+
+
+if __name__ == "__main__":
+    run()

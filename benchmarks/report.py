@@ -1,0 +1,109 @@
+"""Assemble EXPERIMENTS.md tables from results/dryrun and results/roofline.
+
+    PYTHONPATH=src python -m benchmarks.report > /tmp/tables.md
+
+Emits the §Dry-run and §Roofline tables; EXPERIMENTS.md embeds them.
+"""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+HERE = os.path.dirname(__file__)
+DRYRUN = os.path.join(HERE, "..", "results", "dryrun")
+ROOFLINE = os.path.join(HERE, "..", "results", "roofline")
+
+ARCH_ORDER = [
+    "granite-20b", "starcoder2-15b", "smollm-360m", "internlm2-1.8b",
+    "recurrentgemma-2b", "falcon-mamba-7b", "granite-moe-1b-a400m",
+    "mixtral-8x22b", "internvl2-1b", "seamless-m4t-large-v2",
+]
+SHAPE_ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+
+def _load(path):
+    with open(path) as f:
+        return json.load(f)
+
+
+def dryrun_table(multi_pod: bool) -> str:
+    tag = "multipod" if multi_pod else "pod"
+    rows = [
+        "| arch | shape | status | mem/dev (GiB) | GFLOP/dev | coll. bytes/dev (MB) | "
+        "AG/AR/RS/A2A/CP | compile (s) |",
+        "|---|---|---|---|---|---|---|---|",
+    ]
+    for arch in ARCH_ORDER:
+        for shape in SHAPE_ORDER:
+            f = os.path.join(DRYRUN, f"{arch}__{shape}__{tag}.json")
+            if not os.path.exists(f):
+                continue
+            r = _load(f)
+            if r["status"] == "skipped":
+                rows.append(f"| {arch} | {shape} | SKIP(full-attn) | — | — | — | — | — |")
+                continue
+            if r["status"] != "ok":
+                rows.append(f"| {arch} | {shape} | ERROR | — | — | — | — | — |")
+                continue
+            m = r["memory"]
+            mem = (m["argument_bytes"] + m["temp_bytes"]) / 2**30
+            c = r["collectives"]
+            cb = sum(v["bytes"] for v in c.values()) / 1e6
+            counts = "/".join(
+                str(c[k]["count"])
+                for k in ("all-gather", "all-reduce", "reduce-scatter",
+                          "all-to-all", "collective-permute")
+            )
+            rows.append(
+                f"| {arch} | {shape} | ok | {mem:.2f} | "
+                f"{r['flops_per_device']/1e9:.1f} | {cb:.0f} | {counts} | "
+                f"{r['compile_s']:.0f} |"
+            )
+    return "\n".join(rows)
+
+
+def roofline_table() -> str:
+    rows = [
+        "| arch | shape | compute (ms) | memory (ms) | collective (ms) | dominant | "
+        "MODEL_FLOPS | useful ratio | bound note |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    for arch in ARCH_ORDER:
+        for shape in SHAPE_ORDER:
+            f = os.path.join(ROOFLINE, f"{arch}__{shape}.json")
+            if not os.path.exists(f):
+                continue
+            r = _load(f)
+            if r["status"] == "skipped":
+                rows.append(f"| {arch} | {shape} | — | — | — | SKIP | — | — | full-attention |")
+                continue
+            if r["status"] != "ok":
+                rows.append(f"| {arch} | {shape} | — | — | — | ERROR | — | — | {r.get('error','')[:40]} |")
+                continue
+            note = {
+                "compute": "MXU-bound",
+                "memory": "HBM-bound",
+                "collective": "ICI-bound",
+            }[r["dominant"]]
+            rows.append(
+                f"| {arch} | {shape} | {r['compute_s']*1e3:.1f} | "
+                f"{r['memory_s']*1e3:.1f} | {r['collective_s']*1e3:.1f} | "
+                f"{r['dominant']} | {r['model_flops']:.2e} | "
+                f"{r['useful_flop_ratio']:.2f} | {note} |"
+            )
+    return "\n".join(rows)
+
+
+def main():
+    print("## Dry-run: single-pod (16x16 = 256 chips)\n")
+    print(dryrun_table(False))
+    print("\n## Dry-run: multi-pod (2x16x16 = 512 chips)\n")
+    print(dryrun_table(True))
+    print("\n## Roofline (single-pod)\n")
+    print(roofline_table())
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,290 @@
+"""Roofline analysis from compiled dry-run artifacts (single-pod mesh).
+
+Methodology (see EXPERIMENTS.md §Roofline for the numbers):
+
+XLA's ``cost_analysis`` counts a while-loop body ONCE, so a scanned-layers
+model under-reports FLOPs by ~the layer count. We therefore lower each cell
+twice more in *analysis mode* — ``num_layers = 1x`` and ``2x`` the block
+pattern, every scan (layers, flash-attention blocks, CE chunks, MoE chunks)
+fully unrolled — and extrapolate:
+
+    per_repeat  = cost(2 units) - cost(1 unit)
+    total_est   = cost(1 unit) + (n_rep - 1) * per_repeat
+                  + per_repeat * len(tail) / len(unit)      # tail approx
+
+The same extrapolation applies to the collective-op inventory. The full
+(real-depth) compile from launch/dryrun.py remains the authority for
+memory-fit and for proving the mesh works.
+
+Hardware model (TPU v5e): 197 TFLOP/s bf16, 819 GB/s HBM, 50 GB/s/link ICI.
+Ring-collective link-traffic factors: all-gather/reduce-scatter (g-1)/g x
+full-tensor bytes, all-reduce 2(g-1)/g, all-to-all (g-1)/g, permute 1.
+(Parsed operand bytes are per-device shard bytes.)
+
+Run: PYTHONPATH=src python -m benchmarks.roofline [--arch A --shape S]
+(subprocessed by benchmarks/run.py so the 512 fake devices don't leak into
+other benches).
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import os
+import sys
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+ICI_BW = 50e9
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "results", "roofline")
+DRYRUN_DIR = os.path.join(os.path.dirname(__file__), "..", "results", "dryrun")
+
+
+def _analysis_cost(arch: str, shape_name: str, k_units: int, mesh):
+    """Lower+compile an analysis-mode variant with k_units repeats, fully
+    unrolled; return (flops/dev, bytes/dev, collective op list)."""
+    import jax
+
+    from repro.configs import get_config
+    from repro.launch import dryrun as dr
+    from repro.distributed import sharding
+
+    cfg = get_config(arch)
+    unit, n_rep, tail = cfg.layer_plan()
+    overrides = dict(
+        num_layers=k_units * len(unit),
+        scan_unroll=10_000,
+        inner_unroll=True,
+        flash_block_q=2048,
+        flash_block_k=2048,
+        remat="none",
+    )
+    if cfg.encoder_layers:
+        overrides["encoder_layers"] = k_units
+    cfg_k = get_config(arch, **overrides)
+
+    mode = cfg.resolved_parallelism()
+    dp = mesh.shape.get("data", 1) * mesh.shape.get("pod", 1)
+    if mode == "dp":
+        dp *= mesh.shape.get("model", 1)
+    fn, input_sds, params_spec_fn = dr.build_entry(cfg_k, shape_name, dp=dp)
+    # analysis mode: single macrobatch (microbatching is cost-linear)
+    from repro.train.train_step import TrainConfig, make_train_step
+
+    if shape_name == "train_4k":
+        tc = TrainConfig(microbatches=1)
+        step_fn, optimizer = make_train_step(cfg_k, tc)
+
+        def fn(params, opt_state, batch):  # noqa: F811
+            return step_fn(params, opt_state, batch)
+
+        import jax as _jax
+
+        from repro.models import transformer as tfm
+
+        def params_spec_fn():  # noqa: F811
+            params = _jax.eval_shape(lambda: tfm.init_params(_jax.random.PRNGKey(0), cfg_k))
+            return params, _jax.eval_shape(optimizer.init, params)
+
+    params_sds, opt_sds = params_spec_fn()
+    p_shard = sharding.param_shardings(params_sds, mesh, mode)
+    in_shard = sharding.input_specs_shardings(input_sds, mesh, cfg_k, mode)
+
+    def attach(tree, shardings):
+        return jax.tree.map(
+            lambda sd, sh: jax.ShapeDtypeStruct(sd.shape, sd.dtype, sharding=sh),
+            tree, shardings,
+        )
+
+    params_in = attach(params_sds, p_shard)
+    inputs_in = attach(input_sds, in_shard)
+    with mesh:
+        if opt_sds is not None:
+            o_specs = sharding.opt_state_specs(opt_sds, params_sds, mesh, mode)
+            o_shard = jax.tree.map(
+                lambda s: jax.sharding.NamedSharding(mesh, s), o_specs,
+                is_leaf=lambda x: isinstance(x, jax.sharding.PartitionSpec),
+            )
+            opt_in = attach(opt_sds, o_shard)
+            lowered = jax.jit(fn).lower(params_in, opt_in, inputs_in)
+        else:
+            lowered = jax.jit(fn).lower(params_in, inputs_in)
+    compiled = lowered.compile()
+    ca = compiled.cost_analysis()
+    if isinstance(ca, list):
+        ca = ca[0]
+    colls = dr.parse_collectives(compiled.as_text())
+    ops = [{"kind": k, **op} for k, v in colls.items() for op in v["ops"]]
+    return ca.get("flops", 0.0), ca.get("bytes accessed", 0.0), ops
+
+
+def collective_seconds(ops, bw: float = ICI_BW) -> float:
+    """Ring-model per-link seconds. ``bytes`` are the op's OUTPUT bytes
+    (what the HLO line carries): all-gather/all-reduce/all-to-all outputs
+    are full tensors; reduce-scatter's output is the shard (hence g-1 x)."""
+    total = 0.0
+    for op in ops:
+        g = max(op.get("group", 0), 1)
+        s = op["bytes"]
+        kind = op["kind"]
+        if g <= 1:
+            continue
+        if kind == "all-reduce":
+            link_bytes = 2 * s * (g - 1) / g
+        elif kind in ("all-gather", "all-to-all"):
+            link_bytes = s * (g - 1) / g
+        elif kind == "reduce-scatter":
+            link_bytes = s * (g - 1)
+        else:  # collective-permute
+            link_bytes = s
+        total += link_bytes / bw
+    return total
+
+
+def _extrapolate_ops(ops1, ops2, factor: float):
+    """Estimated total collective inventory: ops1 + factor x (ops2 - ops1).
+    Per-(kind, group) bucket since op identity isn't stable across compiles."""
+    import collections
+
+    def bucket(ops):
+        b = collections.defaultdict(float)
+        for op in ops:
+            b[(op["kind"], op["group"])] += op["bytes"]
+        return b
+
+    b1, b2 = bucket(ops1), bucket(ops2)
+    out = []
+    for key in set(b1) | set(b2):
+        base = b1.get(key, 0.0)
+        diff = b2.get(key, 0.0) - base
+        est = base + factor * diff
+        if est > 0:
+            out.append({"kind": key[0], "group": key[1], "bytes": est})
+    return out
+
+
+def model_flops(cfg, shape_name: str) -> float:
+    from repro.configs.base import SHAPES
+
+    spec = SHAPES[shape_name]
+    n_active = cfg.active_params()
+    if spec["kind"] == "train":
+        tokens = spec["global_batch"] * spec["seq_len"]
+        return 6.0 * n_active * tokens
+    if spec["kind"] == "prefill":
+        tokens = spec["global_batch"] * spec["seq_len"]
+        return 2.0 * n_active * tokens
+    # decode: one new token per sequence
+    return 2.0 * n_active * spec["global_batch"]
+
+
+def analyze_cell(arch: str, shape_name: str, force: bool = False):
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    out_file = os.path.join(RESULTS_DIR, f"{arch}__{shape_name}.json")
+    if os.path.exists(out_file) and not force:
+        with open(out_file) as f:
+            return json.load(f)
+
+    from repro.configs import cell_is_runnable, get_config
+    from repro.distributed import shard_hints
+    from repro.launch.mesh import make_production_mesh
+
+    cfg = get_config(arch)
+    ok, reason = cell_is_runnable(cfg, shape_name)
+    if not ok:
+        result = {"arch": arch, "shape": shape_name, "status": "skipped", "reason": reason}
+        with open(out_file, "w") as f:
+            json.dump(result, f, indent=2)
+        return result
+
+    mesh = make_production_mesh(multi_pod=False)
+    shard_hints.set_mesh(mesh, cfg.resolved_parallelism())
+    try:
+        f1, b1, ops1 = _analysis_cost(arch, shape_name, 1, mesh)
+        f2, b2, ops2 = _analysis_cost(arch, shape_name, 2, mesh)
+        unit, n_rep, tail = cfg.layer_plan()
+        factor = (n_rep - 1) + len(tail) / len(unit)
+        # per-repeat deltas are non-negative by construction; tiny negative
+        # deltas (fusion differences between the k=1/k=2 compiles) are
+        # clamped so extrapolation cannot go negative
+        flops = f1 + factor * max(f2 - f1, 0.0)
+        byts = b1 + factor * max(b2 - b1, 0.0)
+        ops_est = _extrapolate_ops(ops1, ops2, factor)
+
+        compute_s = flops / PEAK_FLOPS
+        memory_s = byts / HBM_BW
+        coll_s = collective_seconds(ops_est)
+        terms = {"compute_s": compute_s, "memory_s": memory_s, "collective_s": coll_s}
+        dominant = max(terms, key=terms.get)
+        mf = model_flops(cfg, shape_name)
+        hlo_total = flops * mesh.size
+        result = {
+            "arch": arch,
+            "shape": shape_name,
+            "status": "ok",
+            "flops_per_device": flops,
+            "bytes_per_device": byts,
+            "collective_bytes_per_device": sum(o["bytes"] for o in ops_est),
+            "compute_s": compute_s,
+            "memory_s": memory_s,
+            "collective_s": coll_s,
+            "dominant": dominant.replace("_s", ""),
+            "model_flops": mf,
+            "useful_flop_ratio": mf / hlo_total if hlo_total else 0.0,
+            "roofline_fraction": terms[dominant] and compute_s / terms[dominant],
+            "n_devices": mesh.size,
+            "two_point": {"f1": f1, "f2": f2, "b1": b1, "b2": b2, "factor": factor},
+            "collective_ops": ops_est,
+        }
+    except Exception as e:  # noqa: BLE001
+        import traceback
+
+        result = {
+            "arch": arch, "shape": shape_name, "status": "error",
+            "error": f"{type(e).__name__}: {e}",
+            "traceback": traceback.format_exc()[-3000:],
+        }
+    finally:
+        shard_hints.set_mesh(None)
+    with open(out_file, "w") as f:
+        json.dump(result, f, indent=2)
+    return result
+
+
+def main():
+    # must run before jax init (the dryrun import sets the device count)
+    os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+
+    from repro.configs import ARCHS
+    from repro.configs.base import SHAPES
+
+    archs = [args.arch] if args.arch else list(ARCHS)
+    shapes = [args.shape] if args.shape else list(SHAPES)
+    failures = 0
+    for arch in archs:
+        for shape in shapes:
+            r = analyze_cell(arch, shape, force=args.force)
+            if r["status"] == "ok":
+                print(
+                    f"roofline/{arch}/{shape},0.0,"
+                    f"compute={r['compute_s']*1e3:.2f}ms;memory={r['memory_s']*1e3:.2f}ms;"
+                    f"collective={r['collective_s']*1e3:.2f}ms;dominant={r['dominant']};"
+                    f"useful={r['useful_flop_ratio']:.2f}", flush=True,
+                )
+            elif r["status"] == "skipped":
+                print(f"roofline/{arch}/{shape},0.0,skipped", flush=True)
+            else:
+                failures += 1
+                print(f"roofline/{arch}/{shape},0.0,ERROR:{r['error'][:120]}", flush=True)
+    sys.exit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,69 @@
+"""Benchmark orchestrator: one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows. The roofline suite runs in a
+subprocess (it needs 512 fake host devices, which must not leak into the
+wall-clock benches). ``--full`` restores paper-scale problem sizes;
+``--skip-roofline`` for quick local runs.
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import subprocess
+import sys
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true", help="paper-scale sizes")
+    ap.add_argument("--skip-roofline", action="store_true")
+    ap.add_argument("--only", default=None, help="comma list of suite names")
+    args = ap.parse_args(argv)
+
+    from . import (
+        cnn_kernels,
+        kernel_bench,
+        lambda_ablation,
+        ovit,
+        pca,
+        precision_ablation,
+        procrustes,
+        unitary_pc,
+    )
+
+    suites = {
+        "pca": lambda: pca.run(full=args.full),                       # Fig. 4 L
+        "procrustes": lambda: procrustes.run(full=args.full),         # Fig. 4 R
+        "ovit": lambda: ovit.run(full=args.full),                     # Fig. 5
+        "cnn_kernels": lambda: cnn_kernels.run(full=args.full),       # Figs. 1/6/7
+        "unitary_pc": lambda: unitary_pc.run(full=args.full),         # Fig. 8
+        "precision": lambda: precision_ablation.run(full=args.full),  # Fig. C.1
+        "lambda": lambda: lambda_ablation.run(full=args.full),        # Figs. C.2/3
+        "kernels": lambda: kernel_bench.run(full=args.full),          # Pallas
+    }
+    only = set(args.only.split(",")) if args.only else None
+
+    print("name,us_per_call,derived", flush=True)
+    for name, fn in suites.items():
+        if only and name not in only:
+            continue
+        fn()
+
+    if not args.skip_roofline and (only is None or "roofline" in only):
+        env = dict(os.environ)
+        env.pop("XLA_FLAGS", None)
+        src = os.path.join(os.path.dirname(__file__), "..", "src")
+        env["PYTHONPATH"] = os.path.abspath(src) + os.pathsep + env.get("PYTHONPATH", "")
+        res = subprocess.run(
+            [sys.executable, "-m", "benchmarks.roofline"],
+            env=env, cwd=os.path.join(os.path.dirname(__file__), ".."),
+            text=True,
+        )
+        if res.returncode:
+            print("roofline,0.0,SUBPROCESS_FAILED")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

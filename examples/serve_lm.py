@@ -1,0 +1,47 @@
+"""Serving example: batched greedy decoding with continuous batching.
+
+    PYTHONPATH=src python examples/serve_lm.py
+
+Loads (or trains briefly) a smoke-scale LM, then serves a stream of
+requests through the slot-based engine — more requests than slots, so
+admission/eviction is exercised; prints tokens/s.
+"""
+
+import sys
+import time
+
+sys.path.insert(0, "src")
+
+import jax
+import numpy as np
+
+from repro.configs import get_config
+from repro.models import ortho, transformer as tfm
+from repro.serve.engine import Request, ServeEngine
+
+
+def main():
+    cfg = get_config("smollm-360m", smoke=True)
+    params = ortho.project_init(tfm.init_params(jax.random.PRNGKey(0), cfg), cfg)
+
+    engine = ServeEngine(params, cfg, n_slots=4, cache_len=128)
+    rng = np.random.default_rng(0)
+    n_requests = 10
+    for uid in range(n_requests):
+        plen = int(rng.integers(4, 16))
+        prompt = rng.integers(0, cfg.vocab_size, size=(plen,)).astype(np.int32)
+        engine.submit(Request(uid=uid, prompt=prompt, max_new_tokens=12))
+
+    t0 = time.time()
+    finished = engine.run()
+    dt = time.time() - t0
+    total = sum(len(r.out_tokens) for r in finished)
+    print(f"served {len(finished)} requests ({total} tokens) in {dt:.2f}s "
+          f"-> {total/dt:.1f} tok/s on CPU")
+    for r in finished[:5]:
+        print(f"  req {r.uid}: prompt_len={len(r.prompt)} -> {r.out_tokens}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

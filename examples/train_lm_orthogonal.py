@@ -1,0 +1,93 @@
+"""End-to-end driver: train a ~100M-param LM with POGO-constrained
+attention for a few hundred steps on the synthetic pipeline, exercising the
+full production stack — config, data, partitioned optimizer (POGO +
+AdamW), fault-tolerant loop with mid-run checkpoint + resume.
+
+    PYTHONPATH=src python examples/train_lm_orthogonal.py [--steps 300]
+
+The model is a 12L/768d llama-style decoder (~103M params without
+embeddings sharing smollm's family); attention q/k per-head projections
+live on St(64, 768) and are updated by POGO(VAdam). Metrics show loss
+decreasing while max ||XX^T - I|| stays at fp32 feasibility (~1e-6).
+"""
+
+import argparse
+import logging
+import sys
+
+sys.path.insert(0, "src")
+
+import jax
+
+from repro.configs.base import ModelConfig
+from repro.data.pipeline import DataConfig, DataIterator
+from repro.models import ortho, transformer as tfm
+from repro.train.loop import LoopConfig, train
+from repro.train.train_step import TrainConfig, make_train_step
+
+
+def model_100m():
+    return ModelConfig(
+        name="lm-100m", family="dense", num_layers=12, d_model=768,
+        num_heads=12, num_kv_heads=4, d_ff=2048, vocab_size=8192,
+        loss_chunk=256, remat="none", ortho_families=("attn_qk",),
+    )
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq-len", type=int, default=256)
+    ap.add_argument("--checkpoint-dir", default="/tmp/repro_lm100m")
+    ap.add_argument("--interrupt-at", type=int, default=0,
+                    help="simulate preemption at this step (then rerun to resume)")
+    args = ap.parse_args(argv)
+    logging.basicConfig(level=logging.INFO, format="%(levelname)s: %(message)s")
+
+    cfg = model_100m()
+    key = jax.random.PRNGKey(0)
+    params = ortho.project_init(tfm.init_params(key, cfg), cfg)
+    n_params = sum(x.size for x in jax.tree.leaves(params))
+    n_ortho = len(ortho.orthogonal_leaf_info(params, cfg))
+    print(f"model: {n_params/1e6:.1f}M params, {n_ortho} orthogonal leaves "
+          f"(stacked St(64, 768) per-head q/k projections)")
+
+    tc = TrainConfig(
+        learning_rate=3e-3, pogo_learning_rate=0.4, warmup_steps=20,
+        decay_steps=args.steps, microbatches=1,
+    )
+    step_fn, optimizer = make_train_step(cfg, tc)
+    opt_state = optimizer.init(params)
+    data = DataIterator(DataConfig(
+        vocab_size=1024,  # subset of the model vocab: denser transitions learn faster
+        seq_len=args.seq_len,
+        global_batch=args.batch, seed=0,
+    ))
+
+    jit_step = jax.jit(step_fn, donate_argnums=(0, 1))
+    if args.interrupt_at:
+        real_step = jit_step
+
+        def jit_step(p, o, b, _n=[0]):  # noqa: B006 - deliberate counter
+            _n[0] += 1
+            if _n[0] == args.interrupt_at:
+                raise RuntimeError("simulated node failure")
+            return real_step(p, o, b)
+
+    lc = LoopConfig(
+        total_steps=args.steps, save_every=100, log_every=20,
+        checkpoint_dir=args.checkpoint_dir, async_save=True,
+    )
+    params, opt_state, step, history = train(
+        jit_step, params, opt_state, data, lc
+    )
+    print("\nstep  loss     ortho_dist   step_time")
+    for s, m in history:
+        print(f"{s:5d} {m['loss']:.4f}  {m['ortho_distance']:.2e}   {m['step_time_s']*1e3:.0f}ms")
+    print(f"\nfinished at step {step}; checkpoints in {args.checkpoint_dir}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,3 @@
+"""repro — POGO (Javaloy & Vergari 2026) as a pod-scale JAX framework."""
+
+__version__ = "0.1.0"

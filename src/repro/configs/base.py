@@ -1,0 +1,227 @@
+"""ModelConfig: a single dataclass describing every supported architecture,
+plus the shape registry (train_4k / prefill_32k / decode_32k / long_500k)
+and ``input_specs`` builders.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str  # dense | hybrid | ssm | moe | vlm | audio
+    num_layers: int
+    d_model: int
+    num_heads: int
+    num_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: int = 0  # default d_model // num_heads
+
+    # attention
+    attention_window: Optional[int] = None  # sliding window (SWA archs)
+    rope_theta: float = 10000.0
+
+    # layer pattern: repeating unit of block kinds, cycled over num_layers
+    block_pattern: tuple = ("attn",)  # ("rglru","rglru","attn") for griffin
+
+    # moe
+    num_experts: int = 0
+    num_experts_per_token: int = 0
+    moe_d_ff: int = 0
+
+    # ssm (mamba) / rglru
+    ssm_state_dim: int = 0
+    ssm_expand: int = 2
+    ssm_conv_width: int = 4
+    rnn_width: int = 0  # rglru width; 0 => d_model
+
+    # enc-dec
+    encoder_layers: int = 0  # > 0 => encoder-decoder model
+
+    # modality frontends (stubs: input_specs provides precomputed embeddings)
+    frontend: Optional[str] = None  # "vision" | "audio"
+    num_frontend_tokens: int = 0
+
+    # misc
+    norm_eps: float = 1e-6
+    tie_embeddings: bool = False
+    mlp_activation: str = "swiglu"
+    vocab_pad_multiple: int = 256
+
+    # the paper's technique: which weight families carry St(p, n)
+    ortho_families: tuple = ("attn_qk",)  # "attn_qk" | "ssm_proj" | "expert_down" | ()
+
+    # dtype / loss policy
+    param_dtype: str = "float32"
+    compute_dtype: str = "bfloat16"
+    loss_chunk: int = 512
+
+    # remat policy for scan-over-layers: "none" | "full" | "dots"
+    remat: str = "full"
+
+    # parallelism: "auto" resolves to "dp" (pure data/FSDP over every mesh
+    # axis — right for small models where TP would compute redundantly or
+    # psum more than it saves) or "2d" (batch over data, tensor over model).
+    parallelism: str = "auto"
+
+    # flash-attention block sizes (peak live scores = block_q x block_k)
+    flash_block_q: int = 512
+    flash_block_k: int = 512
+    # MoE sequence chunking: dispatch buffers scale with the chunk, not S
+    moe_seq_chunk: int = 4096
+    # expert capacity = S*k*cf/E; tokens over capacity are dropped (their
+    # gate mass passes through). Decode (S=1) never drops, so decode ==
+    # prefill only in the no-drop regime (cf high or balanced routing).
+    moe_capacity_factor: float = 1.25
+
+    # analysis mode (dry-run cost accounting): XLA's cost_analysis counts a
+    # while body ONCE, so roofline lowering unrolls the scans.
+    scan_unroll: int = 1  # layer-scan unroll factor (>= n_repeats => full)
+    inner_unroll: bool = False  # unroll flash/CE inner scans
+
+    def __post_init__(self):
+        if self.head_dim == 0 and self.num_heads > 0:
+            object.__setattr__(self, "head_dim", self.d_model // self.num_heads)
+        if self.rnn_width == 0:
+            object.__setattr__(self, "rnn_width", self.d_model)
+
+    @property
+    def padded_vocab(self) -> int:
+        m = self.vocab_pad_multiple
+        return (self.vocab_size + m - 1) // m * m
+
+    @property
+    def dtype(self):
+        return jnp.dtype(self.compute_dtype)
+
+    def layer_plan(self):
+        """(unit, n_repeats, tail): scan the unit n_repeats times then
+        unroll the tail — handles patterns that don't divide num_layers
+        (e.g. recurrentgemma's 26 layers under a 3-layer unit)."""
+        unit = tuple(self.block_pattern)
+        n_rep = self.num_layers // len(unit)
+        tail = tuple(unit[: self.num_layers % len(unit)])
+        return unit, n_rep, tail
+
+    def resolved_parallelism(self) -> str:
+        if self.parallelism != "auto":
+            return self.parallelism
+        return "dp" if self.total_params() < 2e9 else "2d"
+
+    def is_subquadratic(self) -> bool:
+        """True when long-context decode (long_500k) is in scope."""
+        kinds = set(self.block_pattern)
+        if kinds <= {"rglru", "mamba"}:
+            return True
+        if "mamba" in kinds or "rglru" in kinds:
+            return True  # hybrid: attention layers are windowed
+        return self.attention_window is not None
+
+    def active_params(self) -> int:
+        """Parameter count (MoE: activated params only) for MODEL_FLOPS."""
+        return _param_count(self, active_only=True)
+
+    def total_params(self) -> int:
+        return _param_count(self, active_only=False)
+
+
+def _param_count(cfg: ModelConfig, active_only: bool) -> int:
+    d, hd = cfg.d_model, cfg.head_dim
+    unit, n_rep, tail = cfg.layer_plan()
+    all_blocks = list(unit) * n_rep + list(tail)
+    total = cfg.padded_vocab * d  # embedding
+    if not cfg.tie_embeddings:
+        total += cfg.padded_vocab * d
+    per_block = {}
+    per_block["attn"] = (
+        cfg.num_heads * hd * d * 2 + cfg.num_kv_heads * hd * d * 2 + _mlp_params(cfg)
+    )
+    per_block["local_attn"] = per_block["attn"]
+    w = cfg.rnn_width
+    per_block["rglru"] = 2 * d * w + cfg.ssm_conv_width * w + 2 * w * w + w + w * d + _mlp_params(cfg)
+    di = cfg.ssm_expand * d
+    n = max(cfg.ssm_state_dim, 1)
+    dt_rank = max(1, d // 16)
+    per_block["mamba"] = (
+        d * 2 * di + cfg.ssm_conv_width * di + di * dt_rank + dt_rank * di
+        + 2 * di * n + di * n + di + di * d
+    )
+    if cfg.num_experts:
+        e = cfg.num_experts_per_token if active_only else cfg.num_experts
+        per_block["moe_attn"] = (
+            cfg.num_heads * hd * d * 2
+            + cfg.num_kv_heads * hd * d * 2
+            + d * cfg.num_experts  # router
+            + e * 3 * d * cfg.moe_d_ff
+        )
+    for b in all_blocks:
+        total += per_block[b]
+    if cfg.encoder_layers:
+        # encoder blocks (bidir attn) + decoder cross-attn already counted via
+        # block kinds; here add encoder stack + cross-attn per decoder layer
+        enc_block = per_block["attn"]
+        total += cfg.encoder_layers * enc_block
+        total += len(all_blocks) * (cfg.num_heads * hd * d * 2 + cfg.num_kv_heads * hd * d * 2)
+    # per-layer norms (negligible) skipped
+    return int(total)
+
+
+def _mlp_params(cfg: ModelConfig) -> int:
+    if cfg.mlp_activation == "swiglu":
+        return 3 * cfg.d_model * cfg.d_ff
+    return 2 * cfg.d_model * cfg.d_ff
+
+
+# --------------------------------------------------------------------- shapes
+
+SHAPES = {
+    "train_4k": dict(kind="train", seq_len=4096, global_batch=256),
+    "prefill_32k": dict(kind="prefill", seq_len=32768, global_batch=32),
+    "decode_32k": dict(kind="decode", seq_len=32768, global_batch=128),
+    "long_500k": dict(kind="decode", seq_len=524288, global_batch=1),
+}
+
+
+def input_specs(cfg: ModelConfig, shape_name: str):
+    """ShapeDtypeStruct stand-ins for every model input of the entry point.
+
+    train  -> {tokens, labels} (+ frontend embeddings stub)
+    prefill-> {tokens} (+ frontend)
+    decode -> {token, cache}
+    """
+    spec = SHAPES[shape_name]
+    b, s = spec["global_batch"], spec["seq_len"]
+    i32 = jnp.int32
+    out = {}
+    if spec["kind"] == "train":
+        out["tokens"] = jax.ShapeDtypeStruct((b, s), i32)
+        out["labels"] = jax.ShapeDtypeStruct((b, s), i32)
+    elif spec["kind"] == "prefill":
+        out["tokens"] = jax.ShapeDtypeStruct((b, s), i32)
+    else:  # decode
+        out["tokens"] = jax.ShapeDtypeStruct((b, 1), i32)
+        from ..models import transformer as tfm
+
+        cache = tfm.cache_specs(cfg, batch=b, cache_len=s)
+        out["cache"] = cache
+    if cfg.frontend is not None and spec["kind"] != "decode":
+        out["frontend_embeds"] = jax.ShapeDtypeStruct(
+            (b, cfg.num_frontend_tokens, cfg.d_model), cfg.dtype
+        )
+    if cfg.encoder_layers and spec["kind"] != "decode":
+        # enc-dec: encoder consumes the frontend/source tokens; decoder the targets
+        out.setdefault(
+            "encoder_tokens", jax.ShapeDtypeStruct((b, min(s, 4096)), i32)
+        )
+    if cfg.encoder_layers and spec["kind"] == "decode":
+        out["encoder_memory"] = jax.ShapeDtypeStruct(
+            (b, 4096, cfg.d_model), cfg.dtype
+        )
+    return out

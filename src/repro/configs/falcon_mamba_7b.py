@@ -1,0 +1,36 @@
+"""falcon-mamba-7b [ssm]: 64L d_model=4096 (attention-free) vocab=65024,
+ssm_state=16 — mamba1 arch [arXiv:2410.05355; unverified].
+
+The paper's attention-targeted ortho recipe (attn_qk) is inapplicable;
+POGO itself is not: the SSM in/out projections are constrained instead
+(ortho_families="ssm_proj"; beyond-paper extension, DESIGN.md
+§Arch-applicability)."""
+
+from .base import ModelConfig
+
+
+def config(**overrides) -> ModelConfig:
+    kw = dict(
+        name="falcon-mamba-7b",
+        family="ssm",
+        num_layers=64,
+        d_model=4096,
+        num_heads=0,
+        num_kv_heads=0,
+        d_ff=0,
+        vocab_size=65024,
+        block_pattern=("mamba",),
+        ssm_state_dim=16,
+        ssm_expand=2,
+        ssm_conv_width=4,
+        ortho_families=("ssm_proj",),
+    )
+    kw.update(overrides)
+    return ModelConfig(**kw)
+
+
+def smoke_config() -> ModelConfig:
+    return config(
+        name="falcon-mamba-7b-smoke", num_layers=4, d_model=128,
+        vocab_size=512, ssm_state_dim=4, loss_chunk=16, remat="none",
+    )

@@ -1,0 +1,31 @@
+"""granite-20b [dense]: 52L d_model=6144 48H (GQA kv=1 = MQA) d_ff=24576
+vocab=49152 — llama-arch, code [arXiv:2405.04324; hf]."""
+
+from .base import ModelConfig
+
+
+def config(**overrides) -> ModelConfig:
+    kw = dict(
+        name="granite-20b",
+        family="dense",
+        num_layers=52,
+        d_model=6144,
+        num_heads=48,
+        num_kv_heads=1,
+        d_ff=24576,
+        vocab_size=49152,
+        block_pattern=("attn",),
+        # GPT-BigCode lineage: plain (up, down) GELU MLP — matches the
+        # published ~20B total (SwiGLU would give ~28B).
+        mlp_activation="gelu",
+        ortho_families=("attn_qk",),
+    )
+    kw.update(overrides)
+    return ModelConfig(**kw)
+
+
+def smoke_config() -> ModelConfig:
+    return config(
+        name="granite-20b-smoke", num_layers=4, d_model=128, num_heads=4,
+        num_kv_heads=1, d_ff=256, vocab_size=512, loss_chunk=16, remat="none",
+    )

@@ -1,0 +1,39 @@
+"""granite-moe-1b-a400m [moe]: 24L d_model=1024 16H (GQA kv=8) d_ff=512,
+MoE 32 experts top-8, vocab=49155 (padded to 49408 for the 16-way mesh)
+[hf:ibm-granite/granite-3.0-1b-a400m-base; hf].
+
+Expert down-projections (512 x 1024, wide) are additionally constrained —
+the paper's technique on expert matrices (ortho_families includes
+"expert_down")."""
+
+from .base import ModelConfig
+
+
+def config(**overrides) -> ModelConfig:
+    kw = dict(
+        name="granite-moe-1b-a400m",
+        family="moe",
+        num_layers=24,
+        d_model=1024,
+        num_heads=16,
+        num_kv_heads=8,
+        d_ff=512,
+        moe_d_ff=512,
+        num_experts=32,
+        num_experts_per_token=8,
+        vocab_size=49155,
+        block_pattern=("moe_attn",),
+        mlp_activation="swiglu",
+        tie_embeddings=True,
+        ortho_families=("attn_qk", "expert_down"),
+    )
+    kw.update(overrides)
+    return ModelConfig(**kw)
+
+
+def smoke_config() -> ModelConfig:
+    return config(
+        name="granite-moe-smoke", num_layers=4, d_model=128, num_heads=4,
+        num_kv_heads=2, d_ff=64, moe_d_ff=64, num_experts=4,
+        num_experts_per_token=2, vocab_size=515, loss_chunk=16, remat="none",
+    )

@@ -1,0 +1,30 @@
+"""internlm2-1.8b [dense]: 24L d_model=2048 16H (GQA kv=8) d_ff=8192
+vocab=92544 — GQA [arXiv:2403.17297; hf]."""
+
+from .base import ModelConfig
+
+
+def config(**overrides) -> ModelConfig:
+    kw = dict(
+        name="internlm2-1.8b",
+        family="dense",
+        num_layers=24,
+        d_model=2048,
+        num_heads=16,
+        num_kv_heads=8,
+        d_ff=8192,
+        vocab_size=92544,
+        block_pattern=("attn",),
+        mlp_activation="swiglu",
+        rope_theta=1e6,
+        ortho_families=("attn_qk",),
+    )
+    kw.update(overrides)
+    return ModelConfig(**kw)
+
+
+def smoke_config() -> ModelConfig:
+    return config(
+        name="internlm2-1.8b-smoke", num_layers=4, d_model=128, num_heads=4,
+        num_kv_heads=2, d_ff=256, vocab_size=512, loss_chunk=16, remat="none",
+    )

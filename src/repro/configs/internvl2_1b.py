@@ -1,0 +1,37 @@
+"""internvl2-1b [vlm]: 24L d_model=896 14H (GQA kv=2) d_ff=4864
+vocab=151655 (padded to 151808) — InternViT + InternLM2/Qwen2 backbone
+[arXiv:2404.16821; hf].
+
+The ViT frontend is a STUB per the assignment: input_specs() provides 256
+precomputed patch embeddings per image, prepended to the token sequence."""
+
+from .base import ModelConfig
+
+
+def config(**overrides) -> ModelConfig:
+    kw = dict(
+        name="internvl2-1b",
+        family="vlm",
+        num_layers=24,
+        d_model=896,
+        num_heads=14,
+        num_kv_heads=2,
+        d_ff=4864,
+        vocab_size=151655,
+        block_pattern=("attn",),
+        mlp_activation="swiglu",
+        frontend="vision",
+        num_frontend_tokens=256,
+        tie_embeddings=True,
+        ortho_families=("attn_qk",),
+    )
+    kw.update(overrides)
+    return ModelConfig(**kw)
+
+
+def smoke_config() -> ModelConfig:
+    return config(
+        name="internvl2-1b-smoke", num_layers=4, d_model=112, num_heads=2,
+        num_kv_heads=1, d_ff=224, vocab_size=512, num_frontend_tokens=8,
+        loss_chunk=16, remat="none",
+    )

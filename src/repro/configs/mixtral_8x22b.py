@@ -1,0 +1,39 @@
+"""mixtral-8x22b [moe]: 56L d_model=6144 48H (GQA kv=8) d_ff=16384,
+MoE 8 experts top-2, SWA 4096, vocab=32768 [arXiv:2401.04088; hf].
+
+~141B total / ~39B active params. Expert d_ff (16384) > d_model so expert
+matrices are not wide; only attn q/k carry the constraint (DESIGN.md
+§Arch-applicability). SWA bounds the long_500k decode cache."""
+
+from .base import ModelConfig
+
+
+def config(**overrides) -> ModelConfig:
+    kw = dict(
+        name="mixtral-8x22b",
+        family="moe",
+        num_layers=56,
+        d_model=6144,
+        num_heads=48,
+        num_kv_heads=8,
+        d_ff=16384,
+        moe_d_ff=16384,
+        num_experts=8,
+        num_experts_per_token=2,
+        vocab_size=32768,
+        attention_window=4096,
+        block_pattern=("moe_attn",),
+        mlp_activation="swiglu",
+        ortho_families=("attn_qk",),
+    )
+    kw.update(overrides)
+    return ModelConfig(**kw)
+
+
+def smoke_config() -> ModelConfig:
+    return config(
+        name="mixtral-8x22b-smoke", num_layers=4, d_model=128, num_heads=4,
+        num_kv_heads=2, d_ff=256, moe_d_ff=256, num_experts=4,
+        num_experts_per_token=2, vocab_size=512, attention_window=16,
+        loss_chunk=16, remat="none",
+    )

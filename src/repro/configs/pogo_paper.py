@@ -1,0 +1,10 @@
+"""The paper's own experimental configs (Sec. 5), for the reproduction
+benchmarks: O-ViT (18 matrices 1024x1024), CNN orthogonal filters/kernels,
+PCA/Procrustes problem sizes, and the squared-unitary-PC complex matrices."""
+
+OVIT = dict(n_matrices=18, p=1024, n=1024)
+PCA = dict(n=2000, p=1500, rsdm_dim=700)
+PROCRUSTES = dict(n=2000, p=2000, rsdm_dim=900)
+CNN_FILTERS = [(64, 216), (256, 2304), (256, 2304), (256, 2304), (64, 576), (128, 1152)]
+CNN_KERNELS = dict(n_matrices=218624, p=3, n=3)
+UNITARY_PC = dict(n_matrices=1048, p=10, n_range=(256, 10000))

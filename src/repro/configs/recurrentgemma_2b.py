@@ -1,0 +1,36 @@
+"""recurrentgemma-2b [hybrid]: 26L d_model=2560 10H (GQA kv=1) d_ff=7680
+vocab=256000 — RG-LRU + local attn, pattern (rglru, rglru, local_attn)
+[arXiv:2402.19427; hf]. 26 layers under a 3-layer unit => 8 scanned repeats
++ 2-layer tail (config.layer_plan()). Local attention window 2048."""
+
+from .base import ModelConfig
+
+
+def config(**overrides) -> ModelConfig:
+    kw = dict(
+        name="recurrentgemma-2b",
+        family="hybrid",
+        num_layers=26,
+        d_model=2560,
+        num_heads=10,
+        num_kv_heads=1,
+        d_ff=7680,
+        vocab_size=256000,
+        attention_window=2048,
+        block_pattern=("rglru", "rglru", "local_attn"),
+        rnn_width=2560,
+        ssm_conv_width=4,
+        mlp_activation="gelu",
+        tie_embeddings=True,
+        ortho_families=("attn_qk",),
+    )
+    kw.update(overrides)
+    return ModelConfig(**kw)
+
+
+def smoke_config() -> ModelConfig:
+    return config(
+        name="recurrentgemma-2b-smoke", num_layers=5, d_model=128, num_heads=4,
+        num_kv_heads=1, d_ff=256, vocab_size=512, attention_window=16,
+        rnn_width=128, loss_chunk=16, remat="none",
+    )

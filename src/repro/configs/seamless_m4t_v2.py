@@ -1,0 +1,39 @@
+"""seamless-m4t-large-v2 [audio]: enc-dec, 24 encoder + 24 decoder layers,
+d_model=1024 16H (GQA kv=16 = MHA) d_ff=8192 vocab=256206 (padded 256256)
+[arXiv:2308.11596; hf].
+
+The speech frontend is a STUB per the assignment: input_specs() provides
+precomputed frame embeddings consumed by the text/unit encoder; the decoder
+cross-attends to encoder memory. Decode shapes run the decoder with a fixed
+4096-frame encoder memory."""
+
+from .base import ModelConfig
+
+
+def config(**overrides) -> ModelConfig:
+    kw = dict(
+        name="seamless-m4t-large-v2",
+        family="audio",
+        num_layers=24,
+        encoder_layers=24,
+        d_model=1024,
+        num_heads=16,
+        num_kv_heads=16,
+        d_ff=8192,
+        vocab_size=256206,
+        block_pattern=("attn",),
+        mlp_activation="gelu",
+        frontend="audio",
+        num_frontend_tokens=4096,
+        ortho_families=("attn_qk",),
+    )
+    kw.update(overrides)
+    return ModelConfig(**kw)
+
+
+def smoke_config() -> ModelConfig:
+    return config(
+        name="seamless-m4t-smoke", num_layers=2, encoder_layers=2, d_model=128,
+        num_heads=4, num_kv_heads=4, d_ff=256, vocab_size=512,
+        num_frontend_tokens=16, loss_chunk=16, remat="none",
+    )

@@ -1,0 +1,35 @@
+"""starcoder2-15b [dense]: 40L d_model=6144 48H (GQA kv=4) d_ff=24576
+vocab=49152 — GQA, RoPE, sliding-window 4096 [arXiv:2402.19173; hf].
+
+The 4096-token sliding window bounds the decode KV cache, which is what
+makes the long_500k cell runnable for this arch (DESIGN.md §long_500k)."""
+
+from .base import ModelConfig
+
+
+def config(**overrides) -> ModelConfig:
+    kw = dict(
+        name="starcoder2-15b",
+        family="dense",
+        num_layers=40,
+        d_model=6144,
+        num_heads=48,
+        num_kv_heads=4,
+        d_ff=24576,
+        vocab_size=49152,
+        attention_window=4096,
+        block_pattern=("attn",),
+        mlp_activation="gelu",
+        rope_theta=1e5,
+        ortho_families=("attn_qk",),
+    )
+    kw.update(overrides)
+    return ModelConfig(**kw)
+
+
+def smoke_config() -> ModelConfig:
+    return config(
+        name="starcoder2-15b-smoke", num_layers=4, d_model=128, num_heads=4,
+        num_kv_heads=2, d_ff=256, vocab_size=512, attention_window=16,
+        loss_chunk=16, remat="none",
+    )

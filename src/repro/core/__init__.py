@@ -1,0 +1,31 @@
+"""Core: the paper's contribution — POGO and the orthoptimizer family.
+
+Submodules are exported as modules (``core.pogo.pogo`` is the constructor);
+``ORTHOPTIMIZERS`` maps names to constructors for config-driven selection.
+"""
+
+from . import landing, pogo, quartic, rgd, rsdm, slpg, stiefel
+from .landing import landing_pc
+from .pogo import PogoState
+
+ORTHOPTIMIZERS = {
+    "pogo": pogo.pogo,
+    "landing": landing.landing,
+    "landing_pc": landing.landing_pc,
+    "rgd": rgd.rgd,
+    "slpg": slpg.slpg,
+    "rsdm": rsdm.rsdm,
+}
+
+__all__ = [
+    "stiefel",
+    "quartic",
+    "pogo",
+    "PogoState",
+    "landing",
+    "landing_pc",
+    "rgd",
+    "slpg",
+    "rsdm",
+    "ORTHOPTIMIZERS",
+]

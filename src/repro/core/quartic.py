@@ -1,0 +1,212 @@
+"""Closed-form, branch-free quartic root solver (Ferrari via resolvent cubic).
+
+Used by POGO's ``find_root`` mode to minimize the landing polynomial
+``P(lambda)`` (Lemma 3.1). Everything is jit-safe complex arithmetic — no
+iterative eigensolvers, no data-dependent control flow — so the solve stays
+on-device (one of the paper's stated advantages over QR/SVD retractions).
+
+Root-selection rule (paper Sec. 3.2): pick the real part of the root with the
+smallest imaginary magnitude ("closest real value to any of the roots").
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+_CBRT_UNITY = (
+    1.0 + 0.0j,
+    -0.5 + 0.8660254037844386j,
+    -0.5 - 0.8660254037844386j,
+)
+
+
+def _cbrt(z: Array) -> Array:
+    """Principal complex cube root (branch-free)."""
+    r = jnp.abs(z)
+    theta = jnp.angle(z)
+    return (r ** (1.0 / 3.0)) * jnp.exp(1j * theta / 3.0)
+
+
+def solve_cubic(a: Array, b: Array, c: Array, d: Array) -> Array:
+    """All three roots of ``a x^3 + b x^2 + c x + d`` (complex, batched).
+
+    Returns shape ``(..., 3)``. ``a`` must be nonzero (guarded by caller).
+    """
+    a = a.astype(jnp.complex64) if a.dtype != jnp.complex128 else a
+    b, c, d = (t.astype(a.dtype) for t in (b, c, d))
+    # Depressed cubic t^3 + p t + q with x = t - b/(3a)
+    p = (3 * a * c - b * b) / (3 * a * a)
+    q = (2 * b**3 - 9 * a * b * c + 27 * a * a * d) / (27 * a**3)
+    disc = (q / 2) ** 2 + (p / 3) ** 3
+    sq = jnp.sqrt(disc)
+    # Choose the Cardano branch further from cancellation.
+    u3_plus = -q / 2 + sq
+    u3_minus = -q / 2 - sq
+    u3 = jnp.where(jnp.abs(u3_plus) >= jnp.abs(u3_minus), u3_plus, u3_minus)
+    u = _cbrt(u3)
+    # Guard u == 0 (triple root at 0): then t = 0 for all roots.
+    safe_u = jnp.where(jnp.abs(u) < 1e-30, 1.0, u)
+    roots = []
+    for w in _CBRT_UNITY:
+        uw = safe_u * w
+        t = uw - p / (3 * uw)
+        t = jnp.where(jnp.abs(u) < 1e-30, 0.0, t)
+        roots.append(t - b / (3 * a))
+    return jnp.stack(roots, axis=-1)
+
+
+def solve_quartic(
+    a: Array, b: Array, c: Array, d: Array, e: Array
+) -> Array:
+    """All four roots of ``a x^4 + b x^3 + c x^2 + d x + e`` (batched).
+
+    Ferrari's method through the resolvent cubic; fully vectorized; returns
+    shape ``(..., 4)`` complex roots. Degenerate leading coefficients are the
+    caller's concern (POGO's quartic has ``a = ||E||^2 > 0`` whenever the
+    normal field is nonzero; we clamp ``a`` away from zero).
+    """
+    cdtype = jnp.complex128 if a.dtype == jnp.float64 else jnp.complex64
+    a = jnp.asarray(a, cdtype)
+    b, c, d, e = (jnp.asarray(t, cdtype) for t in (b, c, d, e))
+    a = jnp.where(jnp.abs(a) < 1e-30, 1e-30 + 0j, a)
+    # Normalize: x^4 + B x^3 + C x^2 + D x + E
+    B, C, D, E = b / a, c / a, d / a, e / a
+    # Depressed quartic y^4 + p y^2 + q y + r with x = y - B/4
+    p = C - 3 * B * B / 8
+    q = D - B * C / 2 + B**3 / 8
+    r = E - B * D / 4 + B * B * C / 16 - 3 * B**4 / 256
+    # Resolvent cubic: 8 m^3 + 8 p m^2 + (2 p^2 - 8 r) m - q^2 = 0
+    ones = jnp.ones_like(p)
+    m_roots = solve_cubic(8 * ones, 8 * p, 2 * p * p - 8 * r, -q * q)
+    # Pick the root with the largest magnitude (avoids sqrt of ~0).
+    idx = jnp.argmax(jnp.abs(m_roots), axis=-1)
+    m = jnp.take_along_axis(m_roots, idx[..., None], axis=-1)[..., 0]
+    sqrt_2m = jnp.sqrt(2 * m)
+    safe_sqrt_2m = jnp.where(jnp.abs(sqrt_2m) < 1e-30, 1e-30, sqrt_2m)
+    # Biquadratic fallback when q ~ 0: y^4 + p y^2 + r = 0
+    is_biquad = jnp.abs(q) < 1e-12 * (1 + jnp.abs(p) + jnp.abs(r))
+    # General Ferrari quadratics: y^2 -/+ sqrt(2m) y + (p/2 + m +/- q/(2 sqrt(2m)))
+    t1 = p / 2 + m
+    t2 = q / (2 * safe_sqrt_2m)
+    roots = []
+    for sgn_lin in (+1.0, -1.0):
+        # y^2 + sgn*sqrt(2m)*y + (t1 - sgn*t2) = 0
+        bb = sgn_lin * sqrt_2m
+        cc = t1 - sgn_lin * t2
+        disc = jnp.sqrt(bb * bb - 4 * cc)
+        roots.append((-bb + disc) / 2)
+        roots.append((-bb - disc) / 2)
+    y = jnp.stack(roots, axis=-1)
+    # Biquadratic roots
+    disc_b = jnp.sqrt(p * p - 4 * r)
+    z1 = jnp.sqrt((-p + disc_b) / 2)
+    z2 = jnp.sqrt((-p - disc_b) / 2)
+    y_biquad = jnp.stack([z1, -z1, z2, -z2], axis=-1)
+    y = jnp.where(is_biquad[..., None], y_biquad, y)
+    return y - (B / 4)[..., None]
+
+
+def min_distance_real_root(roots: Array) -> Array:
+    """Paper's selection: real part of the root with least |imag| (batched)."""
+    idx = jnp.argmin(jnp.abs(jnp.imag(roots)), axis=-1)
+    best = jnp.take_along_axis(roots, idx[..., None], axis=-1)[..., 0]
+    return jnp.real(best)
+
+
+def landing_poly_coeffs(m: Array) -> tuple[Array, Array, Array, Array, Array]:
+    """Coefficients (a4..a0) of the landing polynomial P(lambda) at M.
+
+    Lemma 3.1 with ``A = M``, ``B = -(M M^H - I) M``:
+      C = M M^H - I,  D = A B^H + B A^H,  E = B B^H
+      P = ||E||^2 l^4 + 2<D,E> l^3 + (||D||^2 + 2<C,E>) l^2 + 2<C,D> l + ||C||^2
+
+    NOTE: the paper's printed polynomial has coefficients ``2 Tr(E^T D)`` on
+    lambda^2 cross-term and ``Tr(C^T D)`` on lambda; expanding
+    ``||C + D l + E l^2||^2`` directly gives ``2<C,E>`` and ``2<C,D>`` — we use
+    the exact expansion (their Lemma A.5 derivation) so that P(l) equals the
+    true squared distance; validated against brute-force in tests.
+    """
+    p = m.shape[-2]
+    eye = jnp.eye(p, dtype=m.dtype)
+    cmat = m @ jnp.conj(jnp.swapaxes(m, -1, -2)) - eye
+    bmat = -(cmat @ m)
+    mh = jnp.conj(jnp.swapaxes(m, -1, -2))
+    bh = jnp.conj(jnp.swapaxes(bmat, -1, -2))
+    dmat = m @ bh + bmat @ mh
+    emat = bmat @ bh
+
+    def ip(x, y):  # real Frobenius inner product <x, y>
+        return jnp.sum(jnp.real(jnp.conj(x) * y), axis=(-2, -1))
+
+    a4 = ip(emat, emat)
+    a3 = 2.0 * ip(dmat, emat)
+    a2 = ip(dmat, dmat) + 2.0 * ip(cmat, emat)
+    a1 = 2.0 * ip(cmat, dmat)
+    a0 = ip(cmat, cmat)
+    return a4, a3, a2, a1, a0
+
+
+def eval_quartic(coeffs, lam):
+    a4, a3, a2, a1, a0 = coeffs
+    return (((a4 * lam + a3) * lam + a2) * lam + a1) * lam + a0
+
+
+def optimal_lambda(m: Array, fallback: float = 0.5, newton_iters: int = 4) -> Array:
+    """Solve ``min_lambda P(lambda)`` for the batched intermediate iterate(s) M.
+
+    Ferrari gives closed-form candidates, but near the manifold the quartic
+    degenerates (``a4 = ||E||^2 ~ dist^4`` underflows in fp32 and the
+    normalized coefficients overflow). We therefore (i) scale-normalize the
+    coefficients (roots are scale-invariant), (ii) take the real parts of
+    the four Ferrari roots plus the theoretical fallback 1/2 as candidates,
+    (iii) polish each with a few damped-Newton steps on the *real* line, and
+    (iv) pick the candidate with the smallest |P(lambda)| — the paper's
+    "closest real value to a root" criterion, made numerically total.
+    """
+    coeffs = landing_poly_coeffs(m)
+    a4, a3, a2, a1, a0 = coeffs
+    scale = jnp.maximum(
+        jnp.maximum(jnp.maximum(jnp.abs(a4), jnp.abs(a3)), jnp.maximum(jnp.abs(a2), jnp.abs(a1))),
+        jnp.maximum(jnp.abs(a0), 1e-30),
+    )
+    norm = tuple(c / scale for c in coeffs)
+    roots = solve_quartic(*norm)
+    cands = jnp.concatenate(
+        [jnp.real(roots), jnp.full((*roots.shape[:-1], 1), fallback, roots.real.dtype)],
+        axis=-1,
+    )
+    cands = jnp.where(jnp.isfinite(cands), cands, fallback)
+    n4, n3, n2, n1, n0 = (c[..., None] for c in norm)
+
+    def p_of(l):
+        return (((n4 * l + n3) * l + n2) * l + n1) * l + n0
+
+    def dp_of(l):
+        return ((4 * n4 * l + 3 * n3) * l + 2 * n2) * l + n1
+
+    def newton(_, l):
+        dp = dp_of(l)
+        dp = jnp.where(jnp.abs(dp) < 1e-20, jnp.where(dp >= 0, 1e-20, -1e-20), dp)
+        step = p_of(l) / dp
+        step = jnp.clip(step, -1.0, 1.0)  # damped: roots live near [0, 1]
+        return l - step
+
+    cands = jax.lax.fori_loop(0, newton_iters, newton, cands)
+    cands = jnp.where(jnp.isfinite(cands), cands, fallback)
+    # keep the *unpolished* theoretical fallback as a candidate too, so the
+    # selection can never do worse than lambda = 1/2 (fp32 polish noise)
+    cands = jnp.concatenate(
+        [cands, jnp.full((*cands.shape[:-1], 1), fallback, cands.dtype)], axis=-1
+    )
+    vals = jnp.abs(p_of(cands))
+    idx = jnp.argmin(vals, axis=-1)
+    lam = jnp.take_along_axis(cands, idx[..., None], axis=-1)[..., 0]
+    # Already on the manifold (or zero normal field): the land step is a
+    # no-op for any lambda; use the fallback for stability.
+    on_manifold = a0 < 1e-18 * jnp.maximum(scale, 1.0)
+    lam = jnp.where(on_manifold | ~jnp.isfinite(lam), fallback, lam)
+    # Clamp to a sane trust region around the theoretical value.
+    return jnp.clip(lam, -0.5, 2.0)

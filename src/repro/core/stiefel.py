@@ -1,0 +1,211 @@
+"""Stiefel-manifold primitives (real and complex), batched and jit-safe.
+
+Conventions follow the paper: ``St(p, n) = {X in F^{p x n} : X X^H = I_p}``
+with ``p <= n`` (row-orthonormal "wide" matrices) and the Euclidean metric
+induced by the Frobenius inner product. All functions accept arbitrary
+leading batch dimensions ``(..., p, n)`` and work for real or complex
+dtypes — transposes are conjugate transposes, so the complex Stiefel
+manifold (Sec. 3.4 / Sec. 5.3 of the paper) is supported by construction.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+def _ht(x: Array) -> Array:
+    """Batched conjugate (Hermitian) transpose of the last two dims."""
+    return jnp.conj(jnp.swapaxes(x, -1, -2))
+
+
+def sym(a: Array) -> Array:
+    """Hermitian part: ``Sym(A) = (A + A^H)/2``."""
+    return 0.5 * (a + _ht(a))
+
+
+def skew(a: Array) -> Array:
+    """Skew-Hermitian part: ``Skew(A) = (A - A^H)/2``."""
+    return 0.5 * (a - _ht(a))
+
+
+def gram(x: Array) -> Array:
+    """``X X^H`` — the (p, p) Gram matrix of the rows."""
+    return x @ _ht(x)
+
+
+def gram_residual(x: Array) -> Array:
+    """``X X^H - I_p`` — zero exactly on St(p, n)."""
+    g = gram(x)
+    p = x.shape[-2]
+    return g - jnp.eye(p, dtype=g.dtype)
+
+
+def manifold_distance(x: Array) -> Array:
+    """Frobenius distance ``||X X^H - I||_F`` per batched matrix."""
+    r = gram_residual(x)
+    # For complex inputs |r|^2 sums real and imaginary energy.
+    return jnp.sqrt(jnp.sum(jnp.abs(r) ** 2, axis=(-2, -1)))
+
+
+def manifold_penalty(x: Array) -> Array:
+    """``N(X) = 1/4 ||X X^H - I||^2`` (the paper's squared manifold distance)."""
+    return 0.25 * manifold_distance(x) ** 2
+
+
+def penalty_grad(x: Array) -> Array:
+    """``grad N(X) = (X X^H - I) X`` — the normal-direction field."""
+    return gram_residual(x) @ x
+
+
+def relative_gradient(x: Array, g: Array) -> Array:
+    """``S = Skew(X^H G)`` — the (n, n) relative gradient.
+
+    NOTE: materializes an (n, n) matrix; prefer :func:`riemannian_gradient`
+    which never forms it (O(p^2 n) instead of O(p n^2)).
+    """
+    return skew(_ht(x) @ g)
+
+
+def riemannian_gradient(x: Array, g: Array) -> Array:
+    """``X Skew(X^H G) = 1/2 (X X^H G - X G^H X)`` without the (n,n) matrix.
+
+    This is the cheap factored form the paper's O(p^2 n) claim rests on:
+    two (p,p) Gram-type products followed by two (p,p)x(p,n) products.
+    """
+    a = x @ _ht(g)  # (p, p):  X G^H
+    b = gram(x)  # (p, p):  X X^H
+    return 0.5 * (b @ g - a @ x)
+
+
+def tangent_project(x: Array, v: Array) -> Array:
+    """Project an ambient direction ``v`` onto the tangent space at ``x``.
+
+    For the Euclidean metric: ``P_X(V) = V - Sym(V X^H) X`` when X is on the
+    manifold (kills the component violating ``d(X X^H) = 0``). Used by RGD
+    variants and tests.
+    """
+    return v - sym(v @ _ht(x)) @ x
+
+
+def tangent_project_canonical(x: Array, v: Array) -> Array:
+    """Canonical-metric tangent projection ``X Skew(X^H V)`` (rank-limited)."""
+    return riemannian_gradient(x, v)
+
+
+def random_stiefel(key: jax.Array, shape: tuple[int, ...], dtype=jnp.float32) -> Array:
+    """Sample uniformly from St(p, n) (Haar) via QR of a Gaussian.
+
+    ``shape`` is ``(..., p, n)`` with p <= n. Complex dtypes give the
+    complex Stiefel manifold.
+    """
+    *batch, p, n = shape
+    if p > n:
+        raise ValueError(f"St(p,n) requires p <= n, got {(p, n)}")
+    if jnp.issubdtype(dtype, jnp.complexfloating):
+        kr, ki = jax.random.split(key)
+        rdt = jnp.float64 if dtype == jnp.complex128 else jnp.float32
+        a = jax.random.normal(kr, (*batch, n, p), rdt) + 1j * jax.random.normal(
+            ki, (*batch, n, p), rdt
+        )
+        a = a.astype(dtype)
+    else:
+        a = jax.random.normal(key, (*batch, n, p), dtype)
+    q, r = jnp.linalg.qr(a)  # q: (..., n, p) column-orthonormal
+    # Sign-fix for uniqueness/Haar correctness.
+    d = jnp.diagonal(r, axis1=-2, axis2=-1)
+    phase = d / jnp.where(jnp.abs(d) == 0, 1, jnp.abs(d))
+    q = q * jnp.conj(phase)[..., None, :]
+    return _ht(q)  # (..., p, n) row-orthonormal
+
+
+def project_qr(x: Array) -> Array:
+    """Project onto St(p, n) via QR of X^H (row-orthonormalize)."""
+    q, r = jnp.linalg.qr(_ht(x))
+    d = jnp.diagonal(r, axis1=-2, axis2=-1)
+    phase = d / jnp.where(jnp.abs(d) == 0, 1, jnp.abs(d))
+    q = q * jnp.conj(phase)[..., None, :]
+    return _ht(q)
+
+
+def project_polar(x: Array) -> Array:
+    """Polar projection ``(X X^H)^{-1/2} X`` — the *closest* point on St."""
+    g = gram(x)
+    # Inverse principal square root via eigendecomposition of the small (p,p)
+    # Hermitian Gram matrix (cheap: p <= n).
+    w, v = jnp.linalg.eigh(g)
+    w = jnp.maximum(w, 1e-12)
+    inv_sqrt = (v * (w ** -0.5)[..., None, :]) @ _ht(v)
+    return inv_sqrt.astype(x.dtype) @ x
+
+
+def project_newton_schulz(x: Array, iters: int = 12) -> Array:
+    """Polar projection via Newton–Schulz iteration (matmul-only).
+
+    ``Y <- 1.5 Y - 0.5 (Y Y^H) Y`` converges quadratically to the polar
+    factor provided ``||X X^H - I||_2 < 1``; we pre-scale by the Frobenius
+    norm bound to guarantee contraction. This is the TPU-friendly projector
+    (no eigh/QR) used at init and inside kernels.
+    """
+    # spectral norm <= frobenius norm; scale so largest singular value < sqrt(3)
+    fro = jnp.sqrt(jnp.sum(jnp.abs(x) ** 2, axis=(-2, -1), keepdims=True))
+    y = x / jnp.maximum(fro, 1e-30)
+
+    def body(_, y):
+        return 1.5 * y - 0.5 * (gram(y) @ y)
+
+    return jax.lax.fori_loop(0, iters, body, y)
+
+
+def retraction_qr(x: Array, v: Array) -> Array:
+    """QR retraction: ``R_X(V) = qf(X + V)`` (row-orthonormal convention)."""
+    return project_qr(x + v)
+
+
+def retraction_polar(x: Array, v: Array) -> Array:
+    """Polar retraction: ``R_X(V) = ((X+V)(X+V)^H)^{-1/2} (X+V)``."""
+    return project_polar(x + v)
+
+
+def retraction_cayley(x: Array, s: Array) -> Array:
+    """Cayley retraction for a *left-acting* skew generator ``s`` (p x p):
+
+    ``R(X) = (I - s/2)^{-1} (I + s/2) X``. Exact on the manifold, requires a
+    (p,p) solve — used by RGD-Cayley baseline and RSDM.
+    """
+    p = x.shape[-2]
+    eye = jnp.eye(p, dtype=x.dtype)
+    lhs = eye - 0.5 * s
+    rhs = (eye + 0.5 * s) @ x
+    return jnp.linalg.solve(lhs, rhs)
+
+
+def pogo_update(
+    x: Array,
+    g: Array,
+    eta: Array | float,
+    lam: Array | float = 0.5,
+) -> Array:
+    """One POGO step (Alg. 1 with fixed lambda), reference jnp form.
+
+    leap:  M  = X - eta * X Skew(X^H G)
+    land:  X' = M + lam * (I - M M^H) M = (1 + lam) M - lam (M M^H) M
+    """
+    r = riemannian_gradient(x, g)
+    m = x - eta * r
+    c = gram(m)
+    return (1.0 + lam) * m - lam * (c @ m)
+
+
+def landing_update(
+    x: Array,
+    g: Array,
+    eta: Array | float,
+    lam: Array | float = 1.0,
+) -> Array:
+    """One Landing step (Ablin & Peyre 2022): X' = X - eta (grad + lam * normal)."""
+    r = riemannian_gradient(x, g)
+    nrm = penalty_grad(x)
+    return x - eta * (r + lam * nrm)

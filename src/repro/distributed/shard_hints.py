@@ -1,0 +1,64 @@
+"""Activation sharding hints (``with_sharding_constraint`` shims).
+
+Model code calls ``activation(x)`` at block boundaries to pin the residual
+stream to ``P((pod, data), None, ...)``. Without these pins GSPMD is free to
+flip the activation layout between the FSDP-sharded weights' ``data`` dim
+and the batch dim — on the 16x16 mesh that produced multi-GiB all-to-all
+resharding storms. With the pin, weight all-gathers (FSDP) are the only
+activation-adjacent collectives, which is the intended ZeRO-3 schedule.
+
+The mesh is process-global state set by launchers (dryrun/train/serve);
+when unset (unit tests, single-device smoke runs) the hints are no-ops.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+_MESH: Optional[Mesh] = None
+_MODE: str = "2d"
+
+
+def set_mesh(mesh: Optional[Mesh], mode: str = "2d") -> None:
+    global _MESH, _MODE
+    _MESH = mesh
+    _MODE = mode
+
+
+def get_mesh() -> Optional[Mesh]:
+    return _MESH
+
+
+def _batch_axes(mesh: Mesh, batch: int):
+    import itertools
+
+    names = ("pod", "data", "model") if _MODE == "dp" else ("pod", "data")
+    axes = [n for n in names if n in mesh.shape]
+    best, best_size = (), 1
+    for r in range(len(axes), 0, -1):
+        for sub in itertools.combinations(axes, r):
+            size = 1
+            for n in sub:
+                size *= mesh.shape[n]
+            if size > best_size and batch % size == 0:
+                best, best_size = sub, size
+        if best:
+            break
+    if not best:
+        return None
+    return tuple(best) if len(best) > 1 else best[0]
+
+
+def activation(x: jax.Array, model_dim: Optional[int] = None) -> jax.Array:
+    """Pin batch dim -> (pod, data); optionally one dim -> model."""
+    if _MESH is None or x.ndim == 0:
+        return x
+    entries: list = [None] * x.ndim
+    entries[0] = _batch_axes(_MESH, x.shape[0])
+    if model_dim is not None and x.shape[model_dim] % _MESH.shape.get("model", 1) == 0:
+        entries[model_dim] = "model"
+    return jax.lax.with_sharding_constraint(x, NamedSharding(_MESH, P(*entries)))

@@ -1,0 +1,14 @@
+"""Pallas TPU kernels for the paper's compute hot spots.
+
+The paper's contribution *is* an optimizer built from a short fixed GEMM
+sequence, so the hot spot is the orthoptimizer step itself: ``pogo_update``
+(fused leap+land), ``landing_field`` (fused baseline field), and
+``newton_schulz`` (matmul-only polar projection for init / RGD retraction).
+
+Validated on CPU via ``interpret=True`` against the pure-jnp oracles in
+``ref.py`` (this container has no TPU; kernels target v5e).
+"""
+
+from . import ops, ref
+
+__all__ = ["ops", "ref"]

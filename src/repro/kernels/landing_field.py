@@ -1,0 +1,55 @@
+"""Fused landing-field Pallas kernel: Lambda(X) = grad_R + lam * normal.
+
+Single pass per matrix block: shares the (p, p) accumulators A = X X^T and
+B = X G^T between the Riemannian-gradient term 1/2 (A G - B X) and the
+normal term (A - I) X — the baseline Landing optimizer's whole per-step
+field in one HBM round trip.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+Array = jax.Array
+
+
+def _landing_kernel(scal_ref, x_ref, g_ref, o_ref):
+    lam = scal_ref[0]
+    x = x_ref[...].astype(jnp.float32)  # (bm, p, n)
+    g = g_ref[...].astype(jnp.float32)
+    dn = (((2,), (2,)), ((0,), (0,)))
+    dp = (((2,), (1,)), ((0,), (0,)))
+    a = jax.lax.dot_general(x, x, dn, preferred_element_type=jnp.float32)
+    b = jax.lax.dot_general(x, g, dn, preferred_element_type=jnp.float32)
+    ag = jax.lax.dot_general(a, g, dp, preferred_element_type=jnp.float32)
+    bx = jax.lax.dot_general(b, x, dp, preferred_element_type=jnp.float32)
+    r = 0.5 * (ag - bx)
+    ax = jax.lax.dot_general(a, x, dp, preferred_element_type=jnp.float32)
+    normal = ax - x  # (A - I) X
+    o_ref[...] = (r + lam * normal).astype(o_ref.dtype)
+
+
+def landing_field(
+    x: Array, g: Array, lam, *, block_b: int = 1, interpret: bool = False
+) -> Array:
+    """x, g: (B, p, n) aligned by the caller. Returns Lambda(X) (B, p, n)."""
+    bsz, p, n = x.shape
+    assert bsz % block_b == 0, (bsz, block_b)
+    scal = jnp.asarray([lam], jnp.float32)
+    return pl.pallas_call(
+        _landing_kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=(bsz // block_b,),
+            in_specs=[
+                pl.BlockSpec((block_b, p, n), lambda i, s: (i, 0, 0)),
+                pl.BlockSpec((block_b, p, n), lambda i, s: (i, 0, 0)),
+            ],
+            out_specs=pl.BlockSpec((block_b, p, n), lambda i, s: (i, 0, 0)),
+        ),
+        out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype),
+        interpret=interpret,
+    )(scal, x, g)

@@ -1,0 +1,211 @@
+"""jit'd public wrappers around the Pallas kernels with shape planning.
+
+Responsibilities:
+  * flatten arbitrary leading batch dims ``(..., p, n) -> (B, p, n)``;
+  * pad ``p`` to a multiple of 8 (fp32 sublanes) and ``n`` to a multiple of
+    128 (lanes) — exact for these updates (zero rows/cols are invariant);
+  * pick a kernel variant from the VMEM budget: whole-matrix when the
+    working set fits, tiled three-phase otherwise, pure-jnp oracle for
+    unsupported cases (complex dtype, find_root mode);
+  * run ``interpret=True`` automatically off-TPU (this container is
+    CPU-only; the kernels are TPU-targeted and validated in interpret mode).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from . import flash_attention as _fa
+from . import landing_field as _lf
+from . import newton_schulz as _ns
+from . import pogo_update as _pu
+from . import ref
+
+# Conservative VMEM plan: ~16 MiB/core on v5e, keep the working set under
+# ~12 MiB to leave room for semaphores/double-buffering.
+VMEM_BUDGET_BYTES = 12 * 1024 * 1024
+# whole-kernel resident arrays: x, g, m (implicit), out + (p,p) accums
+_WHOLE_ARRAYS = 4
+
+
+def _interpret_default() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def _round_up(v: int, m: int) -> int:
+    return (v + m - 1) // m * m
+
+
+def _pad_pn(x, p_pad, n_pad):
+    p, n = x.shape[-2:]
+    if p == p_pad and n == n_pad:
+        return x
+    cfg = [(0, 0)] * (x.ndim - 2) + [(0, p_pad - p), (0, n_pad - n)]
+    return jnp.pad(x, cfg)
+
+
+def _plan(p: int, n: int):
+    """Returns ("whole", block_b) | ("tiled", tile_n)."""
+    p_pad = _round_up(p, 8)
+    n_pad = _round_up(n, 128)
+    per_matrix = p_pad * n_pad * 4 * _WHOLE_ARRAYS + p_pad * p_pad * 4 * 3
+    if per_matrix <= VMEM_BUDGET_BYTES:
+        block_b = max(1, min(1024, VMEM_BUDGET_BYTES // per_matrix))
+        return ("whole", block_b, p_pad, n_pad)
+    # tiled: resident = 2 tiles (x, g) + m tile + out tile + 3 (p,p) accums
+    tile_n = 512
+    while tile_n > 128 and (4 * p_pad * tile_n * 4 + 3 * p_pad * p_pad * 4) > VMEM_BUDGET_BYTES:
+        tile_n //= 2
+    return ("tiled", tile_n, p_pad, n_pad)
+
+
+def _flatten(x):
+    *lead, p, n = x.shape
+    bsz = 1
+    for d in lead:
+        bsz *= d
+    return x.reshape(bsz, p, n), tuple(lead)
+
+
+@functools.partial(jax.jit, static_argnames=("find_root", "interpret"))
+def _pogo_dispatch(x, g, eta, lam, *, find_root, interpret):
+    if find_root or jnp.issubdtype(x.dtype, jnp.complexfloating):
+        # Quartic solve / complex field: jnp path (still jit-fused by XLA).
+        from ..core import quartic, stiefel
+
+        r = stiefel.riemannian_gradient(x, g)
+        m = x - eta * r
+        if find_root:
+            lam_v = quartic.optimal_lambda(m)[..., None, None]
+        else:
+            lam_v = lam
+        c = stiefel.gram(m)
+        return (1.0 + lam_v) * m - lam_v * (c @ m)
+
+    xb, lead = _flatten(x)
+    gb, _ = _flatten(g)
+    bsz, p, n = xb.shape
+    kind, arg, p_pad, n_pad = _plan(p, n)
+    xp = _pad_pn(xb, p_pad, n_pad)
+    gp = _pad_pn(gb, p_pad, n_pad)
+    if kind == "whole":
+        block_b = arg
+        b_pad = _round_up(bsz, block_b)
+        if b_pad != bsz:
+            xp = jnp.pad(xp, [(0, b_pad - bsz), (0, 0), (0, 0)])
+            gp = jnp.pad(gp, [(0, b_pad - bsz), (0, 0), (0, 0)])
+        out = _pu.pogo_update_whole(xp, gp, eta, lam, block_b=block_b, interpret=interpret)
+        out = out[:bsz]
+    else:
+        tile_n = arg
+        n_pad = _round_up(n_pad, tile_n)
+        xp = _pad_pn(xb, p_pad, n_pad)
+        gp = _pad_pn(gb, p_pad, n_pad)
+        out = _pu.pogo_update_tiled(xp, gp, eta, lam, tile_n=tile_n, interpret=interpret)
+    out = out[:, :p, :n].reshape(*lead, p, n)
+    return out
+
+
+def pogo_update(x, g, eta, lam=0.5, find_root: bool = False, interpret: bool | None = None):
+    """Fused POGO step on stacked matrices ``(..., p, n)``."""
+    if interpret is None:
+        interpret = _interpret_default()
+    eta = jnp.asarray(eta, jnp.float32)
+    lam_arr = jnp.asarray(lam, jnp.float32)
+    return _pogo_dispatch(x, g, eta, lam_arr, find_root=find_root, interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def _landing_dispatch(x, g, lam, *, interpret):
+    xb, lead = _flatten(x)
+    gb, _ = _flatten(g)
+    bsz, p, n = xb.shape
+    kind, arg, p_pad, n_pad = _plan(p, n)
+    if kind != "whole":
+        return ref.landing_field_ref(x, g, lam)
+    block_b = arg
+    xp = _pad_pn(xb, p_pad, n_pad)
+    gp = _pad_pn(gb, p_pad, n_pad)
+    b_pad = _round_up(bsz, block_b)
+    if b_pad != bsz:
+        xp = jnp.pad(xp, [(0, b_pad - bsz), (0, 0), (0, 0)])
+        gp = jnp.pad(gp, [(0, b_pad - bsz), (0, 0), (0, 0)])
+    out = _lf.landing_field(xp, gp, lam, block_b=block_b, interpret=interpret)
+    return out[:bsz, :p, :n].reshape(*lead, p, n)
+
+
+def landing_field(x, g, lam=1.0, interpret: bool | None = None):
+    """Fused landing field Lambda(X) on stacked matrices ``(..., p, n)``."""
+    if interpret is None:
+        interpret = _interpret_default()
+    if jnp.issubdtype(x.dtype, jnp.complexfloating):
+        return ref.landing_field_ref(x, g, lam)
+    return _landing_dispatch(x, g, jnp.asarray(lam, jnp.float32), interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("iters", "interpret"))
+def _ns_dispatch(x, *, iters, interpret):
+    xb, lead = _flatten(x)
+    bsz, p, n = xb.shape
+    kind, arg, p_pad, n_pad = _plan(p, n)
+    if kind != "whole":
+        return ref.newton_schulz_ref(x, iters)
+    block_b = arg
+    xp = _pad_pn(xb, p_pad, n_pad)
+    b_pad = _round_up(bsz, block_b)
+    if b_pad != bsz:
+        xp = jnp.pad(xp, [(0, b_pad - bsz), (0, 0), (0, 0)])
+    out = _ns.newton_schulz(xp, iters=iters, block_b=block_b, interpret=interpret)
+    return out[:bsz, :p, :n].reshape(*lead, p, n)
+
+
+def newton_schulz(x, iters: int = 12, interpret: bool | None = None):
+    """Batched Newton-Schulz polar projection ``(..., p, n)``."""
+    if interpret is None:
+        interpret = _interpret_default()
+    if jnp.issubdtype(x.dtype, jnp.complexfloating):
+        return ref.newton_schulz_ref(x, iters)
+    return _ns_dispatch(x, iters=iters, interpret=interpret)
+
+
+def flash_attention(
+    q, k, v, *, causal: bool = True, window=None,
+    block_q: int = 512, block_k: int = 512, interpret: bool | None = None,
+):
+    """Fused flash-attention forward on (B, S, H, hd) GQA inputs.
+
+    Flattens batch x heads, repeats KV heads for GQA, pads S to block
+    multiples (exact: padded keys are masked by seq_len), and dispatches to
+    the Pallas kernel. Forward-only — training keeps the checkpointed JAX
+    path; serving/prefill use this.
+    """
+    if interpret is None:
+        interpret = _interpret_default()
+    b, sq, h, hd = q.shape
+    kvh = k.shape[2]
+    groups = h // kvh
+    sk = k.shape[1]
+    block_q = min(block_q, max(128, 1 << (sq - 1).bit_length()))
+    block_k = min(block_k, max(128, 1 << (sk - 1).bit_length()))
+    kr = jnp.repeat(k, groups, axis=2) if groups > 1 else k
+    vr = jnp.repeat(v, groups, axis=2) if groups > 1 else v
+    qf = jnp.moveaxis(q, 2, 1).reshape(b * h, sq, hd)
+    kf = jnp.moveaxis(kr, 2, 1).reshape(b * h, sk, hd)
+    vf = jnp.moveaxis(vr, 2, 1).reshape(b * h, sk, hd)
+    pq = (-sq) % block_q
+    pk = (-sk) % block_k
+    # NOTE: seq_len inside the kernel masks the padded keys; padded queries
+    # produce garbage rows that are sliced off below.
+    qf = jnp.pad(qf, ((0, 0), (0, pq), (0, 0)))
+    kf = jnp.pad(kf, ((0, 0), (0, pk), (0, 0)))
+    vf = jnp.pad(vf, ((0, 0), (0, pk), (0, 0)))
+    # the kernel masks keys >= true sk via its seq_len argument
+    out = _fa.flash_attention_fwd(
+        qf, kf, vf, causal=causal, window=window,
+        block_q=block_q, block_k=block_k, interpret=interpret,
+    )
+    out = out[:, :sq].reshape(b, h, sq, hd)
+    return jnp.moveaxis(out, 1, 2)

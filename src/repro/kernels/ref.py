@@ -1,0 +1,90 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+These are the ground truth the kernels are tested against
+(``tests/test_kernels.py`` sweeps shapes and dtypes with
+``np.testing.assert_allclose``). They are also the dispatch fallback in
+``ops.py`` when a shape does not fit the kernel's VMEM plan.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+def _bt(x: Array) -> Array:
+    return jnp.swapaxes(x, -1, -2)
+
+
+def pogo_update_ref(x: Array, g: Array, eta, lam) -> Array:
+    """Fused POGO step, fp32 accumulation, (..., p, n) batched.
+
+    A = X X^T; B = X G^T; R = 1/2 (A G - B X); M = X - eta R
+    C = M M^T; X' = (1 + lam) M - lam C M
+    """
+    xf = x.astype(jnp.float32)
+    gf = g.astype(jnp.float32)
+    a = xf @ _bt(xf)
+    b = xf @ _bt(gf)
+    r = 0.5 * (a @ gf - b @ xf)
+    m = xf - jnp.asarray(eta, jnp.float32) * r
+    c = m @ _bt(m)
+    out = (1.0 + jnp.asarray(lam, jnp.float32)) * m - jnp.asarray(lam, jnp.float32) * (c @ m)
+    return out.astype(x.dtype)
+
+
+def landing_field_ref(x: Array, g: Array, lam) -> Array:
+    """Fused landing field: Lambda = 1/2 (A G - B X) + lam (A - I) X."""
+    xf = x.astype(jnp.float32)
+    gf = g.astype(jnp.float32)
+    a = xf @ _bt(xf)
+    b = xf @ _bt(gf)
+    r = 0.5 * (a @ gf - b @ xf)
+    p = x.shape[-2]
+    n_field = (a - jnp.eye(p, dtype=jnp.float32)) @ xf
+    return (r + jnp.asarray(lam, jnp.float32) * n_field).astype(x.dtype)
+
+
+def newton_schulz_ref(x: Array, iters: int = 12) -> Array:
+    """Batched Newton-Schulz polar projection (matches kernels/newton_schulz)."""
+    xf = x.astype(jnp.float32)
+    fro = jnp.sqrt(jnp.sum(xf * xf, axis=(-2, -1), keepdims=True))
+    y = xf / jnp.maximum(fro, 1e-30)
+
+    def body(_, y):
+        return 1.5 * y - 0.5 * ((y @ _bt(y)) @ y)
+
+    y = jax.lax.fori_loop(0, iters, body, y)
+    return y.astype(x.dtype)
+
+
+def manifold_distance_ref(x: Array) -> Array:
+    """||X X^T - I||_F per matrix (telemetry kernel oracle)."""
+    xf = x.astype(jnp.float32)
+    p = x.shape[-2]
+    r = xf @ _bt(xf) - jnp.eye(p, dtype=jnp.float32)
+    return jnp.sqrt(jnp.sum(r * r, axis=(-2, -1)))
+
+
+def flash_attention_fwd_ref(q, k, v, *, causal=True, window=None):
+    """Oracle for the flash-attention forward kernel. q,k,v: (BH, S, hd).
+    Keys beyond the (unpadded) length are assumed absent by masking with
+    seq_len = k.shape[1] (the kernel receives padded inputs)."""
+    qf = q.astype(jnp.float32)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    hd = q.shape[-1]
+    s = jnp.einsum("bqh,bkh->bqk", qf, kf) * hd**-0.5
+    sq, sk = q.shape[1], k.shape[1]
+    q_pos = jnp.arange(sq)[:, None]
+    k_pos = jnp.arange(sk)[None, :]
+    mask = jnp.ones((sq, sk), bool)
+    if causal:
+        mask = mask & (k_pos <= q_pos)
+    if window is not None:
+        mask = mask & (k_pos > q_pos - window)
+    s = jnp.where(mask[None], s, -2.0**30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bqk,bkh->bqh", p, vf).astype(q.dtype)

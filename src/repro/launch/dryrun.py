@@ -1,0 +1,309 @@
+import os
+
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+For each cell we build the entry point (train_step / prefill_step /
+serve_step), lower it against ShapeDtypeStruct inputs (no allocation),
+compile under the production mesh, and record:
+
+  * memory_analysis()      -> bytes per device (proves the config fits)
+  * cost_analysis()        -> per-device HLO FLOPs / bytes (roofline terms)
+  * HLO collective scan    -> per-collective operand bytes + replica groups
+
+Results are cached as JSON under results/dryrun/ so the 40-cell sweep is
+restartable. Usage:
+
+  PYTHONPATH=src python -m repro.launch.dryrun --arch smollm-360m \
+      --shape train_4k [--multi-pod] [--all] [--force]
+"""
+
+import argparse
+import json
+import re
+import sys
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..", "results", "dryrun")
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8": 1,
+    "s64": 8, "s32": 4, "s16": 2, "s8": 1, "u64": 8, "u32": 4, "u16": 2,
+    "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all", "collective-permute")
+
+
+def parse_collectives(hlo_text: str):
+    """Sum per-device operand bytes of every collective op in (post-SPMD)
+    HLO, keyed by op kind; also capture replica-group sizes."""
+    out = {k: {"bytes": 0, "count": 0, "ops": []} for k in _COLLECTIVES}
+    # e.g.:  %ag = bf16[4,128]{1,0} all-gather(...), replica_groups={{0,1,..}}
+    pat = re.compile(
+        r"=\s*(?:\()?((?:[a-z0-9]+\[[0-9,]*\][^ ]*(?:,\s*)?)+)\)?\s+"
+        r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    )
+    shape_pat = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+    # legacy explicit groups: replica_groups={{0,1,...},...}
+    group_pat = re.compile(r"replica_groups=\{\{([0-9, ]+)\}")
+    # iota groups: replica_groups=[n_groups,group_size]<=[...]
+    iota_pat = re.compile(r"replica_groups=\[(\d+),(\d+)\]<=")
+    for line in hlo_text.splitlines():
+        m = pat.search(line)
+        if not m:
+            continue
+        kind = m.group(2)
+        # NOTE: the LHS shape is the op's OUTPUT (per-device); the
+        # link-traffic factors in benchmarks/roofline.py assume output bytes
+        nbytes = 0
+        for dt, dims in shape_pat.findall(m.group(1)):
+            if dt not in _DTYPE_BYTES:
+                continue
+            n = 1
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+            nbytes += n * _DTYPE_BYTES[dt]
+        gm = group_pat.search(line)
+        if gm:
+            gsize = len(gm.group(1).split(","))
+        else:
+            im = iota_pat.search(line)
+            gsize = int(im.group(2)) if im else 0
+        out[kind]["bytes"] += nbytes
+        out[kind]["count"] += 1
+        out[kind]["ops"].append({"bytes": nbytes, "group": gsize})
+    return out
+
+
+def build_entry(cfg, shape_name: str, dp: int = 16):
+    """Returns (fn, example_inputs_dict, in_shardings_fn). ``dp`` = total
+    data-parallel ways (pod x data) — microbatching targets a per-device
+    local batch, so it must know the mesh."""
+    from ..configs import base as cfgbase
+    from ..models import transformer as tfm
+    from ..train.train_step import TrainConfig, make_train_step
+
+    spec = cfgbase.SHAPES[shape_name]
+    specs = cfgbase.input_specs(cfg, shape_name)
+
+    if spec["kind"] == "train":
+        # activation-memory control: pick microbatches so the per-device
+        # per-microbatch batch hits a target (1 row for the huge / SSM
+        # archs whose activations dominate; more for small models)
+        n_params = cfg.total_params()
+        if n_params > 1e10 or "mamba" in cfg.block_pattern:
+            target_local = 1
+        elif n_params > 1e9:
+            target_local = 2
+        else:
+            target_local = 16
+        b = spec["global_batch"]
+        micro = max(1, b // (dp * target_local))
+        while micro > 1 and (b % micro or (b // micro) % dp):
+            micro -= 1  # keep both the reshape and the dp sharding exact
+        train_cfg = TrainConfig(
+            pogo_use_kernel=False,
+            microbatches=micro,
+            # factored second moments: the difference between fitting and
+            # not fitting >50B optimizer state on 16 GiB chips
+            default_opt="adafactor" if n_params > 5e10 else "adamw",
+        )
+        step_fn, optimizer = make_train_step(cfg, train_cfg)
+
+        def params_and_state_specs():
+            params = jax.eval_shape(lambda: tfm.init_params(jax.random.PRNGKey(0), cfg))
+            opt_state = jax.eval_shape(optimizer.init, params)
+            return params, opt_state
+
+        def fn(params, opt_state, batch):
+            return step_fn(params, opt_state, batch)
+
+        return fn, specs, params_and_state_specs
+
+    if spec["kind"] == "prefill":
+        def fn(params, batch):
+            return tfm.prefill(
+                params, cfg, batch["tokens"],
+                frontend_embeds=batch.get("frontend_embeds"),
+                encoder_tokens=batch.get("encoder_tokens"),
+            )
+
+        def params_only_specs():
+            params = jax.eval_shape(lambda: tfm.init_params(jax.random.PRNGKey(0), cfg))
+            return params, None
+
+        return fn, specs, params_only_specs
+
+    # decode
+    def fn(params, batch):
+        return tfm.decode_step(
+            params, cfg, batch["tokens"], batch["cache"],
+            encoder_memory=batch.get("encoder_memory"),
+        )
+
+    def params_only_specs():
+        params = jax.eval_shape(lambda: tfm.init_params(jax.random.PRNGKey(0), cfg))
+        return params, None
+
+    return fn, specs, params_only_specs
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool = False, force: bool = False):
+    from ..configs import cell_is_runnable, get_config
+    from ..distributed import sharding
+    from .mesh import make_production_mesh
+
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    tag = f"{arch}__{shape_name}__{'multipod' if multi_pod else 'pod'}"
+    cache_file = os.path.join(RESULTS_DIR, tag + ".json")
+    if os.path.exists(cache_file) and not force:
+        with open(cache_file) as f:
+            return json.load(f)
+
+    cfg = get_config(arch)
+    ok, reason = cell_is_runnable(cfg, shape_name)
+    result = {"arch": arch, "shape": shape_name, "multi_pod": multi_pod}
+    if not ok:
+        result["status"] = "skipped"
+        result["reason"] = reason
+        with open(cache_file, "w") as f:
+            json.dump(result, f, indent=2)
+        return result
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    t0 = time.time()
+    try:
+        from ..distributed import shard_hints
+
+        mode = cfg.resolved_parallelism()
+        shard_hints.set_mesh(mesh, mode)
+        dp = mesh.shape.get("data", 1) * mesh.shape.get("pod", 1)
+        if mode == "dp":
+            dp *= mesh.shape.get("model", 1)
+        fn, input_sds, params_spec_fn = build_entry(cfg, shape_name, dp=dp)
+        params_sds, opt_sds = params_spec_fn()
+        p_shard = sharding.param_shardings(params_sds, mesh, mode)
+        in_shard = sharding.input_specs_shardings(input_sds, mesh, cfg, mode)
+
+        def attach(tree, shardings):
+            return jax.tree.map(
+                lambda sd, sh: jax.ShapeDtypeStruct(sd.shape, sd.dtype, sharding=sh),
+                tree,
+                shardings,
+            )
+
+        params_in = attach(params_sds, p_shard)
+        inputs_in = attach(input_sds, in_shard)
+        with mesh:
+            if opt_sds is not None:
+                o_specs = sharding.opt_state_specs(opt_sds, params_sds, mesh, mode)
+                o_shard = jax.tree.map(
+                    lambda s: jax.sharding.NamedSharding(mesh, s), o_specs,
+                    is_leaf=lambda x: isinstance(x, jax.sharding.PartitionSpec),
+                )
+                opt_in = attach(opt_sds, o_shard)
+                # donate params + opt state: the step's outputs alias its
+                # inputs, exactly like a real training loop
+                lowered = jax.jit(fn, donate_argnums=(0, 1)).lower(
+                    params_in, opt_in, inputs_in
+                )
+            else:
+                lowered = jax.jit(fn).lower(params_in, inputs_in)
+        t1 = time.time()
+        compiled = lowered.compile()
+        t2 = time.time()
+
+        ma = compiled.memory_analysis()
+        ca = compiled.cost_analysis()
+        if isinstance(ca, list):
+            ca = ca[0]
+        hlo = compiled.as_text()
+        colls = parse_collectives(hlo)
+        result.update(
+            status="ok",
+            lower_s=round(t1 - t0, 2),
+            compile_s=round(t2 - t1, 2),
+            memory=dict(
+                argument_bytes=ma.argument_size_in_bytes,
+                output_bytes=ma.output_size_in_bytes,
+                temp_bytes=ma.temp_size_in_bytes,
+                alias_bytes=ma.alias_size_in_bytes,
+            ),
+            flops_per_device=ca.get("flops", 0.0) if ca else 0.0,
+            bytes_per_device=ca.get("bytes accessed", 0.0) if ca else 0.0,
+            transcendentals=ca.get("transcendentals", 0.0) if ca else 0.0,
+            collectives={
+                k: {"bytes": v["bytes"], "count": v["count"]}
+                for k, v in colls.items()
+            },
+            collective_ops=[
+                {"kind": k, **op} for k, v in colls.items() for op in v["ops"]
+            ],
+            n_devices=mesh.size,
+            total_params=cfg.total_params(),
+            active_params=cfg.active_params(),
+        )
+    except Exception as e:  # noqa: BLE001 - record the failure verbatim
+        result["status"] = "error"
+        result["error"] = f"{type(e).__name__}: {e}"
+        result["traceback"] = traceback.format_exc()[-4000:]
+    finally:
+        from ..distributed import shard_hints
+
+        shard_hints.set_mesh(None)
+    with open(cache_file, "w") as f:
+        json.dump(result, f, indent=2)
+    return result
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+
+    from ..configs import ARCHS
+    from ..configs.base import SHAPES
+
+    archs = list(ARCHS) if (args.all or args.arch is None) else [args.arch]
+    shapes = list(SHAPES) if (args.all or args.shape is None) else [args.shape]
+    meshes = [False, True] if (args.both_meshes or args.all) else [args.multi_pod]
+
+    failures = 0
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                r = run_cell(arch, shape, multi_pod=mp, force=args.force)
+                status = r["status"]
+                extra = ""
+                if status == "ok":
+                    mem_gb = (
+                        r["memory"]["argument_bytes"] + r["memory"]["temp_bytes"]
+                    ) / 2**30
+                    extra = (
+                        f"mem/dev={mem_gb:.2f}GiB flops/dev={r['flops_per_device']:.3e} "
+                        f"compile={r['compile_s']}s"
+                    )
+                elif status == "error":
+                    failures += 1
+                    extra = r["error"][:160]
+                else:
+                    extra = r.get("reason", "")
+                print(f"[{status:7s}] {arch} {shape} {'multi' if mp else 'pod'} {extra}",
+                      flush=True)
+    sys.exit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,133 @@
+"""Training launcher.
+
+  PYTHONPATH=src python -m repro.launch.train --arch smollm-360m --smoke \
+      --steps 50 --checkpoint-dir /tmp/ckpt
+
+On a real pod this process runs per-host under the TPU runtime with
+``jax.distributed.initialize()`` (flag --distributed); on this container it
+drives the same code paths single-process. XLA performance flags for
+latency hiding / async collectives are set before jax import.
+"""
+
+import argparse
+import logging
+import os
+import sys
+
+
+def _set_xla_flags(n_fake_devices: int | None):
+    flags = []
+    # collective/compute overlap (latency-hiding scheduler) — TPU-only
+    # flags abort the CPU backend's flag parser, so gate on the runtime.
+    on_tpu = bool(os.environ.get("TPU_NAME") or os.environ.get("TPU_WORKER_ID"))
+    if on_tpu:
+        flags += [
+            "--xla_tpu_enable_async_collective_fusion=true",
+            "--xla_tpu_enable_async_collective_fusion_fuse_all_gather=true",
+            "--xla_tpu_overlap_compute_collective_tc=true",
+            "--xla_tpu_enable_async_all_gather=true",
+        ]
+    if n_fake_devices:
+        flags.append(f"--xla_force_host_platform_device_count={n_fake_devices}")
+    if flags:
+        os.environ["XLA_FLAGS"] = " ".join(
+            [os.environ.get("XLA_FLAGS", "")] + flags
+        ).strip()
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true", help="reduced config")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--global-batch", type=int, default=8)
+    ap.add_argument("--seq-len", type=int, default=128)
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--learning-rate", type=float, default=3e-4)
+    ap.add_argument("--pogo-lr", type=float, default=0.5)
+    ap.add_argument("--orthoptimizer", default="pogo")
+    ap.add_argument("--pogo-kernel", action="store_true")
+    ap.add_argument("--checkpoint-dir", default=None)
+    ap.add_argument("--save-every", type=int, default=50)
+    ap.add_argument("--fake-devices", type=int, default=None)
+    ap.add_argument("--mesh", default="none", choices=["none", "test", "test-multipod"])
+    ap.add_argument("--distributed", action="store_true")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    _set_xla_flags(args.fake_devices)
+    logging.basicConfig(level=logging.INFO, format="%(levelname)s %(name)s: %(message)s")
+
+    import jax
+
+    if args.distributed:
+        jax.distributed.initialize()
+
+    from ..configs import get_config
+    from ..data.pipeline import DataConfig, DataIterator
+    from ..distributed import shard_hints, sharding
+    from ..models import ortho, transformer as tfm
+    from ..train.loop import LoopConfig, train
+    from ..train.train_step import TrainConfig, make_train_step
+    from .mesh import make_test_mesh
+
+    cfg = get_config(args.arch, smoke=args.smoke)
+    mesh = None
+    if args.mesh != "none":
+        mesh = make_test_mesh(multi_pod=args.mesh == "test-multipod")
+        shard_hints.set_mesh(mesh)
+
+    key = jax.random.PRNGKey(args.seed)
+    params = tfm.init_params(key, cfg)
+    params = ortho.project_init(params, cfg)
+
+    train_cfg = TrainConfig(
+        learning_rate=args.learning_rate,
+        pogo_learning_rate=args.pogo_lr,
+        microbatches=args.microbatches,
+        orthoptimizer=args.orthoptimizer,
+        pogo_use_kernel=args.pogo_kernel,
+        warmup_steps=min(20, args.steps // 5 + 1),
+        decay_steps=args.steps,
+    )
+    step_fn, optimizer = make_train_step(cfg, train_cfg)
+    opt_state = optimizer.init(params)
+
+    token_sharding = None
+    if mesh is not None:
+        p_shard = sharding.param_shardings(params, mesh)
+        params = jax.device_put(params, p_shard)
+        o_specs = sharding.opt_state_specs(opt_state, params, mesh)
+        o_shard = jax.tree.map(
+            lambda s: jax.sharding.NamedSharding(mesh, s), o_specs,
+            is_leaf=lambda x: isinstance(x, jax.sharding.PartitionSpec),
+        )
+        opt_state = jax.device_put(opt_state, o_shard)
+        token_sharding = sharding.token_sharding(mesh, args.global_batch)
+
+    data = DataIterator(
+        DataConfig(
+            vocab_size=cfg.vocab_size,
+            seq_len=args.seq_len,
+            global_batch=args.global_batch,
+            seed=args.seed,
+        ),
+        sharding=token_sharding,
+    )
+
+    jit_step = jax.jit(step_fn, donate_argnums=(0, 1))
+    loop_cfg = LoopConfig(
+        total_steps=args.steps,
+        save_every=args.save_every,
+        checkpoint_dir=args.checkpoint_dir,
+    )
+    params, opt_state, step, history = train(
+        jit_step, params, opt_state, data, loop_cfg
+    )
+    final = history[-1][1] if history else {}
+    print(f"done: step={step} metrics={final}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

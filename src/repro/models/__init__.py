@@ -1,0 +1,14 @@
+"""Model zoo: composable blocks + assembly for the ten assigned archs."""
+
+from . import attention, frontends, layers, mamba, moe, ortho, rglru, transformer
+
+__all__ = [
+    "attention",
+    "frontends",
+    "layers",
+    "mamba",
+    "moe",
+    "ortho",
+    "rglru",
+    "transformer",
+]

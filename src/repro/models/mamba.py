@@ -1,0 +1,87 @@
+"""Mamba-1 selective SSM block (Gu & Dao 2023; falcon-mamba-7b arch).
+
+    x, z = split(in_proj(u))                     # (B, S, di) each
+    x    = causal_conv1d(x); x = silu(x)
+    dt   = softplus(dt_proj(W_dt x) + bias)      # (B, S, di)
+    B, C = W_B x, W_C x                          # (B, S, N)
+    h_t  = exp(dt * A) h_{t-1} + (dt * B_t) x_t  # diag A < 0, state (di, N)
+    y    = (h_t . C_t) + D * x;  out = out_proj(y * silu(z))
+
+Train/prefill: associative scan over S (sub-quadratic, parallel). Decode:
+O(1) carried state ``(h, conv_state)`` — the ``long_500k`` cell for
+falcon-mamba runs through this path.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import layers
+
+Array = jax.Array
+
+
+def init_mamba(key, cfg):
+    d = cfg.d_model
+    di = cfg.ssm_expand * d
+    n = cfg.ssm_state_dim
+    dt_rank = max(1, d // 16)
+    keys = jax.random.split(key, 8)
+    return {
+        "in_proj": layers.dense_init(keys[0], d, (2 * di,)),
+        "conv": layers.causal_conv1d_init(keys[1], di, cfg.ssm_conv_width or 4),
+        "w_dt_low": layers.dense_init(keys[2], di, dt_rank),
+        "w_dt": layers.dense_init(keys[3], dt_rank, di),
+        "dt_bias": jnp.log(jnp.expm1(jnp.full((di,), 1e-2, jnp.float32))),
+        "w_b": layers.dense_init(keys[4], di, n),
+        "w_c": layers.dense_init(keys[5], di, n),
+        # A = -exp(log_a): init log spacing 1..N per channel
+        "log_a": jnp.log(
+            jnp.broadcast_to(jnp.arange(1, n + 1, dtype=jnp.float32), (di, n))
+        ),
+        "d_skip": jnp.ones((di,), jnp.float32),
+        "out_proj": layers.dense_init(keys[6], di, d),
+    }
+
+
+def mamba_apply(params, u: Array, cfg, state=None, conv_state=None):
+    """u: (B, S, d). Returns (out, (h_state, conv_state))."""
+    dt_ = u.dtype
+    di = cfg.ssm_expand * cfg.d_model
+    proj = layers._mm(u, params["in_proj"].astype(dt_))
+    xs, z = proj[..., :di], proj[..., di:]
+    xs, new_conv = layers.causal_conv1d(params["conv"], xs, conv_state)
+    xs = jax.nn.silu(xs)
+
+    dt_low = layers._mm(xs, params["w_dt_low"].astype(dt_))
+    dt = jax.nn.softplus(
+        layers._mm(dt_low, params["w_dt"].astype(dt_)).astype(jnp.float32)
+        + params["dt_bias"]
+    )
+    bmat = layers._mm(xs, params["w_b"].astype(dt_)).astype(jnp.float32)
+    cmat = layers._mm(xs, params["w_c"].astype(dt_)).astype(jnp.float32)
+    a = -jnp.exp(params["log_a"])  # (di, N)
+    decay = jnp.exp(dt[..., None] * a)  # (B, S, di, N)
+    drive = (dt * xs.astype(jnp.float32))[..., None] * bmat[:, :, None, :]  # (B,S,di,N)
+
+    if u.shape[1] == 1 and state is not None:
+        h = decay[:, 0] * state + drive[:, 0]  # (B, di, N)
+        y = jnp.einsum("bdn,bn->bd", h, cmat[:, 0])[:, None]  # (B, 1, di)
+        new_state = h
+    else:
+        def combine(c1, c2):
+            a1, b1 = c1
+            a2, b2 = c2
+            return a1 * a2, a2 * b1 + b2
+
+        if state is not None:
+            drive = drive.at[:, 0].add(decay[:, 0] * state)
+        _, h = jax.lax.associative_scan(combine, (decay, drive), axis=1)
+        y = jnp.einsum("bsdn,bsn->bsd", h, cmat)  # (B, S, di)
+        new_state = h[:, -1]
+
+    y = y + params["d_skip"] * xs.astype(jnp.float32)
+    out = (y.astype(dt_) * jax.nn.silu(z)).astype(dt_)
+    out = layers._mm(out, params["out_proj"].astype(dt_))
+    return out, (new_state, new_conv)

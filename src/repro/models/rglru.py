@@ -1,0 +1,83 @@
+"""RG-LRU recurrent block (Griffin / RecurrentGemma, De et al. 2024).
+
+Recurrence (per channel):
+    r_t = sigmoid(W_r x_t);  i_t = sigmoid(W_i x_t)
+    a_t = exp(-c * softplus(Lambda) * r_t)            (c = 8)
+    h_t = a_t h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+
+Train/prefill evaluates the linear recurrence with an associative scan
+(O(log S) depth); decode carries ``h`` as an O(1) state — this is what makes
+the ``long_500k`` cell feasible for recurrentgemma.
+
+Block layout follows RecurrentGemma: input/gate branches, short causal
+conv, RG-LRU, gated merge, output projection.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import layers
+
+Array = jax.Array
+
+_C = 8.0
+
+
+def init_rglru(key, cfg):
+    d = cfg.d_model
+    w = getattr(cfg, "rnn_width", d)
+    k1, k2, k3, k4, k5, k6, k7 = jax.random.split(key, 7)
+    return {
+        "w_x": layers.dense_init(k1, d, w),
+        "w_y": layers.dense_init(k2, d, w),
+        "conv": layers.causal_conv1d_init(k3, w, cfg.ssm_conv_width or 4),
+        "w_r": layers.dense_init(k4, w, w),
+        "w_i": layers.dense_init(k5, w, w),
+        # Lambda parametrized so a^c in approx (0.9, 0.999) at init
+        "lam": jax.random.uniform(k6, (w,), jnp.float32, 2.0, 5.0),
+        "w_out": layers.dense_init(k7, w, d),
+    }
+
+
+def _gates(params, x):
+    r = jax.nn.sigmoid(layers._mm(x, params["w_r"].astype(x.dtype)).astype(jnp.float32))
+    i = jax.nn.sigmoid(layers._mm(x, params["w_i"].astype(x.dtype)).astype(jnp.float32))
+    log_a = -_C * jax.nn.softplus(params["lam"]) * r  # (B, S, w) fp32
+    a = jnp.exp(log_a)
+    gated_x = jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-12)) * (
+        i * x.astype(jnp.float32)
+    )
+    return a, gated_x
+
+
+def rglru_apply(params, x: Array, cfg, state: Array | None = None, conv_state=None):
+    """x: (B, S, d). Returns (out, (h_state, conv_state)) — states for decode."""
+    dt = x.dtype
+    xb = layers._mm(x, params["w_x"].astype(dt))
+    yb = jax.nn.gelu(layers._mm(x, params["w_y"].astype(dt)))
+    xb, new_conv = layers.causal_conv1d(params["conv"], xb, conv_state)
+    a, gx = _gates(params, xb)
+
+    if x.shape[1] == 1 and state is not None:
+        # decode: one recurrence step
+        h = a[:, 0] * state + gx[:, 0]
+        y = h[:, None]
+        new_state = h
+    else:
+        # associative scan over (a_t, b_t): (a2, b2) o (a1, b1) = (a1*a2, a2*b1 + b2)
+        def combine(c1, c2):
+            a1, b1 = c1
+            a2, b2 = c2
+            return a1 * a2, a2 * b1 + b2
+
+        if state is not None:
+            gx = gx.at[:, 0].add(a[:, 0] * state)
+        a_sc, h = jax.lax.associative_scan(combine, (a, gx), axis=1)
+        y = h
+        new_state = h[:, -1]
+
+    out = (y.astype(dt) * yb).astype(dt)
+    out = layers._mm(out, params["w_out"].astype(dt))
+    return out, (new_state, new_conv)

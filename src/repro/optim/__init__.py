@@ -1,0 +1,41 @@
+"""Optimizer substrate: optax-style transforms built from scratch."""
+
+from .alias import (adafactor, adam, adamw, muon, scale_by_adafactor, scale_by_adam, scale_by_vadam, sgd, trace, vadam)
+from .clip import clip_by_global_norm, clip_per_matrix
+from .partition import partition
+from .schedule import constant, linear, warmup_cosine
+from .transform import (
+    GradientTransformation,
+    apply_updates,
+    chain,
+    global_norm,
+    identity,
+    scale,
+    scale_by_learning_rate,
+)
+
+__all__ = [
+    "GradientTransformation",
+    "apply_updates",
+    "chain",
+    "identity",
+    "scale",
+    "scale_by_learning_rate",
+    "global_norm",
+    "sgd",
+    "adam",
+    "adamw",
+    "adafactor",
+    "scale_by_adafactor",
+    "vadam",
+    "muon",
+    "trace",
+    "scale_by_adam",
+    "scale_by_vadam",
+    "clip_by_global_norm",
+    "clip_per_matrix",
+    "partition",
+    "constant",
+    "linear",
+    "warmup_cosine",
+]

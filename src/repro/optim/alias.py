@@ -1,0 +1,300 @@
+"""Base optimizers: SGD / momentum / Adam / AdamW / VAdam / Muon-lite.
+
+The paper's key taxonomy (Def. 1): a base optimizer is *linear* iff its
+output is ``G \\propto A . grad`` — linear maps of the gradient commute with
+``Skew(X^H .)``, so applying them before or after the relative-gradient map
+is equivalent up to scale (Eq. 8). SGD and momentum-SGD are linear; Adam is
+NOT (elementwise normalization); VAdam (Ling et al. 2022) restores linearity
+by normalizing with a *scalar* per-matrix second moment. POGO therefore
+defaults to VAdam for adaptive behaviour.
+
+All optimizers are complex-safe: second moments use |g|^2 and updates stay in
+the input dtype's field.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from .transform import (
+    EmptyState,
+    GradientTransformation,
+    chain,
+    scale_by_learning_rate,
+)
+
+
+class TraceState(NamedTuple):
+    momentum: jax.Array  # pytree
+
+
+def trace(decay: float, nesterov: bool = False) -> GradientTransformation:
+    """Momentum accumulator (linear in the gradient history)."""
+
+    def init(params):
+        return TraceState(momentum=jax.tree.map(jnp.zeros_like, params))
+
+    def update(updates, state, params=None):
+        new_m = jax.tree.map(lambda m, u: decay * m + u, state.momentum, updates)
+        if nesterov:
+            out = jax.tree.map(lambda m, u: decay * m + u, new_m, updates)
+        else:
+            out = new_m
+        return out, TraceState(momentum=new_m)
+
+    return GradientTransformation(init, update)
+
+
+class ScaleByAdamState(NamedTuple):
+    count: jax.Array
+    mu: jax.Array
+    nu: jax.Array
+
+
+def scale_by_adam(b1=0.9, b2=0.999, eps=1e-8) -> GradientTransformation:
+    def init(params):
+        mu = jax.tree.map(jnp.zeros_like, params)
+        nu = jax.tree.map(lambda p: jnp.zeros_like(p, dtype=_real_dtype(p.dtype)), params)
+        return ScaleByAdamState(count=jnp.zeros([], jnp.int32), mu=mu, nu=nu)
+
+    def update(updates, state, params=None):
+        count = state.count + 1
+        mu = jax.tree.map(lambda m, g: b1 * m + (1 - b1) * g, state.mu, updates)
+        nu = jax.tree.map(
+            lambda v, g: b2 * v + (1 - b2) * jnp.abs(g) ** 2, state.nu, updates
+        )
+        c1 = 1 - b1**count.astype(jnp.float32)
+        c2 = 1 - b2**count.astype(jnp.float32)
+        out = jax.tree.map(
+            lambda m, v: (m / c1) / (jnp.sqrt(v / c2) + eps).astype(m.dtype), mu, nu
+        )
+        return out, ScaleByAdamState(count=count, mu=mu, nu=nu)
+
+    return GradientTransformation(init, update)
+
+
+class ScaleByVAdamState(NamedTuple):
+    count: jax.Array
+    mu: jax.Array
+    nu: jax.Array  # scalar second moment per leaf (vector-wise normalization)
+
+
+def scale_by_vadam(b1=0.9, b2=0.999, eps=1e-8) -> GradientTransformation:
+    """VAdam (Ling et al. 2022): Adam with *per-tensor scalar* normalization.
+
+    The second moment tracks the squared Frobenius norm of the whole tensor
+    ("the matrix is the vector"): ``G = (m / c1) / (sqrt(||g||^2_ema / c2) + eps)``.
+    Output = scalar * (linear momentum of grads) => linear in the sense of
+    Def. 1, hence equivariant for the relative gradient (Eq. 8). Because the
+    output norm is ~1 per matrix, it adaptively enforces the paper's
+    Assumption 1 (``||G|| <= L ~ 1``), which is what lets POGO run with
+    lambda = 1/2 at large learning rates (Thm. 3.5 needs xi = eta L < 1).
+
+    For stacked leaves ``(..., p, n)`` (layers x heads of orthogonal mats)
+    normalization is per *matrix*, not per leaf, matching the per-matrix
+    statement of Assumption 1.
+    """
+
+    def _sq_norm(g):
+        if g.ndim >= 2:
+            return jnp.sum(jnp.abs(g) ** 2, axis=(-2, -1))  # per matrix
+        return jnp.sum(jnp.abs(g) ** 2)
+
+    def init(params):
+        mu = jax.tree.map(jnp.zeros_like, params)
+        nu = jax.tree.map(
+            lambda p: jnp.zeros(p.shape[:-2] if p.ndim >= 2 else (), _real_dtype(p.dtype)),
+            params,
+        )
+        return ScaleByVAdamState(count=jnp.zeros([], jnp.int32), mu=mu, nu=nu)
+
+    def update(updates, state, params=None):
+        count = state.count + 1
+        mu = jax.tree.map(lambda m, g: b1 * m + (1 - b1) * g, state.mu, updates)
+        nu = jax.tree.map(
+            lambda v, g: b2 * v + (1 - b2) * _sq_norm(g).astype(v.dtype),
+            state.nu,
+            updates,
+        )
+        c1 = 1 - b1**count.astype(jnp.float32)
+        c2 = 1 - b2**count.astype(jnp.float32)
+
+        def norm(m, v):
+            denom = (jnp.sqrt(v / c2) + eps).astype(_real_dtype(m.dtype))
+            if m.ndim >= 2:
+                denom = denom[..., None, None]
+            return (m / c1) / denom
+
+        out = jax.tree.map(norm, mu, nu)
+        return out, ScaleByVAdamState(count=count, mu=mu, nu=nu)
+
+    return GradientTransformation(init, update)
+
+
+class ScaleByAdafactorState(NamedTuple):
+    count: jax.Array
+    vr: jax.Array  # row second-moment (shape[:-1]) per >=2D leaf
+    vc: jax.Array  # col second-moment (shape[:-2] + shape[-1:])
+    v: jax.Array  # full second moment for <2D leaves
+
+
+def scale_by_adafactor(
+    decay: float = 0.8, eps: float = 1e-30, clip_threshold: float = 1.0
+) -> GradientTransformation:
+    """Adafactor second-moment scaling (Shazeer & Stern 2018), no momentum.
+
+    Factored (row, col) statistics cut optimizer state from O(nm) to
+    O(n + m) per matrix — the difference between fitting and not fitting
+    a 141B-param model's optimizer on a 16 GiB/chip pod (see DESIGN.md).
+    """
+
+    def init(params):
+        def rows(p):
+            return jnp.zeros(p.shape[:-1], jnp.float32) if p.ndim >= 2 else jnp.zeros([], jnp.float32)
+
+        def cols(p):
+            return (
+                jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32)
+                if p.ndim >= 2
+                else jnp.zeros([], jnp.float32)
+            )
+
+        def full(p):
+            return jnp.zeros(p.shape, jnp.float32) if p.ndim < 2 else jnp.zeros([], jnp.float32)
+
+        return ScaleByAdafactorState(
+            count=jnp.zeros([], jnp.int32),
+            vr=jax.tree.map(rows, params),
+            vc=jax.tree.map(cols, params),
+            v=jax.tree.map(full, params),
+        )
+
+    def update(updates, state, params=None):
+        count = state.count + 1
+        t = count.astype(jnp.float32)
+        beta = 1.0 - t**-decay  # increasing-decay schedule
+
+        def upd(g, vr, vc, v):
+            g32 = g.astype(jnp.float32)
+            if g.ndim >= 2:
+                new_vr = beta * vr + (1 - beta) * jnp.mean(g32 * g32 + eps, axis=-1)
+                new_vc = beta * vc + (1 - beta) * jnp.mean(g32 * g32 + eps, axis=-2)
+                denom = jnp.maximum(jnp.mean(new_vr, axis=-1, keepdims=True), eps)
+                vhat = (
+                    new_vr[..., None] * new_vc[..., None, :] / denom[..., None]
+                )
+                out = g32 * jax.lax.rsqrt(vhat + eps)
+                new_v = v
+            else:
+                new_v = beta * v + (1 - beta) * (g32 * g32 + eps)
+                out = g32 * jax.lax.rsqrt(new_v + eps)
+                new_vr, new_vc = vr, vc
+            # update clipping (RMS <= clip_threshold)
+            rms = jnp.sqrt(jnp.mean(out * out) + 1e-30)
+            out = out / jnp.maximum(1.0, rms / clip_threshold)
+            return out.astype(g.dtype), new_vr, new_vc, new_v
+
+        flat_g, treedef = jax.tree.flatten(updates)
+        flat = [
+            upd(g, vr, vc, v)
+            for g, vr, vc, v in zip(
+                flat_g,
+                jax.tree.leaves(state.vr),
+                jax.tree.leaves(state.vc),
+                jax.tree.leaves(state.v),
+            )
+        ]
+        out = jax.tree.unflatten(treedef, [f[0] for f in flat])
+        new_state = ScaleByAdafactorState(
+            count=count,
+            vr=jax.tree.unflatten(treedef, [f[1] for f in flat]),
+            vc=jax.tree.unflatten(treedef, [f[2] for f in flat]),
+            v=jax.tree.unflatten(treedef, [f[3] for f in flat]),
+        )
+        return out, new_state
+
+    return GradientTransformation(init, update)
+
+
+def adafactor(learning_rate, decay: float = 0.8) -> GradientTransformation:
+    return chain(scale_by_adafactor(decay), scale_by_learning_rate(learning_rate))
+
+
+def _real_dtype(dtype):
+    if jnp.issubdtype(dtype, jnp.complexfloating):
+        return jnp.float64 if dtype == jnp.complex128 else jnp.float32
+    return dtype
+
+
+class AddDecayedWeightsState(NamedTuple):
+    pass
+
+
+def add_decayed_weights(weight_decay: float) -> GradientTransformation:
+    def init(params):
+        return AddDecayedWeightsState()
+
+    def update(updates, state, params=None):
+        if params is None:
+            raise ValueError("add_decayed_weights requires params")
+        updates = jax.tree.map(lambda u, p: u + weight_decay * p.astype(u.dtype), updates, params)
+        return updates, state
+
+    return GradientTransformation(init, update)
+
+
+def sgd(learning_rate, momentum: float = 0.0, nesterov: bool = False) -> GradientTransformation:
+    parts = []
+    if momentum:
+        parts.append(trace(momentum, nesterov))
+    parts.append(scale_by_learning_rate(learning_rate))
+    return chain(*parts)
+
+
+def adam(learning_rate, b1=0.9, b2=0.999, eps=1e-8) -> GradientTransformation:
+    return chain(scale_by_adam(b1, b2, eps), scale_by_learning_rate(learning_rate))
+
+
+def adamw(
+    learning_rate, b1=0.9, b2=0.999, eps=1e-8, weight_decay=0.01
+) -> GradientTransformation:
+    return chain(
+        scale_by_adam(b1, b2, eps),
+        add_decayed_weights(weight_decay),
+        scale_by_learning_rate(learning_rate),
+    )
+
+
+def vadam(learning_rate, b1=0.9, b2=0.999, eps=1e-8) -> GradientTransformation:
+    return chain(scale_by_vadam(b1, b2, eps), scale_by_learning_rate(learning_rate))
+
+
+def scale_by_muon(momentum: float = 0.95, ns_iters: int = 5) -> GradientTransformation:
+    """Muon-lite (Jordan et al. 2024): momentum + Newton-Schulz orthogonalized
+    update for 2-D leaves. Included as an unconstrained baseline the paper
+    cites; NOT linear in the Def.-1 sense (kept out of POGO's base slot).
+    """
+    from ..core import stiefel
+
+    def init(params):
+        return TraceState(momentum=jax.tree.map(jnp.zeros_like, params))
+
+    def update(updates, state, params=None):
+        new_m = jax.tree.map(lambda m, u: momentum * m + u, state.momentum, updates)
+
+        def orth(u):
+            if u.ndim < 2 or u.shape[-2] > u.shape[-1]:
+                return u
+            return stiefel.project_newton_schulz(u, iters=ns_iters).astype(u.dtype)
+
+        out = jax.tree.map(orth, new_m)
+        return out, TraceState(momentum=new_m)
+
+    return GradientTransformation(init, update)
+
+
+def muon(learning_rate, momentum: float = 0.95) -> GradientTransformation:
+    return chain(scale_by_muon(momentum), scale_by_learning_rate(learning_rate))

@@ -1,0 +1,54 @@
+"""Gradient clipping / norm control.
+
+``clip_by_global_norm`` is the standard trainer guard. ``clip_per_matrix``
+enforces the paper's Thm.-3.5 condition xi = eta * ||G|| < 1 *per orthogonal
+matrix* — together with VAdam's scalar normalization this is what lets POGO
+run with lambda fixed at 1/2.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from .transform import EmptyState, GradientTransformation, global_norm
+
+
+def clip_by_global_norm(max_norm: float) -> GradientTransformation:
+    def init(params):
+        return EmptyState()
+
+    def update(updates, state, params=None):
+        norm = global_norm(updates)
+        scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-12))
+        updates = jax.tree.map(lambda u: (u * scale).astype(u.dtype), updates)
+        return updates, state
+
+    return GradientTransformation(init, update)
+
+
+def clip_per_matrix(max_norm: float) -> GradientTransformation:
+    """Clip each leaf's last-two-dims Frobenius norm to ``max_norm``.
+
+    Leaves with leading batch dims (stacked per-layer/per-head orthogonal
+    matrices) are clipped per matrix, not per leaf.
+    """
+
+    def init(params):
+        return EmptyState()
+
+    def update(updates, state, params=None):
+        def clip(u):
+            if u.ndim < 2:
+                n = jnp.abs(u)
+                s = jnp.minimum(1.0, max_norm / jnp.maximum(n, 1e-12))
+                return (u * s).astype(u.dtype)
+            n = jnp.sqrt(jnp.sum(jnp.abs(u.astype(jnp.float32)) ** 2, axis=(-2, -1), keepdims=True))
+            s = jnp.minimum(1.0, max_norm / jnp.maximum(n, 1e-12))
+            return (u * s.astype(u.dtype)) if not jnp.issubdtype(u.dtype, jnp.complexfloating) else (u * s)
+
+        return jax.tree.map(clip, updates), state
+
+    return GradientTransformation(init, update)

@@ -1,0 +1,72 @@
+"""Label-based optimizer partitioning (optax.multi_transform equivalent).
+
+The trainer splits the parameter pytree by label — ``"orthogonal"`` leaves
+(stacked Stiefel matrices selected by ``models.ortho``) get POGO; everything
+else (``"default"``) gets AdamW. Labels are a pytree of strings with the
+same structure as the params, or a callable producing one.
+
+Implementation: flatten once, group leaf indices by label, run each inner
+transform over its own flat list-pytree, scatter updates back. This keeps
+inner transforms completely unaware of masking.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Callable, Mapping, NamedTuple, Union
+
+import jax
+
+from .transform import GradientTransformation
+
+PyTree = Any
+
+
+class PartitionState(NamedTuple):
+    inner_states: dict  # {label: inner state} — keys live in the treedef
+
+
+def _resolve(labels, params, transforms):
+    lab = labels(params) if callable(labels) else labels
+    lab_flat, lab_def = jax.tree.flatten(lab)
+    p_flat, p_def = jax.tree.flatten(params)
+    if lab_def != p_def:
+        raise ValueError(f"label structure {lab_def} != param structure {p_def}")
+    for l in lab_flat:
+        if l not in transforms:
+            raise ValueError(f"label {l!r} has no transform (have {list(transforms)})")
+    return lab_flat, p_flat, p_def
+
+
+def partition(
+    transforms: Mapping[str, GradientTransformation],
+    labels: Union[PyTree, Callable[[PyTree], PyTree]],
+) -> GradientTransformation:
+    names = tuple(transforms)
+
+    def init(params):
+        lab_flat, p_flat, _ = _resolve(labels, params, transforms)
+        states = {}
+        for name in names:
+            sub = [p for p, l in zip(p_flat, lab_flat) if l == name]
+            states[name] = transforms[name].init(sub)
+        return PartitionState(inner_states=states)
+
+    def update(grads, state, params=None):
+        ref = params if params is not None else grads
+        lab_flat, _, _ = _resolve(labels, ref, transforms)
+        g_flat, g_def = jax.tree.flatten(grads)
+        p_flat = jax.tree.flatten(params)[0] if params is not None else None
+        out_flat = list(g_flat)
+        new_states = {}
+        for name in names:
+            idx = [i for i, l in enumerate(lab_flat) if l == name]
+            sub_g = [g_flat[i] for i in idx]
+            sub_p = [p_flat[i] for i in idx] if p_flat is not None else None
+            upd, new_states[name] = transforms[name].update(
+                sub_g, state.inner_states[name], sub_p
+            )
+            for i, u in zip(idx, upd):
+                out_flat[i] = u
+        return jax.tree.unflatten(g_def, out_flat), PartitionState(new_states)
+
+    return GradientTransformation(init, update)

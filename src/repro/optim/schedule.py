@@ -1,0 +1,31 @@
+"""Learning-rate schedules (callables: step -> scale)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def constant(value: float):
+    def schedule(count):
+        return jnp.asarray(value, jnp.float32)
+
+    return schedule
+
+
+def linear(init_value: float, end_value: float, transition_steps: int):
+    def schedule(count):
+        frac = jnp.clip(count.astype(jnp.float32) / max(transition_steps, 1), 0.0, 1.0)
+        return init_value + frac * (end_value - init_value)
+
+    return schedule
+
+
+def warmup_cosine(peak_value: float, warmup_steps: int, decay_steps: int, end_value: float = 0.0):
+    def schedule(count):
+        count = count.astype(jnp.float32)
+        warm = peak_value * count / jnp.maximum(warmup_steps, 1)
+        frac = jnp.clip((count - warmup_steps) / jnp.maximum(decay_steps - warmup_steps, 1), 0.0, 1.0)
+        cos = end_value + 0.5 * (peak_value - end_value) * (1 + jnp.cos(jnp.pi * frac))
+        return jnp.where(count < warmup_steps, warm, cos)
+
+    return schedule

@@ -1,0 +1,158 @@
+"""The jitted training step: loss + grad + partitioned optimizer update.
+
+The optimizer is the paper's technique made first-class: orthogonal leaves
+(``models.ortho.label_tree``) are updated by POGO (VAdam base, fused-kernel
+option), everything else by AdamW. Microbatch gradient accumulation runs as
+a ``lax.scan`` so the grad all-reduce of microbatch *i* can overlap the
+compute of *i+1* under XLA's latency-hiding scheduler.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from .. import optim
+from ..core import pogo as _pogo_module  # noqa: F401 (shadowed by re-export)
+from ..core.pogo import pogo as pogo_fn
+from ..models import ortho, transformer as tfm
+
+PyTree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainConfig:
+    learning_rate: float = 3e-4
+    pogo_learning_rate: float = 0.5
+    weight_decay: float = 0.01
+    grad_clip: float = 1.0
+    pogo_lam: float = 0.5
+    pogo_find_root: bool = False
+    pogo_use_kernel: bool = False
+    pogo_base: str = "vadam"  # "vadam" | "sgd" | "momentum"
+    microbatches: int = 1
+    default_opt: str = "adamw"  # "adamw" | "adafactor" (pod-scale memory)
+    warmup_steps: int = 100
+    decay_steps: int = 10000
+    orthoptimizer: str = "pogo"  # or any core.ORTHOPTIMIZERS key (baselines)
+
+
+def make_optimizer(cfg, train_cfg: TrainConfig) -> optim.GradientTransformation:
+    sched = optim.warmup_cosine(
+        train_cfg.learning_rate, train_cfg.warmup_steps, train_cfg.decay_steps
+    )
+    if train_cfg.default_opt == "adafactor":
+        # no global-norm clip: Adafactor's built-in update clipping replaces
+        # it (and skips a full param-sized fp32 temp at 141B scale)
+        default_opt = optim.chain(
+            optim.scale_by_adafactor(),
+            optim.scale_by_learning_rate(sched),
+        )
+    else:
+        default_opt = optim.chain(
+            optim.clip_by_global_norm(train_cfg.grad_clip),
+            optim.scale_by_adam(),
+            optim.alias.add_decayed_weights(train_cfg.weight_decay),
+            optim.scale_by_learning_rate(sched),
+        )
+    base = {
+        "vadam": optim.chain(optim.scale_by_vadam()),
+        "sgd": None,
+        "momentum": optim.chain(optim.trace(0.9)),
+    }[train_cfg.pogo_base]
+    if train_cfg.orthoptimizer == "pogo":
+        ortho_opt = pogo_fn(
+            learning_rate=train_cfg.pogo_learning_rate,
+            lam=train_cfg.pogo_lam,
+            find_root=train_cfg.pogo_find_root,
+            base_optimizer=base,
+            use_kernel=train_cfg.pogo_use_kernel,
+        )
+    else:
+        from ..core import ORTHOPTIMIZERS
+
+        ortho_opt = ORTHOPTIMIZERS[train_cfg.orthoptimizer](
+            learning_rate=train_cfg.pogo_learning_rate
+        )
+    return optim.partition(
+        {"orthogonal": ortho_opt, "default": default_opt},
+        lambda params: ortho.label_tree(params, cfg),
+    )
+
+
+def make_train_step(cfg, train_cfg: TrainConfig, optimizer=None):
+    optimizer = optimizer or make_optimizer(cfg, train_cfg)
+
+    def train_step(params, opt_state, batch):
+        """batch: {tokens/labels/...: (B, ...)}; microbatching reshapes to
+        (M, B/M, ...) and accumulates grads with a lax.scan — the grad
+        all-reduce of microbatch i overlaps compute of i+1 under the
+        latency-hiding scheduler."""
+
+        def loss_for(p, mb):
+            loss, metrics = tfm.loss_fn(p, cfg, mb)
+            return loss, metrics
+
+        m = train_cfg.microbatches
+        if m > 1:
+            mb_batch = jax.tree.map(
+                lambda x: x.reshape(m, x.shape[0] // m, *x.shape[1:]), batch
+            )
+
+            def acc_step(carry, mb):
+                gsum, lsum = carry
+                (loss, metrics), g = jax.value_and_grad(loss_for, has_aux=True)(
+                    params, mb
+                )
+                gsum = jax.tree.map(jnp.add, gsum, g)
+                return (gsum, lsum + loss), None
+
+            zeros = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params
+            )
+            (gsum, lsum), _ = jax.lax.scan(
+                acc_step, (zeros, jnp.zeros([], jnp.float32)), mb_batch
+            )
+            grads = jax.tree.map(lambda g: (g / m).astype(jnp.float32), gsum)
+            loss = lsum / m
+        else:
+            (loss, metrics), grads = jax.value_and_grad(loss_for, has_aux=True)(
+                params, batch
+            )
+
+        updates, opt_state = optimizer.update(grads, opt_state, params)
+        params = optim.apply_updates(params, updates)
+        metrics_out = {
+            "loss": loss,
+            "grad_norm": optim.global_norm(grads),
+            "ortho_distance": _pogo_distance(opt_state),
+        }
+        return params, opt_state, metrics_out
+
+    return train_step, optimizer
+
+
+def _pogo_distance(opt_state) -> jax.Array:
+    """Max manifold distance across POGO-managed leaves (free telemetry)."""
+    dists = []
+
+    def visit(s):
+        if hasattr(s, "last_distance"):  # PogoState / LandingState / RgdState...
+            dists.extend(jax.tree.leaves(s.last_distance))
+            return
+        if hasattr(s, "inner_states"):  # PartitionState
+            for inner in s.inner_states.values():
+                visit(inner)
+            return
+        if isinstance(s, (tuple, list)):
+            for item in s:
+                visit(item)
+
+    visit(opt_state)
+    if not dists:
+        return jnp.zeros([], jnp.float32)
+    return jnp.max(jnp.stack(dists))

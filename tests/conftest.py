@@ -1,0 +1,10 @@
+"""Shared fixtures. NOTE: no xla_force_host_platform_device_count here —
+smoke tests and benches must see 1 device (multi-device tests subprocess)."""
+
+import jax
+import pytest
+
+
+@pytest.fixture(scope="session")
+def rng_key():
+    return jax.random.PRNGKey(0)

@@ -1,0 +1,72 @@
+"""Complex Stiefel manifold (paper Sec. 5.3: squared unitary PCs)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import optim
+from repro.core import pogo, stiefel
+
+KEY = jax.random.PRNGKey(0)
+
+
+def test_complex_random_stiefel():
+    x = stiefel.random_stiefel(KEY, (3, 10, 64), jnp.complex64)
+    assert x.dtype == jnp.complex64
+    assert float(jnp.max(stiefel.manifold_distance(x))) < 1e-4
+
+
+def test_complex_riemannian_gradient_tangent():
+    x = stiefel.random_stiefel(KEY, (10, 64), jnp.complex64)
+    g = (jax.random.normal(jax.random.PRNGKey(1), (10, 64))
+         + 1j * jax.random.normal(jax.random.PRNGKey(2), (10, 64))).astype(jnp.complex64)
+    r = stiefel.riemannian_gradient(x, g)
+    t = r @ jnp.conj(x.T) + x @ jnp.conj(r.T)
+    assert float(jnp.max(jnp.abs(t))) < 1e-4
+
+
+def test_complex_pogo_stays_unitary():
+    """The paper's PC setting in miniature: fit complex wide matrices."""
+    shape = (4, 10, 48)
+    x = stiefel.random_stiefel(KEY, shape, jnp.complex64)
+    target = stiefel.random_stiefel(jax.random.PRNGKey(3), shape, jnp.complex64)
+
+    def loss(x):
+        return jnp.sum(jnp.abs(x - target) ** 2)
+
+    opt = pogo.pogo(0.2, base_optimizer=optim.chain(optim.scale_by_vadam()))
+    state = opt.init(x)
+
+    @jax.jit
+    def step(x, state):
+        g = jax.grad(loss)(x)  # JAX convention: conj gradient for complex
+        g = jnp.conj(g)
+        u, state = opt.update(g, state, x)
+        return x + u, state
+
+    l0 = float(loss(x))
+    for _ in range(200):
+        x, state = step(x, state)
+    assert float(loss(x)) < 0.5 * l0
+    assert float(jnp.max(stiefel.manifold_distance(x))) < 1e-4
+
+
+def test_complex_find_root_mode():
+    shape = (2, 6, 24)
+    x = stiefel.random_stiefel(KEY, shape, jnp.complex64)
+    g = 0.3 * stiefel.random_stiefel(jax.random.PRNGKey(4), shape, jnp.complex64)
+    opt = pogo.pogo(0.1, find_root=True)
+    state = opt.init(x)
+    u, state = opt.update(g, state, x)
+    x1 = x + u
+    assert float(jnp.max(stiefel.manifold_distance(x1))) < 1e-3
+
+
+def test_complex_projections():
+    x = stiefel.random_stiefel(KEY, (6, 20), jnp.complex64)
+    y = x + 0.05 * stiefel.random_stiefel(jax.random.PRNGKey(5), (6, 20), jnp.complex64)
+    for proj in (stiefel.project_qr, stiefel.project_polar, stiefel.project_newton_schulz):
+        z = proj(y)
+        assert z.dtype == jnp.complex64
+        assert float(stiefel.manifold_distance(z)) < 1e-3, proj.__name__

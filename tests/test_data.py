@@ -1,0 +1,71 @@
+"""Data pipeline: determinism, restart-safety, packing, host sharding."""
+
+import numpy as np
+
+from repro.data.pipeline import DataConfig, DataIterator, host_batch, pack_documents
+
+
+def _cfg(**kw):
+    base = dict(vocab_size=128, seq_len=16, global_batch=4, seed=3)
+    base.update(kw)
+    return DataConfig(**base)
+
+
+def test_deterministic_per_step():
+    cfg = _cfg()
+    a = host_batch(cfg, step=5)
+    b = host_batch(cfg, step=5)
+    np.testing.assert_array_equal(a["tokens"], b["tokens"])
+    c = host_batch(cfg, step=6)
+    assert not np.array_equal(a["tokens"], c["tokens"])
+
+
+def test_restart_replays_stream():
+    """Resume-from-step yields the identical stream (fault tolerance)."""
+    cfg = _cfg()
+    it1 = DataIterator(cfg)
+    batches = [next(it1) for _ in range(5)]
+    it2 = DataIterator(cfg, start_step=3)
+    b3 = next(it2)
+    np.testing.assert_array_equal(np.asarray(batches[3]["tokens"]), np.asarray(b3["tokens"]))
+
+
+def test_host_sharding_disjoint():
+    cfg = _cfg(global_batch=8)
+    h0 = host_batch(cfg, 0, host_index=0, host_count=2)
+    h1 = host_batch(cfg, 0, host_index=1, host_count=2)
+    assert h0["tokens"].shape == (4, 16)
+    assert not np.array_equal(h0["tokens"], h1["tokens"])
+
+
+def test_labels_are_shifted_tokens():
+    cfg = _cfg()
+    b = host_batch(cfg, 0)
+    np.testing.assert_array_equal(b["tokens"][:, 1:], b["labels"][:, :-1])
+
+
+def test_markov_stream_is_learnable():
+    """The synthetic stream has structure: next-token entropy << uniform."""
+    cfg = _cfg(kind="markov", vocab_size=64, seq_len=512, global_batch=2)
+    b = host_batch(cfg, 0)
+    toks = b["tokens"]
+    # transitions concentrate: count distinct successors of each token
+    succ = {}
+    for row in toks:
+        for a, bb in zip(row[:-1], row[1:]):
+            succ.setdefault(int(a), set()).add(int(bb))
+    avg_succ = np.mean([len(v) for v in succ.values()])
+    assert avg_succ <= 8  # << vocab 64 (uniform would approach min(count, 64))
+
+
+def test_pack_documents_masks_boundaries():
+    docs = [np.arange(1, 6), np.arange(10, 13)]
+    packed = pack_documents(docs, seq_len=5)
+    assert packed["tokens"].shape[1] == 5
+    assert (packed["labels"] == -1).sum() >= 1
+
+
+def test_bounds():
+    cfg = _cfg(kind="markov")
+    b = host_batch(cfg, 0)
+    assert b["tokens"].min() >= 0 and b["tokens"].max() < cfg.vocab_size

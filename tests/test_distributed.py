@@ -1,0 +1,228 @@
+"""Distributed correctness on 8 fake devices — run in SUBPROCESSES so the
+main pytest session keeps its single CPU device (per the assignment, smoke
+tests must see 1 device)."""
+
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+REPO_SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+
+def _run(body: str, n_devices: int = 8, timeout: int = 900):
+    prog = textwrap.dedent(
+        f"""
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count={n_devices}"
+        import jax
+        import jax.numpy as jnp
+        import numpy as np
+        assert len(jax.devices()) == {n_devices}
+        """
+    ) + textwrap.dedent(body)
+    env = dict(os.environ)
+    env["PYTHONPATH"] = REPO_SRC + os.pathsep + env.get("PYTHONPATH", "")
+    env.pop("XLA_FLAGS", None)
+    res = subprocess.run(
+        [sys.executable, "-c", prog], env=env, capture_output=True, text=True,
+        timeout=timeout,
+    )
+    assert res.returncode == 0, f"stdout:\n{res.stdout}\nstderr:\n{res.stderr[-3000:]}"
+    return res.stdout
+
+
+def test_sharded_train_step_matches_single_device():
+    """The same smoke train step on a (4, 2) mesh reproduces the 1-device
+    loss trajectory — sharding must not change semantics."""
+    _run(
+        """
+        from repro.configs import get_config
+        from repro.distributed import shard_hints, sharding
+        from repro.launch.mesh import make_test_mesh
+        from repro.models import ortho, transformer as tfm
+        from repro.train.train_step import TrainConfig, make_train_step
+
+        cfg = get_config("smollm-360m", smoke=True)
+        key = jax.random.PRNGKey(0)
+        params = ortho.project_init(tfm.init_params(key, cfg), cfg)
+        batch = {
+            "tokens": jax.random.randint(key, (8, 32), 0, cfg.vocab_size),
+            "labels": jax.random.randint(key, (8, 32), 0, cfg.vocab_size),
+        }
+        tc = TrainConfig(microbatches=2, warmup_steps=1, decay_steps=10)
+        step_fn, optimizer = make_train_step(cfg, tc)
+        opt_state = optimizer.init(params)
+
+        # reference: no mesh
+        p_ref, o_ref, m_ref = jax.jit(step_fn)(params, opt_state, batch)
+        losses_ref = float(m_ref["loss"])
+
+        # sharded
+        mesh = make_test_mesh(8)
+        shard_hints.set_mesh(mesh)
+        step_fn2, optimizer2 = make_train_step(cfg, tc)
+        p_sh = sharding.param_shardings(params, mesh)
+        params_s = jax.device_put(params, p_sh)
+        o_specs = sharding.opt_state_specs(opt_state, params, mesh)
+        o_sh = jax.tree.map(
+            lambda s: jax.sharding.NamedSharding(mesh, s), o_specs,
+            is_leaf=lambda x: isinstance(x, jax.sharding.PartitionSpec))
+        opt_s = jax.device_put(optimizer2.init(params_s), o_sh)
+        tok_sh = sharding.token_sharding(mesh, 8)
+        batch_s = {k: jax.device_put(v, tok_sh) for k, v in batch.items()}
+        with mesh:
+            p2, o2, m2 = jax.jit(step_fn2)(params_s, opt_s, batch_s)
+        losses_sh = float(m2["loss"])
+        print("ref", losses_ref, "sharded", losses_sh)
+        assert abs(losses_ref - losses_sh) < 0.05 * (1 + abs(losses_ref))
+        # params close too (bf16 tolerance)
+        for a, b in zip(jax.tree.leaves(p_ref), jax.tree.leaves(p2)):
+            np.testing.assert_allclose(
+                np.asarray(a, np.float32), np.asarray(b, np.float32),
+                atol=0.05, rtol=0.05)
+        print("OK")
+        """
+    )
+
+
+def test_tiny_mesh_dryrun_all_archs():
+    """Every arch's train entry lowers+compiles on a (2, 2, 2) multi-pod
+    test mesh with reduced configs — the mesh-portability contract."""
+    _run(
+        """
+        from repro.configs import ARCHS, get_config
+        from repro.distributed import shard_hints, sharding
+        from repro.launch.mesh import make_test_mesh
+        from repro.models import transformer as tfm
+        from repro.train.train_step import TrainConfig, make_train_step
+
+        mesh = make_test_mesh(8, multi_pod=True)
+        shard_hints.set_mesh(mesh)
+        for arch in sorted(ARCHS):
+            cfg = get_config(arch, smoke=True)
+            tc = TrainConfig(microbatches=1, warmup_steps=1, decay_steps=10)
+            step_fn, optimizer = make_train_step(cfg, tc)
+            params_sds = jax.eval_shape(
+                lambda: tfm.init_params(jax.random.PRNGKey(0), cfg))
+            opt_sds = jax.eval_shape(optimizer.init, params_sds)
+            p_sh = sharding.param_shardings(params_sds, mesh)
+            o_specs = sharding.opt_state_specs(opt_sds, params_sds, mesh)
+            def att(tree, sh):
+                return jax.tree.map(
+                    lambda sd, s: jax.ShapeDtypeStruct(sd.shape, sd.dtype, sharding=s),
+                    tree, sh)
+            params_in = att(params_sds, p_sh)
+            o_sh = jax.tree.map(
+                lambda s: jax.sharding.NamedSharding(mesh, s), o_specs,
+                is_leaf=lambda x: isinstance(x, jax.sharding.PartitionSpec))
+            opt_in = att(opt_sds, o_sh)
+            toks = jax.ShapeDtypeStruct((8, 32), jnp.int32,
+                sharding=sharding.token_sharding(mesh, 8))
+            batch_in = {"tokens": toks, "labels": toks}
+            if cfg.frontend and not cfg.encoder_layers:
+                batch_in["frontend_embeds"] = jax.ShapeDtypeStruct(
+                    (8, cfg.num_frontend_tokens, cfg.d_model), cfg.dtype)
+            if cfg.encoder_layers:
+                if cfg.frontend:
+                    batch_in["frontend_embeds"] = jax.ShapeDtypeStruct(
+                        (8, cfg.num_frontend_tokens, cfg.d_model), cfg.dtype)
+                else:
+                    batch_in["encoder_tokens"] = toks
+            with mesh:
+                compiled = jax.jit(step_fn).lower(params_in, opt_in, batch_in).compile()
+            assert compiled.cost_analysis() is not None
+            print(arch, "ok")
+        print("OK")
+        """,
+        timeout=1800,
+    )
+
+
+def test_compressed_allreduce_error_feedback():
+    """int8 EF-psum: mean is exact-ish per step and EF drives long-run
+    bias to zero (compressed SGD converges on a quadratic)."""
+    _run(
+        """
+        from jax.sharding import PartitionSpec as P
+        from repro.distributed.compression import compressed_psum
+        mesh = jax.make_mesh((8,), ("data",),
+            axis_types=(jax.sharding.AxisType.Auto,))
+
+        def worker(g, r):
+            return compressed_psum(g, "data", r)
+
+        fn = jax.jit(jax.shard_map(worker, mesh=mesh,
+            in_specs=(P("data"), P("data")), out_specs=(P("data"), P("data")),
+            check_vma=False))
+
+        key = jax.random.PRNGKey(0)
+        g = jax.random.normal(key, (8, 64))  # row i = device i's grad
+        r = jnp.zeros_like(g)
+        mean, r1 = fn(g, r)
+        true_mean = jnp.mean(g, axis=0, keepdims=True)
+        # every device's shard of `mean` equals the true mean within int8 step
+        err = float(jnp.max(jnp.abs(mean - true_mean)))
+        scale = float(jnp.max(jnp.abs(g))) / 127
+        assert err < 3 * scale, (err, scale)
+
+        # error feedback: repeated compression of a CONSTANT gradient
+        # averages to the true mean (residual carries the rounding)
+        acc = jnp.zeros((8, 64)); r = jnp.zeros_like(g)
+        for _ in range(64):
+            mean, r = fn(g, r)
+            acc = acc + mean
+        avg = acc / 64
+        err2 = float(jnp.max(jnp.abs(avg - true_mean)))
+        assert err2 < 0.3 * scale, (err2, scale)
+        print("OK")
+        """
+    )
+
+
+def test_pipeline_parallel_matches_sequential():
+    """GPipe over a 2-stage pod axis == running both stages sequentially."""
+    _run(
+        """
+        from repro.distributed.pipeline import gpipe
+        from repro.launch.mesh import make_test_mesh
+
+        mesh = make_test_mesh(8, multi_pod=True)  # pod=2
+        key = jax.random.PRNGKey(0)
+        d = 16
+        # stage params: (2, d, d) — one matrix per stage
+        w = jax.random.normal(key, (2, d, d)) / d**0.5
+
+        def stage_fn(wi, x):
+            return jnp.tanh(x @ wi)
+
+        run = gpipe(stage_fn, mesh)
+        xs = jax.random.normal(jax.random.PRNGKey(1), (4, 8, d))  # 4 microbatches
+        with mesh:
+            out = run(w, xs)
+        ref = jnp.tanh(jnp.tanh(xs @ w[0]) @ w[1])
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=1e-5)
+        print("OK")
+        """
+    )
+
+
+def test_batch_spec_divisibility_fallback():
+    _run(
+        """
+        from repro.distributed import sharding
+        from repro.launch.mesh import make_test_mesh
+        mesh = make_test_mesh(8, multi_pod=True)  # pod=2, data=2, model=2
+        # batch 1: cannot shard -> replicated
+        assert sharding.batch_spec(mesh, 1) == jax.sharding.PartitionSpec(None)
+        # batch 2: only pod divides
+        s2 = sharding.batch_spec(mesh, 2)
+        # batch 4: pod x data
+        s4 = sharding.batch_spec(mesh, 4)
+        print("s2", s2, "s4", s4)
+        assert s4[0] == ("pod", "data")
+        print("OK")
+        """
+    )

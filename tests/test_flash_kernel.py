@@ -1,0 +1,85 @@
+"""Pallas flash-attention forward kernel vs oracles (interpret mode)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+from repro.models import attention
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _qkv(b, s, h, kvh, hd, dtype=jnp.float32, sk=None):
+    sk = sk or s
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (b, s, h, hd), dtype)
+    k = jax.random.normal(ks[1], (b, sk, kvh, hd), dtype)
+    v = jax.random.normal(ks[2], (b, sk, kvh, hd), dtype)
+    return q, k, v
+
+
+@pytest.mark.parametrize("causal", [True, False])
+@pytest.mark.parametrize("shape", [(1, 128, 2, 2, 64), (2, 256, 4, 2, 32)])
+def test_flash_kernel_matches_oracle(shape, causal):
+    b, s, h, kvh, hd = shape
+    q, k, v = _qkv(b, s, h, kvh, hd)
+    out_k = ops.flash_attention(q, k, v, causal=causal, block_q=128, block_k=128)
+    out_r = attention._flash_attend(
+        q, k, v, causal=causal, window=None, block_q=64, block_k=64
+    )
+    np.testing.assert_allclose(
+        np.asarray(out_k), np.asarray(out_r), atol=2e-5, rtol=1e-4
+    )
+
+
+def test_flash_kernel_sliding_window():
+    q, k, v = _qkv(1, 256, 2, 2, 32)
+    out_k = ops.flash_attention(q, k, v, causal=True, window=64,
+                                block_q=128, block_k=128)
+    out_r = attention._flash_attend(
+        q, k, v, causal=True, window=64, block_q=64, block_k=64
+    )
+    np.testing.assert_allclose(
+        np.asarray(out_k), np.asarray(out_r), atol=2e-5, rtol=1e-4
+    )
+
+
+def test_flash_kernel_unaligned_padding_exact():
+    """S not a block multiple: padded keys must not contribute."""
+    q, k, v = _qkv(1, 200, 2, 1, 32)
+    out_k = ops.flash_attention(q, k, v, causal=True, block_q=128, block_k=128)
+    out_r = attention._flash_attend(
+        q, k, v, causal=True, window=None, block_q=64, block_k=64
+    )
+    np.testing.assert_allclose(
+        np.asarray(out_k), np.asarray(out_r), atol=2e-5, rtol=1e-4
+    )
+
+
+def test_flash_kernel_bf16():
+    q, k, v = _qkv(1, 128, 2, 2, 64, dtype=jnp.bfloat16)
+    out_k = ops.flash_attention(q, k, v, causal=True, block_q=128, block_k=128)
+    out_r = attention._flash_attend(
+        q, k, v, causal=True, window=None, block_q=64, block_k=64
+    )
+    np.testing.assert_allclose(
+        np.asarray(out_k, np.float32), np.asarray(out_r, np.float32),
+        atol=3e-2, rtol=3e-2,
+    )
+
+
+def test_flat_layout_oracle_consistency():
+    """The (BH, S, hd) kernel oracle matches the model-layout oracle."""
+    q, k, v = _qkv(2, 64, 2, 2, 16)
+    flat = lambda x: jnp.moveaxis(x, 2, 1).reshape(-1, x.shape[1], x.shape[3])
+    out_flat = ref.flash_attention_fwd_ref(flat(q), flat(k), flat(v), causal=True)
+    out_model = attention._flash_attend(
+        q, k, v, causal=True, window=None, block_q=32, block_k=32
+    )
+    np.testing.assert_allclose(
+        np.asarray(out_flat.reshape(2, 2, 64, 16)),
+        np.asarray(jnp.moveaxis(out_model, 2, 1)),
+        atol=2e-5,
+    )

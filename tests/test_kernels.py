@@ -1,0 +1,117 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps in interpret mode."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import stiefel
+from repro.kernels import ops, ref
+
+KEY = jax.random.PRNGKey(0)
+
+SHAPES = [
+    (1, 3, 3),      # CNN orthogonal kernels (paper Sec. 5.2)
+    (7, 3, 3),
+    (4, 16, 32),
+    (2, 64, 216),   # CNN orthogonal filters
+    (3, 128, 1024),
+    (1, 5, 40),     # ragged/unaligned
+    (2, 10, 256),   # squared-PC shapes (paper Sec. 5.3)
+]
+
+
+def _xg(shape, dtype=jnp.float32, key=KEY):
+    k1, k2 = jax.random.split(key)
+    x = stiefel.random_stiefel(k1, shape).astype(dtype)
+    g = (jax.random.normal(k2, shape) * 0.2).astype(dtype)
+    return x, g
+
+
+@pytest.mark.parametrize("shape", SHAPES)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_pogo_update_matches_ref(shape, dtype):
+    x, g = _xg(shape, dtype)
+    out_k = ops.pogo_update(x, g, 0.1, 0.5)
+    out_r = ref.pogo_update_ref(x, g, 0.1, 0.5)
+    tol = 1e-6 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(
+        np.asarray(out_k, np.float32), np.asarray(out_r, np.float32),
+        atol=tol, rtol=tol,
+    )
+
+
+@pytest.mark.parametrize("shape", SHAPES)
+def test_landing_field_matches_ref(shape):
+    x, g = _xg(shape)
+    out_k = ops.landing_field(x, g, 1.0)
+    out_r = ref.landing_field_ref(x, g, 1.0)
+    np.testing.assert_allclose(np.asarray(out_k), np.asarray(out_r), atol=1e-6)
+
+
+@pytest.mark.parametrize("shape", SHAPES)
+def test_newton_schulz_matches_ref(shape):
+    x, g = _xg(shape)
+    y = x + 0.05 * g
+    out_k = ops.newton_schulz(y)
+    out_r = ref.newton_schulz_ref(y)
+    np.testing.assert_allclose(np.asarray(out_k), np.asarray(out_r), atol=1e-6)
+    # and it actually projects
+    assert float(jnp.max(stiefel.manifold_distance(out_k))) < 1e-2
+
+
+def test_tiled_path_matches_whole():
+    """Force the 3-phase tiled kernel (large n) and cross-check."""
+    shape = (2, 64, 4096)
+    x, g = _xg(shape)
+    from repro.kernels.pogo_update import pogo_update_tiled, pogo_update_whole
+
+    out_t = pogo_update_tiled(x, g, 0.1, 0.5, tile_n=512, interpret=True)
+    out_w = pogo_update_whole(x, g, 0.1, 0.5, interpret=True)
+    np.testing.assert_allclose(np.asarray(out_t), np.asarray(out_w), atol=1e-5)
+
+
+def test_padding_is_exact():
+    """Zero row/col padding must not perturb the valid region at all."""
+    x, g = _xg((2, 5, 33))  # forces p->8, n->128 padding
+    out_k = np.asarray(ops.pogo_update(x, g, 0.1, 0.5))
+    out_r = np.asarray(ref.pogo_update_ref(x, g, 0.1, 0.5))
+    np.testing.assert_allclose(out_k, out_r, atol=1e-6)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    b=st.integers(1, 4),
+    p=st.integers(2, 24),
+    extra=st.integers(0, 40),
+    seed=st.integers(0, 2**30),
+    eta=st.floats(0.01, 0.5),
+)
+def test_pogo_update_property_sweep(b, p, extra, seed, eta):
+    n = p + extra
+    x, g = _xg((b, p, n), key=jax.random.PRNGKey(seed))
+    out_k = ops.pogo_update(x, g, eta, 0.5)
+    out_r = ref.pogo_update_ref(x, g, eta, 0.5)
+    np.testing.assert_allclose(
+        np.asarray(out_k), np.asarray(out_r), atol=2e-5, rtol=1e-4
+    )
+
+
+def test_leading_batch_dims_flattened():
+    """(L, H, p, n) stacked leaves go through the kernel unchanged."""
+    x = stiefel.random_stiefel(KEY, (2, 3, 8, 24))
+    g = jax.random.normal(jax.random.PRNGKey(1), (2, 3, 8, 24)) * 0.1
+    out_k = ops.pogo_update(x, g, 0.1, 0.5)
+    out_r = ref.pogo_update_ref(x, g, 0.1, 0.5)
+    assert out_k.shape == (2, 3, 8, 24)
+    np.testing.assert_allclose(np.asarray(out_k), np.asarray(out_r), atol=1e-5)
+
+
+def test_complex_falls_back_to_ref():
+    x = stiefel.random_stiefel(KEY, (2, 4, 12), jnp.complex64)
+    g = (jax.random.normal(jax.random.PRNGKey(2), (2, 4, 12))
+         + 1j * jax.random.normal(jax.random.PRNGKey(3), (2, 4, 12))).astype(jnp.complex64) * 0.1
+    out = ops.pogo_update(x, g, 0.1, 0.5)
+    assert out.dtype == jnp.complex64
+    assert float(jnp.max(stiefel.manifold_distance(out))) < 1e-2

@@ -1,0 +1,141 @@
+"""Optimizer substrate: transforms, schedules, partition, linearity (Def. 1)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import optim
+from repro.core import stiefel
+
+
+def _quadratic():
+    target = jnp.arange(12.0).reshape(3, 4) / 10
+
+    def loss(p):
+        return jnp.sum((p["w"] - target) ** 2)
+
+    return loss, {"w": jnp.zeros((3, 4))}
+
+
+@pytest.mark.parametrize(
+    "opt",
+    [
+        optim.sgd(0.1),
+        optim.sgd(0.1, momentum=0.9),
+        optim.adam(0.05),
+        optim.adamw(0.05, weight_decay=0.0),
+        optim.vadam(0.05),
+        optim.adafactor(0.05),
+        optim.muon(0.05),
+    ],
+    ids=["sgd", "momentum", "adam", "adamw", "vadam", "adafactor", "muon"],
+)
+def test_optimizers_descend_quadratic(opt):
+    loss, params = _quadratic()
+    state = opt.init(params)
+    l0 = float(loss(params))
+    for _ in range(200):
+        g = jax.grad(loss)(params)
+        upd, state = opt.update(g, state, params)
+        params = optim.apply_updates(params, upd)
+    assert float(loss(params)) < 0.05 * l0
+
+
+def test_vadam_is_linear_def_1():
+    """Def. 1: VAdam output is (scalar) * momentum(grad) — scaling the
+    gradient stream scales the output, elementwise direction unchanged."""
+    g = jax.random.normal(jax.random.PRNGKey(0), (6, 8))
+    outs = {}
+    for scale in (1.0, 7.0):
+        opt = optim.chain(optim.scale_by_vadam())
+        state = opt.init(g)
+        out, state = opt.update(scale * g, state, g)
+        outs[scale] = np.asarray(out)
+    # direction identical (linear up to scalar), magnitudes normalized
+    cos = np.sum(outs[1.0] * outs[7.0]) / (
+        np.linalg.norm(outs[1.0]) * np.linalg.norm(outs[7.0])
+    )
+    assert cos > 0.9999
+
+
+def test_adam_is_not_linear():
+    """Adam's elementwise normalization breaks Def. 1 (paper Sec. 3.1)."""
+    g1 = jnp.asarray([[1.0, 0.01]])
+    opt = optim.chain(optim.scale_by_adam())
+    state = opt.init(g1)
+    out, _ = opt.update(g1, state, g1)
+    out = np.asarray(out)[0]
+    # elementwise normalization squashes the magnitude ratio toward 1
+    assert abs(out[0] / out[1]) < 100 * 0.5
+
+
+def test_vadam_equivariance_relative_gradient():
+    """Eq. 8: Skew(X^H BO(G)) prop BO'(Skew(X^H G)) for linear BO without
+    momentum state mixing — tested for the pure-scaling case."""
+    key = jax.random.PRNGKey(1)
+    x = stiefel.random_stiefel(key, (4, 10))
+    g = jax.random.normal(jax.random.PRNGKey(2), (4, 10))
+    opt = optim.chain(optim.scale_by_vadam(b1=0.0))  # no momentum: pure scale
+    state = opt.init(g)
+    bo_g, _ = opt.update(g, state, g)
+    lhs = stiefel.relative_gradient(x, bo_g)
+    rhs = stiefel.relative_gradient(x, g)
+    # proportional: lhs = c * rhs
+    c = float(jnp.vdot(rhs, lhs) / jnp.vdot(rhs, rhs))
+    np.testing.assert_allclose(np.asarray(lhs), c * np.asarray(rhs), atol=1e-5)
+
+
+def test_clip_by_global_norm():
+    g = {"a": jnp.full((4,), 10.0), "b": jnp.full((3,), -10.0)}
+    opt = optim.clip_by_global_norm(1.0)
+    out, _ = opt.update(g, opt.init(g), g)
+    assert float(optim.global_norm(out)) <= 1.0 + 1e-5
+
+
+def test_clip_per_matrix_bounds_xi():
+    g = jax.random.normal(jax.random.PRNGKey(3), (5, 6, 8)) * 100
+    opt = optim.clip_per_matrix(1.0)
+    out, _ = opt.update(g, opt.init(g), g)
+    norms = jnp.sqrt(jnp.sum(out**2, axis=(-2, -1)))
+    assert float(jnp.max(norms)) <= 1.0 + 1e-4
+
+
+def test_schedules():
+    s = optim.warmup_cosine(1.0, 10, 100)
+    assert float(s(jnp.asarray(0))) == 0.0
+    assert abs(float(s(jnp.asarray(10))) - 1.0) < 1e-6
+    assert float(s(jnp.asarray(100))) < 0.01
+    lin = optim.linear(0.0, 1.0, 10)
+    assert abs(float(lin(jnp.asarray(5))) - 0.5) < 1e-6
+
+
+def test_partition_routes_by_label():
+    params = {"ortho": jnp.ones((2, 4)), "dense": jnp.ones((3,))}
+    labels = {"ortho": "orthogonal", "dense": "default"}
+    opt = optim.partition(
+        {
+            "orthogonal": optim.sgd(1.0),
+            "default": optim.sgd(0.0),  # frozen
+        },
+        labels,
+    )
+    g = jax.tree.map(jnp.ones_like, params)
+    state = opt.init(params)
+    upd, _ = opt.update(g, state, params)
+    np.testing.assert_allclose(np.asarray(upd["ortho"]), -1.0)
+    np.testing.assert_allclose(np.asarray(upd["dense"]), 0.0)
+
+
+def test_partition_label_structure_mismatch_raises():
+    params = {"a": jnp.ones(2)}
+    with pytest.raises(ValueError):
+        optim.partition({"default": optim.sgd(1.0)}, {"b": "default", "c": "default"}).init(params)
+
+
+def test_adafactor_state_is_factored():
+    params = {"w": jnp.zeros((64, 128))}
+    opt = optim.chain(optim.scale_by_adafactor())
+    state = opt.init(params)
+    n_state = sum(x.size for x in jax.tree.leaves(state))
+    assert n_state < 64 * 128 / 8  # O(n+m), not O(nm)

@@ -1,0 +1,212 @@
+"""End-to-end optimizer behaviour on the paper's single-matrix problems
+(Sec. 5.1): convergence + feasibility for POGO and every baseline."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import optim
+from repro.core import landing, landing_pc, pogo, rgd, rsdm, slpg, stiefel
+
+N, P = 48, 32
+KEY = jax.random.PRNGKey(0)
+
+
+def _pca_problem():
+    evals = jnp.exp(-jnp.linspace(0, 3, N))
+    q = stiefel.random_stiefel(jax.random.PRNGKey(7), (N, N))
+    a = (q.T * evals) @ q
+
+    def loss(x):
+        return -jnp.sum((x @ a) ** 2)
+
+    opt_val = -jnp.sum(jnp.sort(evals**2)[::-1][:P])
+    return loss, float(opt_val)
+
+
+def _procrustes_problem():
+    a = jax.random.normal(jax.random.PRNGKey(8), (P, P)) / P**0.5
+    b = jax.random.normal(jax.random.PRNGKey(9), (P, N)) / P**0.5
+
+    def loss(x):
+        return jnp.sum((a @ x - b) ** 2)
+
+    # analytic optimum: project A^T B onto the Stiefel manifold
+    x_star = stiefel.project_polar(a.T @ b)
+    return loss, float(loss(x_star))
+
+
+def _run(opt, loss, steps=400):
+    x = stiefel.random_stiefel(KEY, (P, N))
+    state = opt.init(x)
+
+    @jax.jit
+    def step(x, state):
+        g = jax.grad(loss)(x)
+        u, state = opt.update(g, state, x)
+        return x + u, state
+
+    for _ in range(steps):
+        x, state = step(x, state)
+    return x
+
+
+OPTS = {
+    "pogo": lambda: pogo.pogo(0.1),
+    "pogo_root": lambda: pogo.pogo(0.1, find_root=True),
+    "pogo_vadam": lambda: pogo.pogo(0.2, base_optimizer=optim.chain(optim.scale_by_vadam())),
+    "pogo_kernel": lambda: pogo.pogo(0.1, use_kernel=True),
+    "landing": lambda: landing.landing(0.1),
+    "landing_pc": lambda: landing.landing_pc(0.1),
+    "rgd_qr": lambda: rgd.rgd(0.1, retraction="qr"),
+    "rgd_polar": lambda: rgd.rgd(0.1, retraction="polar"),
+    "rgd_cayley": lambda: rgd.rgd(0.1, retraction="cayley"),
+    "slpg": lambda: slpg.slpg(0.1),
+    "rsdm": lambda: rsdm.rsdm(0.3, submanifold_dim=16),
+}
+
+FEASIBLE = {  # optimizers that must stay within tight eps of St
+    "pogo": 1e-4, "pogo_root": 1e-4, "pogo_vadam": 1e-4, "pogo_kernel": 1e-4,
+    "rgd_qr": 1e-4, "rgd_polar": 1e-4, "rgd_cayley": 1e-3, "slpg": 1e-4,
+    "landing": 0.5, "landing_pc": 0.5, "rsdm": 0.05,
+}
+
+
+@pytest.mark.parametrize("name", [n for n in OPTS if n != "rgd_cayley"])
+def test_pca_convergence_and_feasibility(name):
+    loss, opt_val = _pca_problem()
+    x = _run(OPTS[name](), loss)
+    gap = abs((float(loss(x)) - opt_val) / opt_val)
+    dist = float(stiefel.manifold_distance(x))
+    assert dist < FEASIBLE[name], f"{name}: distance {dist}"
+    # RSDM converges much slower (random submanifolds); loose gate
+    limit = 0.5 if name == "rsdm" else 0.05
+    assert gap < limit, f"{name}: optimality gap {gap}"
+
+
+@pytest.mark.parametrize("name", ["pogo", "landing", "rgd_qr", "slpg"])
+def test_procrustes_convergence(name):
+    loss, opt_val = _procrustes_problem()
+    x = _run(OPTS[name](), loss, steps=500)
+    gap = abs(float(loss(x)) - opt_val) / (abs(opt_val) + 1e-9)
+    assert gap < 0.05, f"{name}: gap {gap}"
+
+
+def test_rgd_cayley_square_case():
+    """The left-Cayley generator is a complete parametrization only on the
+    square manifold O(n): verify convergence + exactness there."""
+    n = 24
+    a = jax.random.normal(jax.random.PRNGKey(21), (n, n)) / n**0.5
+    b = jax.random.normal(jax.random.PRNGKey(22), (n, n)) / n**0.5
+
+    def loss(x):
+        return jnp.sum((a @ x - b) ** 2)
+
+    x_star = stiefel.project_polar(a.T @ b)
+    opt_val = float(loss(x_star))
+    x = stiefel.random_stiefel(KEY, (n, n))
+    opt = rgd.rgd(0.2, retraction="cayley")
+    state = opt.init(x)
+    for _ in range(600):
+        g = jax.grad(loss)(x)
+        u, state = opt.update(g, state, x)
+        x = x + u
+    gap = abs(float(loss(x)) - opt_val) / (abs(opt_val) + 1e-9)
+    assert gap < 0.05, gap
+    assert float(stiefel.manifold_distance(x)) < 1e-3
+
+
+def test_pogo_kernel_matches_ref_trajectory():
+    """use_kernel=True follows the jnp path step-for-step (fp32 tolerance)."""
+    loss, _ = _pca_problem()
+    x0 = stiefel.random_stiefel(KEY, (P, N))
+    xs = {}
+    for use_kernel in (False, True):
+        opt = pogo.pogo(0.1, use_kernel=use_kernel)
+        state = opt.init(x0)
+        x = x0
+        for _ in range(10):
+            g = jax.grad(loss)(x)
+            u, state = opt.update(g, state, x)
+            x = x + u
+        xs[use_kernel] = np.asarray(x)
+    np.testing.assert_allclose(xs[False], xs[True], atol=2e-4)
+
+
+def test_pogo_stacked_batched_matrices():
+    """Thousands of small matrices in one leaf (the CNN-kernel regime)."""
+    b = 512
+    x = stiefel.random_stiefel(KEY, (b, 3, 3))
+    target = stiefel.random_stiefel(jax.random.PRNGKey(11), (b, 3, 3))
+
+    def loss(x):
+        return jnp.sum((x - target) ** 2)
+
+    opt = pogo.pogo(0.2, base_optimizer=optim.chain(optim.scale_by_vadam()))
+    state = opt.init(x)
+
+    @jax.jit
+    def step(x, state):
+        g = jax.grad(loss)(x)
+        u, state = opt.update(g, state, x)
+        return x + u, state
+
+    l0 = float(loss(x))
+    for _ in range(150):
+        x, state = step(x, state)
+    assert float(loss(x)) < 0.5 * l0
+    assert float(jnp.max(stiefel.manifold_distance(x))) < 1e-4
+
+
+def test_pogo_transposed_tall_leaf():
+    """Tall (n > p along rows) leaves are constrained along the transpose."""
+    x0 = jnp.swapaxes(stiefel.random_stiefel(KEY, (8, 24)), -1, -2)  # (24, 8)
+    target = jnp.swapaxes(
+        stiefel.random_stiefel(jax.random.PRNGKey(12), (8, 24)), -1, -2
+    )
+
+    def loss(x):
+        return jnp.sum((x - target) ** 2)
+
+    opt = pogo.pogo(0.1)
+    state = opt.init(x0)
+    x = x0
+    for _ in range(100):
+        g = jax.grad(loss)(x)
+        u, state = opt.update(g, state, x)
+        x = x + u
+    dist = float(stiefel.manifold_distance(jnp.swapaxes(x, -1, -2)))
+    assert dist < 1e-4
+
+
+def test_landing_eps_ball():
+    """Landing's safe step keeps iterates within the eps ball (D1-relaxed)."""
+    loss, _ = _pca_problem()
+    opt = landing.landing(0.5, eps=0.25)
+    x = stiefel.random_stiefel(KEY, (P, N))
+    state = opt.init(x)
+    for _ in range(100):
+        g = jax.grad(loss)(x)
+        u, state = opt.update(g, state, x)
+        x = x + u
+        assert float(stiefel.manifold_distance(x)) < 0.3
+
+
+def test_rsdm_drifts_in_fp32_but_not_fp64():
+    """The paper's Fig. C.1 observation, as a test: RSDM's rotations
+    accumulate fp32 rounding; fp64 stays tight."""
+    loss, _ = _pca_problem()
+
+    def drift(dtype):
+        x = stiefel.random_stiefel(KEY, (P, N)).astype(dtype)
+        opt = rsdm.rsdm(0.3, submanifold_dim=16)
+        state = opt.init(x)
+        for _ in range(200):
+            g = jax.grad(lambda v: loss(v.astype(jnp.float32)).astype(jnp.float32))(x)
+            u, state = opt.update(g.astype(dtype), state, x)
+            x = x + u
+        return float(stiefel.manifold_distance(x.astype(jnp.float64 if dtype == jnp.float64 else jnp.float32)))
+
+    d32 = drift(jnp.float32)
+    assert d32 > 1e-7  # drift is visible in fp32

@@ -1,0 +1,82 @@
+"""Quartic solver + landing polynomial (Lemma 3.1) properties."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import quartic, stiefel
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.lists(st.floats(-5, 5), min_size=4, max_size=4), st.floats(0.1, 3.0))
+def test_quartic_roots_from_known_roots(roots, scale):
+    r = np.array(roots)
+    # coefficients of scale * prod (x - r_i)
+    coeffs = scale * np.poly(r)  # degree-4 monic * scale
+    a, b, c, d, e = (jnp.asarray(x, jnp.float32) for x in coeffs)
+    found = np.asarray(quartic.solve_quartic(a, b, c, d, e))
+    # every true root is close to some found root
+    err = np.abs(r[:, None] - found[None, :]).min(axis=1).max()
+    span = 1 + np.abs(r).max()
+    assert err < 5e-2 * span
+
+
+def test_cubic_roots():
+    # (x-1)(x-2)(x-3) = x^3 - 6x^2 + 11x - 6
+    roots = np.sort(
+        np.real(np.asarray(quartic.solve_cubic(
+            jnp.array(1.0), jnp.array(-6.0), jnp.array(11.0), jnp.array(-6.0)
+        )))
+    )
+    np.testing.assert_allclose(roots, [1.0, 2.0, 3.0], atol=1e-4)
+
+
+def test_landing_polynomial_matches_bruteforce():
+    """P(lam) from Lemma-3.1 coefficients == directly-evaluated distance^2."""
+    key = jax.random.PRNGKey(0)
+    x = stiefel.random_stiefel(key, (5, 12))
+    g = jax.random.normal(jax.random.PRNGKey(1), (5, 12))
+    m = x - 0.2 * stiefel.riemannian_gradient(x, g)
+    coeffs = quartic.landing_poly_coeffs(m)
+    for lam in [0.0, 0.3, 0.5, 0.9, 1.5]:
+        x1 = m + lam * (jnp.eye(5) - m @ m.T) @ m
+        direct = float(stiefel.manifold_distance(x1)) ** 2
+        poly = float(quartic.eval_quartic(coeffs, jnp.asarray(lam)))
+        np.testing.assert_allclose(poly, direct, rtol=1e-3, atol=1e-6)
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 2**30), eta=st.floats(0.05, 0.8))
+def test_optimal_lambda_beats_or_matches_half(seed, eta):
+    """The quartic root lands at least as close as lam = 1/2."""
+    k1, k2 = jax.random.split(jax.random.PRNGKey(seed))
+    x = stiefel.random_stiefel(k1, (4, 10))
+    g = jax.random.normal(k2, (4, 10))
+    g = g / jnp.maximum(jnp.linalg.norm(g), 1.0)
+    m = x - eta * stiefel.riemannian_gradient(x, g)
+    lam = quartic.optimal_lambda(m)
+    coeffs = quartic.landing_poly_coeffs(m)
+    p_root = float(quartic.eval_quartic(coeffs, lam))
+    p_half = float(quartic.eval_quartic(coeffs, jnp.asarray(0.5)))
+    # 1/2 is always kept as a candidate so the root can only match or beat
+    # it, up to fp32 evaluation noise near the polynomial's floor
+    assert p_root <= p_half * 1.5 + 1e-6
+
+
+def test_optimal_lambda_near_half_when_xi_small():
+    """Prop 3.3: small xi => lambda* ~ 1/2."""
+    key = jax.random.PRNGKey(3)
+    x = stiefel.random_stiefel(key, (6, 16))
+    g = jax.random.normal(jax.random.PRNGKey(4), (6, 16))
+    g = 0.1 * g / jnp.linalg.norm(g)
+    m = x - 0.1 * stiefel.riemannian_gradient(x, g)
+    lam = float(quartic.optimal_lambda(m))
+    assert abs(lam - 0.5) < 0.2
+
+
+def test_degenerate_on_manifold_falls_back():
+    x = stiefel.random_stiefel(jax.random.PRNGKey(5), (4, 8))
+    lam = quartic.optimal_lambda(x)  # M already on manifold
+    assert np.isfinite(float(lam))

@@ -1,0 +1,139 @@
+"""Stiefel-manifold math: identities, projections, property tests."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import stiefel
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _rand(shape, key=KEY, dtype=jnp.float32):
+    return jax.random.normal(key, shape, dtype)
+
+
+@pytest.mark.parametrize("shape", [(8, 16), (3, 3), (5, 40), (2, 16, 32)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.complex64])
+def test_random_stiefel_on_manifold(shape, dtype):
+    x = stiefel.random_stiefel(KEY, shape, dtype)
+    assert x.shape == shape
+    d = stiefel.manifold_distance(x)
+    np.testing.assert_allclose(np.asarray(d), 0.0, atol=5e-5)
+
+
+def test_skew_sym_decomposition():
+    a = _rand((4, 7, 7))
+    np.testing.assert_allclose(
+        np.asarray(stiefel.skew(a) + stiefel.sym(a)), np.asarray(a),
+        rtol=1e-6, atol=1e-6,
+    )
+    s = stiefel.skew(a)
+    np.testing.assert_allclose(
+        np.asarray(s), -np.asarray(jnp.swapaxes(s, -1, -2)), rtol=1e-6
+    )
+
+
+def test_riemannian_gradient_factored_form_matches_definition():
+    """X Skew(X^H G) computed the O(p^2 n) way == the (n,n) definition."""
+    x = stiefel.random_stiefel(KEY, (6, 24))
+    g = _rand((6, 24), jax.random.PRNGKey(1))
+    direct = x @ stiefel.relative_gradient(x, g)
+    fact = stiefel.riemannian_gradient(x, g)
+    np.testing.assert_allclose(np.asarray(direct), np.asarray(fact), atol=1e-5)
+
+
+def test_riemannian_gradient_is_tangent():
+    x = stiefel.random_stiefel(KEY, (6, 24))
+    g = _rand((6, 24), jax.random.PRNGKey(1))
+    r = stiefel.riemannian_gradient(x, g)
+    # tangency: R X^H + X R^H = 0
+    t = r @ x.T + x @ r.T
+    np.testing.assert_allclose(np.asarray(t), 0.0, atol=1e-5)
+
+
+def test_grad_and_normal_orthogonal_on_manifold():
+    """The paper's Fig. 2 geometry: <grad, normal> = 0 on the manifold."""
+    x = stiefel.random_stiefel(KEY, (8, 20))
+    g = _rand((8, 20), jax.random.PRNGKey(2))
+    r = stiefel.riemannian_gradient(x, g)
+    n = stiefel.penalty_grad(x)
+    ip = float(jnp.sum(r * n))
+    assert abs(ip) < 1e-4
+
+
+@pytest.mark.parametrize("proj", [stiefel.project_qr, stiefel.project_polar,
+                                  stiefel.project_newton_schulz])
+def test_projections_land_on_manifold(proj):
+    x = stiefel.random_stiefel(KEY, (8, 20)) + 0.05 * _rand((8, 20))
+    y = proj(x)
+    assert float(stiefel.manifold_distance(y)) < 1e-4
+
+
+def test_polar_projection_is_closest():
+    """Polar is the metric projection: no retraction lands closer."""
+    x = stiefel.random_stiefel(KEY, (6, 12)) + 0.08 * _rand((6, 12))
+    polar = stiefel.project_polar(x)
+    qr = stiefel.project_qr(x)
+    d_polar = float(jnp.linalg.norm(x - polar))
+    d_qr = float(jnp.linalg.norm(x - qr))
+    assert d_polar <= d_qr + 1e-6
+
+
+def test_cayley_retraction_exact():
+    x = stiefel.random_stiefel(KEY, (5, 9))
+    omega = stiefel.skew(_rand((5, 5), jax.random.PRNGKey(3)))
+    y = stiefel.retraction_cayley(x, 0.3 * omega)
+    assert float(stiefel.manifold_distance(y)) < 1e-5
+
+
+def test_tangent_projection_idempotent_and_tangent():
+    x = stiefel.random_stiefel(KEY, (6, 14))
+    v = _rand((6, 14), jax.random.PRNGKey(4))
+    t = stiefel.tangent_project(x, v)
+    # tangency
+    c = t @ x.T + x @ t.T
+    np.testing.assert_allclose(np.asarray(c), 0.0, atol=1e-5)
+    # idempotency
+    t2 = stiefel.tangent_project(x, t)
+    np.testing.assert_allclose(np.asarray(t), np.asarray(t2), atol=1e-5)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    p=st.integers(2, 8),
+    extra=st.integers(0, 12),
+    seed=st.integers(0, 2**30),
+    eta=st.floats(0.01, 0.3),
+)
+def test_pogo_bound_prop_3_2(p, extra, seed, eta):
+    """Prop 3.2: ||M M^T - I|| <= eta^2 ||S^2|| for X on the manifold."""
+    n = p + extra
+    k1, k2 = jax.random.split(jax.random.PRNGKey(seed))
+    x = stiefel.random_stiefel(k1, (p, n), jnp.float64 if False else jnp.float32)
+    g = jax.random.normal(k2, (p, n))
+    s = stiefel.relative_gradient(x, g)
+    m = x - eta * (x @ s)
+    lhs = float(stiefel.manifold_distance(m))
+    rhs = eta**2 * float(jnp.linalg.norm(s @ s))
+    assert lhs <= rhs + 1e-3
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    p=st.integers(2, 6),
+    extra=st.integers(0, 8),
+    seed=st.integers(0, 2**30),
+)
+def test_pogo_update_stays_on_manifold(p, extra, seed):
+    """Thm 3.5 (one step): xi < 1 => POGO with lam=1/2 stays ~on manifold."""
+    n = p + extra
+    k1, k2 = jax.random.split(jax.random.PRNGKey(seed))
+    x = stiefel.random_stiefel(k1, (p, n))
+    g = jax.random.normal(k2, (p, n))
+    g = g / jnp.maximum(jnp.linalg.norm(g), 1.0)  # ||G|| <= 1
+    # xi = 0.1: Prop 3.3 bound gives dist <~ (3/4 + xi^2/4) * xi^4 ~ 8e-5
+    y = stiefel.pogo_update(x, g, eta=0.1, lam=0.5)
+    assert float(stiefel.manifold_distance(y)) < 1e-3
