@@ -18,7 +18,7 @@ import jax.numpy as jnp
 
 from repro import optim
 from repro.configs import pogo_paper
-from repro.core import landing, pogo, rgd, slpg, stiefel
+from repro.core import orthogonal, stiefel
 from repro.kernels import ops as kops
 
 from .common import emit
@@ -55,14 +55,15 @@ def run(full: bool = False):
         f"f{i}": stiefel.random_stiefel(jax.random.fold_in(key, i), (1, p, n))
         for i, (p, n) in enumerate(pogo_paper.CNN_FILTERS)
     }
+    vadam = lambda: optim.chain(optim.scale_by_vadam())  # noqa: E731
     methods = {
-        "pogo": pogo.pogo(0.5, base_optimizer=optim.chain(optim.scale_by_vadam())),
-        "pogo_kernel": pogo.pogo(
-            0.5, base_optimizer=optim.chain(optim.scale_by_vadam()), use_kernel=True
+        "pogo": orthogonal("pogo", learning_rate=0.5, base_optimizer=vadam()),
+        "pogo_kernel": orthogonal(
+            "pogo", learning_rate=0.5, base_optimizer=vadam(), use_kernel=True
         ),
-        "landing": landing.landing(0.1),
-        "rgd_qr": rgd.rgd(0.01, retraction="qr"),
-        "slpg": slpg.slpg(0.01),
+        "landing": orthogonal("landing", learning_rate=0.1),
+        "rgd_qr": orthogonal("rgd", learning_rate=0.01, retraction="qr"),
+        "slpg": orthogonal("slpg", learning_rate=0.01),
     }
     for name, opt in methods.items():
         dt, dist = _step_time(opt, filters)

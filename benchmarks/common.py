@@ -10,25 +10,41 @@ import jax
 import jax.numpy as jnp
 
 from repro import optim
-from repro.core import landing, landing_pc, pogo, rgd, rsdm, slpg, stiefel
+from repro.core import api, stiefel
+
+
+def method_configs(lr_scale: float = 1.0, rsdm_dim: int = 64):
+    """The paper's Sec.-5 baseline set as typed configs. Learning rates
+    follow the paper's per-method tuning ratios (App. C), scaled by
+    ``lr_scale``."""
+    return {
+        "pogo": api.PogoConfig(
+            learning_rate=0.25 * lr_scale,
+            base_optimizer=optim.chain(optim.trace(0.3)),
+        ),
+        "pogo_root": api.PogoConfig(learning_rate=0.15 * lr_scale, find_root=True),
+        "pogo_vadam": api.PogoConfig(
+            learning_rate=0.5 * lr_scale,
+            base_optimizer=optim.chain(optim.scale_by_vadam()),
+        ),
+        "landing": api.LandingConfig(
+            learning_rate=0.25 * lr_scale,
+            base_optimizer=optim.chain(optim.trace(0.1)),
+        ),
+        "landing_pc": api.LandingPCConfig(learning_rate=0.5 * lr_scale),
+        "rgd_qr": api.RgdConfig(learning_rate=0.15 * lr_scale, retraction="qr"),
+        "slpg": api.SlpgConfig(learning_rate=0.125 * lr_scale),
+        "rsdm": api.RsdmConfig(
+            learning_rate=1.0 * lr_scale, submanifold_dim=rsdm_dim
+        ),
+    }
 
 
 def method_registry(lr_scale: float = 1.0, rsdm_dim: int = 64):
-    """The paper's Sec.-5 baseline set. Learning rates follow the paper's
-    per-method tuning ratios (App. C), scaled by ``lr_scale``."""
+    """name -> zero-arg constructor over :func:`method_configs`."""
     return {
-        "pogo": lambda: pogo.pogo(0.25 * lr_scale,
-                                  base_optimizer=optim.chain(optim.trace(0.3))),
-        "pogo_root": lambda: pogo.pogo(0.15 * lr_scale, find_root=True),
-        "pogo_vadam": lambda: pogo.pogo(
-            0.5 * lr_scale, base_optimizer=optim.chain(optim.scale_by_vadam())
-        ),
-        "landing": lambda: landing.landing(0.25 * lr_scale,
-                                           base_optimizer=optim.chain(optim.trace(0.1))),
-        "landing_pc": lambda: landing.landing_pc(0.5 * lr_scale),
-        "rgd_qr": lambda: rgd.rgd(0.15 * lr_scale, retraction="qr"),
-        "slpg": lambda: slpg.slpg(0.125 * lr_scale),
-        "rsdm": lambda: rsdm.rsdm(1.0 * lr_scale, submanifold_dim=rsdm_dim),
+        name: (lambda c=c: api.orthogonal_from_config(c))
+        for name, c in method_configs(lr_scale, rsdm_dim).items()
     }
 
 

@@ -4,6 +4,7 @@ baseline JSON.
 
     PYTHONPATH=src python -m benchmarks.hillclimb --exp smollm_flash_blocks
     PYTHONPATH=src python -m benchmarks.hillclimb --exp pogo_cost_delta
+    PYTHONPATH=src python -m benchmarks.hillclimb --exp ortho_method_delta
 
 Each experiment embodies one hypothesis from EXPERIMENTS.md §Perf.
 """
@@ -149,14 +150,35 @@ def exp_pogo_cost_delta():
     }, indent=2))
 
 
+def exp_ortho_method_delta():
+    """Train-step cost per orthoptimizer at pod scale — one TrainConfig
+    knob per method now that the trainer dispatches through the unified
+    registry (``repro.core.orthogonal``), no per-method plumbing."""
+    from repro.launch.mesh import make_production_mesh
+
+    mesh = make_production_mesh()
+    out = {}
+    for method in ("pogo", "landing", "slpg", "rsdm"):
+        out[method] = _cost_for(
+            "smollm-360m", "train_4k", mesh,
+            train_overrides=dict(orthoptimizer=method),
+        )
+    base = out["pogo"]["flops_per_device"]
+    for method, cost in out.items():
+        cost["flops_vs_pogo_pct"] = 100 * cost["flops_per_device"] / base - 100
+    print(json.dumps(out, indent=2))
+
+
 def main():
     os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
     ap = argparse.ArgumentParser()
     ap.add_argument("--exp", required=True,
-                    choices=["smollm_flash_blocks", "pogo_cost_delta"])
+                    choices=["smollm_flash_blocks", "pogo_cost_delta",
+                             "ortho_method_delta"])
     args = ap.parse_args()
     {"smollm_flash_blocks": exp_smollm_flash_blocks,
-     "pogo_cost_delta": exp_pogo_cost_delta}[args.exp]()
+     "pogo_cost_delta": exp_pogo_cost_delta,
+     "ortho_method_delta": exp_ortho_method_delta}[args.exp]()
 
 
 if __name__ == "__main__":

@@ -13,7 +13,7 @@ import jax
 import jax.numpy as jnp
 
 from repro import optim
-from repro.core import pogo, stiefel
+from repro.core import PogoConfig, orthogonal_from_config, stiefel
 
 from .common import emit, run_method
 from .pca import build_problem
@@ -26,8 +26,10 @@ def run(full: bool = False, iters: int = 200):
     results = {}
     for eta in ETAS:
         for mode, make in [
-            ("fixed", lambda e=eta: pogo.pogo(e, lam=0.5)),
-            ("root", lambda e=eta: pogo.pogo(e, find_root=True)),
+            ("fixed", lambda e=eta: orthogonal_from_config(
+                PogoConfig(learning_rate=e, lam=0.5))),
+            ("root", lambda e=eta: orthogonal_from_config(
+                PogoConfig(learning_rate=e, find_root=True))),
         ]:
             loss, gap, x0 = build_problem(n, p)
             out = run_method(make(), loss, x0, max_iters=iters, gap_fn=gap)
@@ -41,7 +43,10 @@ def run(full: bool = False, iters: int = 200):
     # reference: VAdam base at the largest eta (norm control keeps xi < 1)
     loss, gap, x0 = build_problem(n, p)
     out = run_method(
-        pogo.pogo(1.0, base_optimizer=optim.chain(optim.scale_by_vadam())),
+        orthogonal_from_config(PogoConfig(
+            learning_rate=1.0,
+            base_optimizer=optim.chain(optim.scale_by_vadam()),
+        )),
         loss, x0, max_iters=iters, gap_fn=gap,
     )
     results["eta1.0/vadam"] = out

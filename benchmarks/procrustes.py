@@ -8,9 +8,9 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro.core import stiefel
+from repro.core import orthogonal_from_config, stiefel
 
-from .common import emit, method_registry, run_method
+from .common import emit, method_configs, run_method
 
 
 def build_problem(n: int, seed: int = 0):
@@ -35,9 +35,11 @@ def run(full: bool = False, iters: int = 300):
     n = 2000 if full else 256
     rsdm_dim = 900 if full else 128
     results = {}
-    for name, make in method_registry(lr_scale=2.0, rsdm_dim=rsdm_dim).items():
+    for name, cfg in method_configs(lr_scale=2.0, rsdm_dim=rsdm_dim).items():
         loss, gap, x0 = build_problem(n)
-        out = run_method(make(), loss, x0, max_iters=iters, gap_fn=gap)
+        out = run_method(
+            orthogonal_from_config(cfg), loss, x0, max_iters=iters, gap_fn=gap
+        )
         results[name] = out
         emit(
             f"procrustes/{name}",

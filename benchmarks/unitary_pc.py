@@ -16,7 +16,7 @@ import jax
 import jax.numpy as jnp
 
 from repro import optim
-from repro.core import landing, pogo, rgd, stiefel
+from repro.core import orthogonal, stiefel
 
 from .common import emit
 
@@ -43,10 +43,13 @@ def run(full: bool = False, steps: int = 120):
     n = 128 if not full else 1024
     loss, x0 = build_problem(n_mats, 10, n)
     methods = {
-        "pogo_vadam": pogo.pogo(0.5, base_optimizer=optim.chain(optim.scale_by_vadam())),
-        "pogo_root": pogo.pogo(0.05, find_root=True),
-        "landing": landing.landing(0.01),
-        "rgd_qr": rgd.rgd(0.05, retraction="qr"),
+        "pogo_vadam": orthogonal(
+            "pogo", learning_rate=0.5,
+            base_optimizer=optim.chain(optim.scale_by_vadam()),
+        ),
+        "pogo_root": orthogonal("pogo", learning_rate=0.05, find_root=True),
+        "landing": orthogonal("landing", learning_rate=0.01),
+        "rgd_qr": orthogonal("rgd", learning_rate=0.05, retraction="qr"),
     }
     results = {}
     for name, opt in methods.items():

@@ -21,7 +21,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro import optim
-from repro.core import ORTHOPTIMIZERS, stiefel
+from repro.core import orthogonal, stiefel
 from repro.models import frontends, layers, ortho
 from repro.configs.base import ModelConfig
 from repro.models import attention
@@ -102,10 +102,10 @@ def main(argv=None):
         params = ortho.project_init(init_vit(key, cfg), cfg)
         labels = ortho.label_tree(params, cfg)
         lr = 0.3 if method == "pogo" else 0.05
-        ortho_opt = (
-            ORTHOPTIMIZERS["pogo"](lr, base_optimizer=optim.chain(optim.scale_by_vadam()))
-            if method == "pogo" else ORTHOPTIMIZERS[method](lr)
+        base = (
+            optim.chain(optim.scale_by_vadam()) if method == "pogo" else None
         )
+        ortho_opt = orthogonal(method, learning_rate=lr, base_optimizer=base)
         opt = optim.partition(
             {"orthogonal": ortho_opt, "default": optim.adamw(2e-3)},
             labels,

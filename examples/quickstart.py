@@ -15,7 +15,7 @@ import jax
 import jax.numpy as jnp
 
 from repro import optim
-from repro.core import pogo, stiefel
+from repro.core import orthogonal, stiefel
 
 
 def pca_problem(n=256, p=192, seed=0):
@@ -51,9 +51,13 @@ def procrustes_problem(n=256, seed=0):
     return loss, gap, stiefel.random_stiefel(k3, (n, n))
 
 
-def solve(name, loss, gap, x0, lr=0.5, iters=300):
+def solve(name, loss, gap, x0, lr=0.5, iters=300, method="pogo"):
     print(f"\n=== {name} ===")
-    opt = pogo.pogo(lr, base_optimizer=optim.chain(optim.scale_by_vadam()))
+    # Any registered method drops in here: orthogonal("landing", ...), etc.
+    opt = orthogonal(
+        method, learning_rate=lr,
+        base_optimizer=optim.chain(optim.scale_by_vadam()),
+    )
     state = opt.init(x0)
 
     @jax.jit

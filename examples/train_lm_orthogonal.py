@@ -37,6 +37,10 @@ def model_100m():
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--orthoptimizer", default="pogo",
+                    help="any repro.core.METHODS key — every method (incl. "
+                         "rsdm) now chains the base optimizer and handles "
+                         "tall leaves via the unified driver")
     ap.add_argument("--batch", type=int, default=8)
     ap.add_argument("--seq-len", type=int, default=256)
     ap.add_argument("--checkpoint-dir", default="/tmp/repro_lm100m")
@@ -56,6 +60,7 @@ def main(argv=None):
     tc = TrainConfig(
         learning_rate=3e-3, pogo_learning_rate=0.4, warmup_steps=20,
         decay_steps=args.steps, microbatches=1,
+        orthoptimizer=args.orthoptimizer,
     )
     step_fn, optimizer = make_train_step(cfg, tc)
     opt_state = optimizer.init(params)

@@ -1,23 +1,36 @@
 """Core: the paper's contribution — POGO and the orthoptimizer family.
 
-Submodules are exported as modules (``core.pogo.pogo`` is the constructor);
-``ORTHOPTIMIZERS`` maps names to constructors for config-driven selection.
+The unified two-stage API lives in :mod:`repro.core.api`: one manifold
+driver (:func:`orthogonal`), pluggable direction/landing stages
+(:class:`api.Method`), and a registry of typed per-method configs
+(:data:`METHODS`, :func:`orthogonal_from_config`). Submodules are exported
+as modules and keep thin back-compat constructors (``core.pogo.pogo`` is
+``orthogonal("pogo", ...)``).
 """
 
-from . import landing, pogo, quartic, rgd, rsdm, slpg, stiefel
+from . import api, landing, pogo, quartic, rgd, rsdm, slpg, stiefel
+from .api import (
+    METHODS,
+    LandingConfig,
+    LandingPCConfig,
+    Method,
+    OrthoConfig,
+    OrthoState,
+    PogoConfig,
+    RgdConfig,
+    RsdmConfig,
+    SlpgConfig,
+    max_distance,
+    method_overrides,
+    orthogonal,
+    orthogonal_from_config,
+    register_method,
+)
 from .landing import landing_pc
 from .pogo import PogoState
 
-ORTHOPTIMIZERS = {
-    "pogo": pogo.pogo,
-    "landing": landing.landing,
-    "landing_pc": landing.landing_pc,
-    "rgd": rgd.rgd,
-    "slpg": slpg.slpg,
-    "rsdm": rsdm.rsdm,
-}
-
 __all__ = [
+    "api",
     "stiefel",
     "quartic",
     "pogo",
@@ -27,5 +40,19 @@ __all__ = [
     "rgd",
     "slpg",
     "rsdm",
-    "ORTHOPTIMIZERS",
+    "Method",
+    "OrthoState",
+    "OrthoConfig",
+    "PogoConfig",
+    "LandingConfig",
+    "LandingPCConfig",
+    "RgdConfig",
+    "SlpgConfig",
+    "RsdmConfig",
+    "METHODS",
+    "orthogonal",
+    "orthogonal_from_config",
+    "register_method",
+    "method_overrides",
+    "max_distance",
 ]

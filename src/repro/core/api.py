@@ -1,0 +1,620 @@
+"""Unified orthoptimizer API: one manifold driver, pluggable stages.
+
+Every orthogonality-constrained optimizer in this repo shares the same
+two-stage structure (Ablin & Peyre 2022; Ablin et al. 2024; the paper's
+Sec. 3): a tangent **direction** followed by a normal **landing** (or
+retraction) correction. This module says that once, in code:
+
+    X_m = transpose-if-tall(X)                     # driver
+    G'  = BaseOptimizer(G)                         # driver (linear base)
+    D   = method.direction(X_m, G', ctx)           # method stage 1
+    M   = X_m - eta * D                            # driver leap
+    X'  = method.land(M, ctx)                      # method stage 2
+    X'  <- NewtonSchulz(X') every k steps          # driver (optional)
+    upd = untranspose((X' - X_m).astype(dtype))    # driver
+
+The driver (:func:`orthogonal`) owns everything a method should not have
+to re-implement: base-optimizer chaining, tall-leaf (p > n) transpose
+dispatch, >= fp32 accumulation, optional Newton-Schulz safety projection,
+fused-kernel routing, per-leaf RNG plumbing, and uniform manifold-distance
+telemetry in :class:`OrthoState`. A method file shrinks to its math.
+
+Construction is config-driven: each method has a typed config dataclass
+(:class:`PogoConfig`, :class:`LandingConfig`, ...) registered in
+:data:`METHODS`; build with ``orthogonal("pogo", learning_rate=0.1)`` or
+``orthogonal_from_config(PogoConfig(learning_rate=0.1))``. New methods are
+one :func:`register_method` call — see DESIGN.md for the full contract and
+the O(p^2 n) cost table.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..optim.transform import GradientTransformation
+from . import quartic, stiefel
+
+Array = jax.Array
+
+
+# --------------------------------------------------------------------- state
+
+
+class OrthoState(NamedTuple):
+    """Uniform optimizer state for every orthoptimizer method.
+
+    ``last_distance`` is the telemetry contract (DESIGN.md §Telemetry): a
+    pytree of per-leaf fp32 scalars, ``max_b ||X_b X_b^H - I||_F`` of the
+    *post-update* iterate, measured in the manifold orientation (tall
+    leaves are transposed first). ``rng`` advances only for methods with
+    ``needs_rng``; ``extras`` holds method-specific state (empty for all
+    built-ins).
+    """
+
+    count: jax.Array
+    base_state: tuple  # state of the wrapped (linear) base optimizer
+    rng: jax.Array
+    last_distance: Any  # pytree of per-leaf fp32 scalars
+    extras: Any = ()
+
+
+@dataclasses.dataclass
+class StepCtx:
+    """Per-leaf context handed to both method stages.
+
+    ``x``/``g`` are the accumulation-dtype leaf in manifold orientation
+    (p <= n). ``eta`` starts as the scalar learning rate; a direction stage
+    may replace it with a per-batch array (Landing's safe step). ``scratch``
+    carries whatever stage 1 wants stage 2 to see (e.g. the Cayley
+    generator).
+    """
+
+    x: Array
+    g: Array
+    eta: Array
+    count: jax.Array
+    key: Optional[jax.Array]
+    use_kernel: bool
+    scratch: dict
+
+
+# ------------------------------------------------------------------- methods
+
+
+class Method:
+    """Protocol for one orthoptimizer: the two pluggable stages.
+
+    ``direction(x, g, ctx)`` returns the descent direction ``D`` (the
+    driver forms ``M = X - eta D``), or ``None`` for multiplicative
+    methods whose exact update cannot be written as a leap (they set
+    ``multiplicative = True`` and compute ``X'`` from ``ctx`` in ``land``).
+    ``land(m, ctx)`` maps the intermediate iterate back toward St(p, n);
+    the default is the identity (Landing-family methods only correct
+    asymptotically).
+    """
+
+    name: str = "?"
+    multiplicative: bool = False  # land() ignores M, computes X' from ctx
+    needs_rng: bool = False  # driver splits a per-leaf key into ctx.key
+    kernel_update: Optional[Callable] = None  # fused whole-update override
+
+    def direction(self, x: Array, g: Array, ctx: StepCtx) -> Optional[Array]:
+        raise NotImplementedError
+
+    def land(self, m: Array, ctx: StepCtx) -> Array:
+        return m
+
+
+def _accum_dtype(dtype):
+    """Land steps need >= fp32 accumulation for ~1e-6 feasibility."""
+    if jnp.issubdtype(dtype, jnp.complexfloating):
+        return dtype
+    return jnp.promote_types(dtype, jnp.float32)
+
+
+def _scalar_dtype(dtype):
+    if jnp.issubdtype(dtype, jnp.complexfloating):
+        return jnp.float64 if dtype == jnp.complex128 else jnp.float32
+    return dtype
+
+
+class Pogo(Method):
+    """POGO (the paper's Alg. 1): Riemannian direction + one-shot land.
+
+    direction:  R = X Skew(X^H G) = 1/2 (X X^H G - X G^H X)
+    land:       X' = (1 + lam) M - lam (M M^H) M
+                (lam = 1/2, or the quartic-root minimizer of Lemma 3.1)
+    """
+
+    name = "pogo"
+
+    def __init__(self, lam: float = 0.5, find_root: bool = False):
+        self.lam = lam
+        self.find_root = find_root
+
+    def direction(self, x, g, ctx):
+        return stiefel.riemannian_gradient(x, g)
+
+    def land(self, m, ctx):
+        if self.find_root:
+            lam = quartic.optimal_lambda(m, fallback=self.lam)
+            lam = lam[..., None, None].astype(_scalar_dtype(m.dtype))
+        else:
+            lam = jnp.asarray(self.lam, _scalar_dtype(m.dtype))
+        c = stiefel.gram(m)
+        return (1.0 + lam) * m - lam * (c @ m)
+
+    def kernel_update(self, x, g, ctx):
+        from ..kernels import ops as kops
+
+        return kops.pogo_update(
+            x, g, ctx.eta, lam=self.lam, find_root=self.find_root
+        )
+
+
+def _safe_eta(x, direction, eta0, eps):
+    """Exact safe step: largest eta in (0, eta0] with dist(X - eta*D) <= eps.
+
+    dist^2(eta) is the quartic ``||C + eta Dm + eta^2 Em||^2`` with
+    ``C = XX^H - I``, ``Dm = -(X D^H + D X^H)``, ``Em = D D^H``. We solve
+    dist^2(eta) = eps^2 and take the smallest positive real root; if none
+    is below eta0, eta0 itself is safe. Strictly tighter than the paper's
+    conservative bound, same O(p^2 n) cost (Lemma 3.1 machinery).
+    """
+    xh = jnp.conj(jnp.swapaxes(x, -1, -2))
+    dh = jnp.conj(jnp.swapaxes(direction, -1, -2))
+    p = x.shape[-2]
+    c = x @ xh - jnp.eye(p, dtype=x.dtype)
+    dm = -(x @ dh + direction @ xh)
+    em = direction @ dh
+
+    def ip(a, b):
+        return jnp.sum(jnp.real(jnp.conj(a) * b), axis=(-2, -1))
+
+    a4 = ip(em, em)
+    a3 = 2.0 * ip(dm, em)
+    a2 = ip(dm, dm) + 2.0 * ip(c, em)
+    a1 = 2.0 * ip(c, dm)
+    a0 = ip(c, c) - eps**2
+    roots = quartic.solve_quartic(a4, a3, a2, a1, a0)
+    real_ok = jnp.abs(jnp.imag(roots)) < 1e-5 * (1 + jnp.abs(jnp.real(roots)))
+    pos = jnp.real(roots) > 0
+    candidates = jnp.where(real_ok & pos, jnp.real(roots), jnp.inf)
+    eta_max = jnp.min(candidates, axis=-1)
+    # Degenerate (already violating eps, a0 > 0 at eta=0): shrink hard.
+    violating = a0 > 0
+    eta = jnp.minimum(eta0, eta_max)
+    eta = jnp.where(violating, jnp.minimum(eta, 0.5 * eta0), eta)
+    return jnp.maximum(eta, 1e-8)
+
+
+class Landing(Method):
+    """Landing (Ablin & Peyre 2022): combined field, identity land stage.
+
+    direction:  D = R + lam (X X^H - I) X
+    land:       identity (feasibility is asymptotic, kept inside an
+                eps-ball by the exact safe step that rescales ctx.eta)
+    """
+
+    name = "landing"
+
+    def __init__(self, lam: float = 1.0, eps: float = 0.5, safe_step: bool = True):
+        self.lam = lam
+        self.eps = eps
+        self.safe_step = safe_step
+
+    def _field(self, x, g, ctx):
+        if ctx.use_kernel and not jnp.issubdtype(x.dtype, jnp.complexfloating):
+            from ..kernels import ops as kops
+
+            return kops.landing_field(x, g, self.lam)
+        return stiefel.riemannian_gradient(x, g) + self.lam * stiefel.penalty_grad(x)
+
+    def direction(self, x, g, ctx):
+        d = self._field(x, g, ctx)
+        if self.safe_step:
+            ctx.eta = _safe_eta(x, d, ctx.eta, self.eps)[..., None, None].astype(
+                jnp.float32
+            )
+        return d
+
+
+class LandingPC(Landing):
+    """LandingPC (Loconte et al. 2025a) — Landing tailored to squared PCs.
+
+    Reference code is unpublished; we reconstruct the documented behaviour:
+    per-matrix *relative* field balancing, where the attraction strength is
+    rescaled by the ratio of the loss-field and normal-field norms so the
+    iterate keeps approaching the manifold even when the Riemannian
+    gradient is large (matches paper Fig. 8), plus the safe-step rule.
+    Flagged as best-effort in DESIGN.md.
+    """
+
+    name = "landing_pc"
+
+    def __init__(self, lam: float = 0.1, eps: float = 0.5):
+        super().__init__(lam=lam, eps=eps, safe_step=True)
+
+    def direction(self, x, g, ctx):
+        r = stiefel.riemannian_gradient(x, g)
+        n = stiefel.penalty_grad(x)
+        rn = jnp.sqrt(jnp.sum(jnp.abs(r) ** 2, axis=(-2, -1), keepdims=True))
+        nn = jnp.sqrt(jnp.sum(jnp.abs(n) ** 2, axis=(-2, -1), keepdims=True))
+        lam_eff = self.lam * (1.0 + rn / (nn + 1e-12))
+        d = r + lam_eff.astype(r.dtype) * n
+        ctx.eta = _safe_eta(x, d, ctx.eta, self.eps)[..., None, None].astype(
+            jnp.float32
+        )
+        return d
+
+
+class Rgd(Method):
+    """Riemannian gradient descent: Riemannian direction + exact retraction.
+
+    land is the retraction: qr / polar / newton_schulz project the leap
+    ``M = X - eta R``; cayley is multiplicative (exact rotation from the
+    left skew generator ``Omega = Skew(G X^H)``, complete only on O(p)).
+    """
+
+    name = "rgd"
+
+    RETRACTIONS = ("qr", "polar", "cayley", "newton_schulz")
+
+    def __init__(self, retraction: str = "qr"):
+        if retraction not in self.RETRACTIONS:
+            raise ValueError(f"unknown retraction {retraction!r}")
+        self.retraction = retraction
+        self.multiplicative = retraction == "cayley"
+
+    def direction(self, x, g, ctx):
+        if self.retraction == "cayley":
+            ctx.scratch["omega"] = stiefel.skew(
+                g @ jnp.conj(jnp.swapaxes(x, -1, -2))
+            )
+            return None
+        return stiefel.riemannian_gradient(x, g)
+
+    def land(self, m, ctx):
+        if self.retraction == "cayley":
+            return stiefel.retraction_cayley(
+                ctx.x, -ctx.eta * ctx.scratch["omega"]
+            )
+        if self.retraction == "qr":
+            return stiefel.project_qr(m)
+        if self.retraction == "polar":
+            return stiefel.project_polar(m)
+        return stiefel.project_newton_schulz(m)
+
+
+class Slpg(Method):
+    """SLPG smooth case (Liu, Xiao & Yuan 2024, App. B form).
+
+    direction:  D = G - Sym(X G^H) X   (Euclidean-metric gradient; not
+                orthogonal to the normal direction off-manifold — the
+                drift discussed in the paper's §B)
+    land:       X' = 3/2 M - 1/2 (M M^H) M   (POGO's land at lam = 1/2)
+    """
+
+    name = "slpg"
+
+    def direction(self, x, g, ctx):
+        return g - stiefel.sym(x @ jnp.conj(jnp.swapaxes(g, -1, -2))) @ x
+
+    def land(self, m, ctx):
+        return 1.5 * m - 0.5 * (stiefel.gram(m) @ m)
+
+
+class Rsdm(Method):
+    """RSDM (Han et al. 2025): exact rotation of a random submanifold.
+
+    Multiplicative: sample U ~ Haar St(r, p), restrict the left generator
+    ``Omega = Skew(G X^H)`` to it, rotate exactly with an r x r Cayley and
+    embed back: ``X' = (U^H Cayley(-eta U Omega U^H) U + I - U^H U) X``.
+    """
+
+    name = "rsdm"
+    multiplicative = True
+    needs_rng = True
+
+    def __init__(self, submanifold_dim: int = 64):
+        self.submanifold_dim = submanifold_dim
+
+    def direction(self, x, g, ctx):
+        p = x.shape[-2]
+        r = min(self.submanifold_dim, p)
+        ctx.scratch["omega"] = stiefel.skew(
+            g @ jnp.conj(jnp.swapaxes(x, -1, -2))
+        )
+        ctx.scratch["u"] = stiefel.random_stiefel(
+            ctx.key, (*x.shape[:-2], r, p), x.dtype
+        )
+        return None
+
+    def land(self, m, ctx):
+        x, u, omega = ctx.x, ctx.scratch["u"], ctx.scratch["omega"]
+        r = u.shape[-2]
+        uh = jnp.conj(jnp.swapaxes(u, -1, -2))
+        w = u @ omega @ uh  # (..., r, r) skew
+        eye_r = jnp.eye(r, dtype=x.dtype)
+        s = -ctx.eta * w
+        o = jnp.linalg.solve(eye_r - 0.5 * s, eye_r + 0.5 * s)  # Cayley
+        q_sub = uh @ o @ u
+        proj = uh @ u
+        return q_sub @ x + x - proj @ x
+
+
+# ------------------------------------------------------------------- configs
+
+
+@dataclasses.dataclass(frozen=True)
+class OrthoConfig:
+    """Driver-level knobs shared by every method (see DESIGN.md §Driver)."""
+
+    learning_rate: float | Callable = 1e-2  # float or schedule(count) -> eta
+    base_optimizer: Optional[GradientTransformation] = None  # must be *linear*
+    use_kernel: bool = False  # fused Pallas path where the method has one
+    safety_project_every: int = 0  # Newton-Schulz re-projection cadence
+    seed: int = 0  # PRNG seed for stochastic methods (RSDM)
+
+
+@dataclasses.dataclass(frozen=True)
+class PogoConfig(OrthoConfig):
+    lam: float = 0.5
+    find_root: bool = False  # solve the quartic landing polynomial exactly
+
+
+@dataclasses.dataclass(frozen=True)
+class LandingConfig(OrthoConfig):
+    lam: float = 1.0
+    eps: float = 0.5
+    safe_step: bool = True
+
+
+@dataclasses.dataclass(frozen=True)
+class LandingPCConfig(OrthoConfig):
+    lam: float = 0.1
+    eps: float = 0.5
+
+
+@dataclasses.dataclass(frozen=True)
+class RgdConfig(OrthoConfig):
+    retraction: str = "qr"  # qr | polar | cayley | newton_schulz
+
+
+@dataclasses.dataclass(frozen=True)
+class SlpgConfig(OrthoConfig):
+    pass
+
+
+@dataclasses.dataclass(frozen=True)
+class RsdmConfig(OrthoConfig):
+    submanifold_dim: int = 64
+
+
+_COMMON_FIELDS = frozenset(f.name for f in dataclasses.fields(OrthoConfig))
+
+
+def _method_kwargs(cfg: OrthoConfig) -> dict:
+    return {
+        f.name: getattr(cfg, f.name)
+        for f in dataclasses.fields(cfg)
+        if f.name not in _COMMON_FIELDS
+    }
+
+
+# ------------------------------------------------------------------ registry
+
+
+@dataclasses.dataclass(frozen=True)
+class MethodSpec:
+    name: str
+    factory: Callable[..., Method]  # Method class / factory taking method kwargs
+    config_cls: type
+
+
+METHODS: dict[str, MethodSpec] = {}
+_CONFIG_TO_SPEC: dict[type, MethodSpec] = {}
+
+
+def register_method(name: str, factory: Callable[..., Method], config_cls: type):
+    """Register a method so strings and typed configs both construct it."""
+    spec = MethodSpec(name=name, factory=factory, config_cls=config_cls)
+    METHODS[name] = spec
+    _CONFIG_TO_SPEC[config_cls] = spec
+    return spec
+
+
+register_method("pogo", Pogo, PogoConfig)
+register_method("landing", Landing, LandingConfig)
+register_method("landing_pc", LandingPC, LandingPCConfig)
+register_method("rgd", Rgd, RgdConfig)
+register_method("slpg", Slpg, SlpgConfig)
+register_method("rsdm", Rsdm, RsdmConfig)
+
+
+def method_overrides(method: str, **candidates) -> dict:
+    """Filter kwargs down to the ones ``method``'s config declares.
+
+    ``None`` values mean "use the method default" and are dropped. Lets a
+    generic caller (the trainer) forward optional knobs without naming
+    methods.
+    """
+    if method not in METHODS:
+        raise ValueError(f"unknown orthoptimizer {method!r} (have {sorted(METHODS)})")
+    fields = {
+        f.name
+        for f in dataclasses.fields(METHODS[method].config_cls)
+        if f.name not in _COMMON_FIELDS
+    }
+    return {k: v for k, v in candidates.items() if v is not None and k in fields}
+
+
+# -------------------------------------------------------------------- driver
+
+
+def orthogonal(
+    method: str,
+    *,
+    learning_rate: float | Callable = 1e-2,
+    base_optimizer: Optional[GradientTransformation] = None,
+    use_kernel: bool = False,
+    safety_project_every: int = 0,
+    seed: int = 0,
+    **method_kwargs,
+) -> GradientTransformation:
+    """Build any registered orthoptimizer by name. See module docstring."""
+    if method not in METHODS:
+        raise ValueError(f"unknown orthoptimizer {method!r} (have {sorted(METHODS)})")
+    spec = METHODS[method]
+    try:
+        cfg = spec.config_cls(
+            learning_rate=learning_rate,
+            base_optimizer=base_optimizer,
+            use_kernel=use_kernel,
+            safety_project_every=safety_project_every,
+            seed=seed,
+            **method_kwargs,
+        )
+    except TypeError as e:
+        raise TypeError(f"bad kwargs for orthoptimizer {method!r}: {e}") from None
+    return orthogonal_from_config(cfg)
+
+
+def orthogonal_from_config(cfg: OrthoConfig) -> GradientTransformation:
+    """Build an orthoptimizer from its typed config dataclass."""
+    spec = _CONFIG_TO_SPEC.get(type(cfg))
+    if spec is None:
+        raise ValueError(
+            f"unregistered config type {type(cfg).__name__} "
+            f"(have {[c.__name__ for c in _CONFIG_TO_SPEC]})"
+        )
+    return _build(spec.factory(**_method_kwargs(cfg)), cfg)
+
+
+def _build(method: Method, cfg: OrthoConfig) -> GradientTransformation:
+    base = cfg.base_optimizer
+    has_kernel = cfg.use_kernel and method.kernel_update is not None
+
+    def init(params):
+        base_state = base.init(params) if base else ()
+        dist = jax.tree.map(lambda p: jnp.zeros([], jnp.float32), params)
+        return OrthoState(
+            count=jnp.zeros([], jnp.int32),
+            base_state=base_state,
+            rng=jax.random.PRNGKey(cfg.seed),
+            last_distance=dist,
+            extras=(),
+        )
+
+    def update(grads, state, params=None):
+        if params is None:
+            raise ValueError(
+                f"{method.name} is a manifold optimizer; params are required"
+            )
+        if base is not None:
+            g, base_state = base.update(grads, state.base_state, params)
+        else:
+            g, base_state = grads, ()
+        count = state.count + 1
+        eta0 = (
+            cfg.learning_rate(state.count)
+            if callable(cfg.learning_rate)
+            else cfg.learning_rate
+        )
+
+        leaves, treedef = jax.tree.flatten(params)
+        gleaves = jax.tree.flatten(g)[0]
+        if method.needs_rng:
+            rng, subkey = jax.random.split(state.rng)
+            keys = list(jax.random.split(subkey, len(leaves)))
+        else:
+            rng = state.rng
+            keys = [None] * len(leaves)
+
+        def step(x, gg, key):
+            # Tall leaves are constrained along their transpose (St needs
+            # p <= n); shapes are static so this is trace-time dispatch.
+            transpose = x.shape[-2] > x.shape[-1]
+            if transpose:
+                x, gg = jnp.swapaxes(x, -1, -2), jnp.swapaxes(gg, -1, -2)
+            x32 = x.astype(_accum_dtype(x.dtype))
+            g32 = gg.astype(x32.dtype)
+            eta = jnp.asarray(eta0, jnp.float32).astype(_scalar_dtype(x32.dtype))
+            ctx = StepCtx(
+                x=x32,
+                g=g32,
+                eta=eta,
+                count=count,
+                key=key,
+                use_kernel=cfg.use_kernel,
+                scratch={},
+            )
+            if has_kernel:
+                x_next = method.kernel_update(x32, g32, ctx)
+            else:
+                d = method.direction(x32, g32, ctx)
+                if method.multiplicative or d is None:
+                    m = x32
+                else:
+                    m = x32 - ctx.eta * d
+                x_next = method.land(m, ctx)
+            if cfg.safety_project_every:
+                do = (count % cfg.safety_project_every) == 0
+                x_next = jax.lax.cond(
+                    do, lambda v: stiefel.project_newton_schulz(v), lambda v: v, x_next
+                )
+            upd = (x_next - x32).astype(x.dtype)
+            if transpose:
+                upd = jnp.swapaxes(upd, -1, -2)
+            return upd
+
+        upd_leaves = [step(x, gg, k) for x, gg, k in zip(leaves, gleaves, keys)]
+        updates = jax.tree.unflatten(treedef, upd_leaves)
+        dist = jax.tree.map(_leaf_distance, params, updates)
+        return updates, OrthoState(
+            count=count,
+            base_state=base_state,
+            rng=rng,
+            last_distance=dist,
+            extras=state.extras,
+        )
+
+    return GradientTransformation(init, update)
+
+
+def _leaf_distance(x, u):
+    """Post-update ``max ||XX^H - I||_F`` in manifold orientation, fp32."""
+    y = (x + u).astype(jnp.promote_types(x.dtype, jnp.float32))
+    if y.shape[-2] > y.shape[-1]:
+        y = jnp.swapaxes(y, -1, -2)
+    return jnp.max(stiefel.manifold_distance(y)).astype(jnp.float32)
+
+
+# ----------------------------------------------------------------- telemetry
+
+
+def ortho_states(opt_state) -> list[OrthoState]:
+    """All :class:`OrthoState` nodes anywhere inside an optimizer state
+    (chained, partitioned, nested — any container jax.tree traverses)."""
+    nodes = jax.tree.leaves(
+        opt_state, is_leaf=lambda n: isinstance(n, OrthoState)
+    )
+    return [n for n in nodes if isinstance(n, OrthoState)]
+
+
+def max_distance(opt_state) -> jax.Array:
+    """Max manifold distance across every orthoptimizer-managed leaf.
+
+    This is the uniform telemetry contract: any state built by
+    :func:`orthogonal` reports it, so trainers need no per-method walking.
+    """
+    dists = []
+    for s in ortho_states(opt_state):
+        dists.extend(jax.tree.leaves(s.last_distance))
+    if not dists:
+        return jnp.zeros([], jnp.float32)
+    return jnp.max(jnp.stack(dists))

@@ -2,71 +2,37 @@
 
 Update: ``X' = X - eta * (grad_R f(X) + lam * (X X^H - I) X)``.
 
-Feasibility is only asymptotic: iterates are kept within an eps-ball of the
-manifold by a *safe step size*. Rather than the paper's conservative bound,
-we compute the exact quartic distance polynomial of the landing direction
-(the same machinery as POGO's landing polynomial, Lemma 3.1 with
-``B = -Lambda``) and pick the largest eta <= eta0 keeping ``dist <= eps``;
-this is a strict improvement that only costs O(p^2 n) like everything else.
+In the unified two-stage API this is a pure *direction* method — the land
+stage is the identity (feasibility is only asymptotic). Iterates are kept
+within an eps-ball of the manifold by a *safe step size*: rather than the
+paper's conservative bound, the direction stage computes the exact quartic
+distance polynomial of the landing direction (the same machinery as POGO's
+landing polynomial, Lemma 3.1 with ``B = -Lambda``) and picks the largest
+eta <= eta0 keeping ``dist <= eps`` — a strict improvement that only costs
+O(p^2 n) like everything else.
+
+The math lives in :class:`repro.core.api.Landing` /
+:class:`repro.core.api.LandingPC`; this module keeps the thin back-compat
+constructors.
 """
 
 from __future__ import annotations
 
-import dataclasses
-from typing import NamedTuple, Optional
-
-import jax
-import jax.numpy as jnp
+from typing import Optional
 
 from ..optim.transform import GradientTransformation
-from . import quartic, stiefel
+from .api import (  # noqa: F401 (back-compat re-exports)
+    Landing,
+    LandingConfig,
+    LandingPC,
+    LandingPCConfig,
+    OrthoState,
+    _safe_eta,
+    orthogonal_from_config,
+)
 
-
-class LandingState(NamedTuple):
-    count: jax.Array
-    base_state: tuple
-    last_distance: jax.Array
-
-
-def _landing_direction(x, g, lam):
-    r = stiefel.riemannian_gradient(x, g)
-    n = stiefel.penalty_grad(x)
-    return r + lam * n
-
-
-def _safe_eta(x, direction, eta0, eps):
-    """Exact safe step: largest eta in (0, eta0] with dist(X - eta*D) <= eps.
-
-    dist^2(eta) is the quartic || C + eta*Dm + eta^2*Em ||^2 with
-    C = XX^H - I, Dm = -(X D^H + D X^H), Em = D D^H. We solve
-    dist^2(eta) = eps^2 and take the smallest positive real root; if none is
-    below eta0, eta0 itself is safe.
-    """
-    xh = jnp.conj(jnp.swapaxes(x, -1, -2))
-    dh = jnp.conj(jnp.swapaxes(direction, -1, -2))
-    p = x.shape[-2]
-    c = x @ xh - jnp.eye(p, dtype=x.dtype)
-    dm = -(x @ dh + direction @ xh)
-    em = direction @ dh
-
-    def ip(a, b):
-        return jnp.sum(jnp.real(jnp.conj(a) * b), axis=(-2, -1))
-
-    a4 = ip(em, em)
-    a3 = 2.0 * ip(dm, em)
-    a2 = ip(dm, dm) + 2.0 * ip(c, em)
-    a1 = 2.0 * ip(c, dm)
-    a0 = ip(c, c) - eps**2
-    roots = quartic.solve_quartic(a4, a3, a2, a1, a0)
-    real_ok = jnp.abs(jnp.imag(roots)) < 1e-5 * (1 + jnp.abs(jnp.real(roots)))
-    pos = jnp.real(roots) > 0
-    candidates = jnp.where(real_ok & pos, jnp.real(roots), jnp.inf)
-    eta_max = jnp.min(candidates, axis=-1)
-    # Degenerate (already violating eps, a0 > 0 at eta=0): shrink hard.
-    violating = a0 > 0
-    eta = jnp.minimum(eta0, eta_max)
-    eta = jnp.where(violating, jnp.minimum(eta, 0.5 * eta0), eta)
-    return jnp.maximum(eta, 1e-8)
+# Back-compat alias: the uniform driver state.
+LandingState = OrthoState
 
 
 def landing(
@@ -76,46 +42,15 @@ def landing(
     safe_step: bool = True,
     base_optimizer: Optional[GradientTransformation] = None,
 ) -> GradientTransformation:
-    def init(params):
-        base_state = base_optimizer.init(params) if base_optimizer else ()
-        dist = jax.tree.map(lambda p: jnp.zeros([], jnp.float32), params)
-        return LandingState(jnp.zeros([], jnp.int32), base_state, dist)
-
-    def update(grads, state, params=None):
-        if params is None:
-            raise ValueError("landing requires params")
-        if base_optimizer is not None:
-            g, base_state = base_optimizer.update(grads, state.base_state, params)
-        else:
-            g, base_state = grads, ()
-        eta0 = learning_rate(state.count) if callable(learning_rate) else learning_rate
-
-        def step(x, gg):
-            x32 = x.astype(jnp.promote_types(x.dtype, jnp.float32)) if not jnp.issubdtype(
-                x.dtype, jnp.complexfloating
-            ) else x
-            g32 = gg.astype(x32.dtype)
-            d = _landing_direction(x32, g32, lam)
-            if safe_step:
-                eta = _safe_eta(x32, d, eta0, eps)[..., None, None]
-            else:
-                eta = jnp.asarray(eta0)
-            eta = eta.astype(jnp.float32)
-            return (-(eta * d)).astype(x.dtype)
-
-        updates = jax.tree.map(step, params, g)
-        dist = jax.tree.map(
-            lambda x, u: jnp.max(
-                stiefel.manifold_distance(
-                    (x + u).astype(jnp.promote_types(x.dtype, jnp.float32))
-                )
-            ).astype(jnp.float32),
-            params,
-            updates,
+    return orthogonal_from_config(
+        LandingConfig(
+            learning_rate=learning_rate,
+            base_optimizer=base_optimizer,
+            lam=lam,
+            eps=eps,
+            safe_step=safe_step,
         )
-        return updates, LandingState(state.count + 1, base_state, dist)
-
-    return GradientTransformation(init, update)
+    )
 
 
 def landing_pc(
@@ -126,52 +61,14 @@ def landing_pc(
 ) -> GradientTransformation:
     """LandingPC (Loconte et al. 2025a) — Landing tailored to squared PCs.
 
-    Reference code is unpublished; we reconstruct the documented behaviour:
-    per-matrix *relative* field balancing, where the attraction strength is
-    rescaled by the ratio of the loss-field and normal-field norms so the
-    iterate keeps approaching the manifold even when the Riemannian gradient
-    is large (matches Fig. 8: LandingPC "consistently nears the manifold"),
-    plus the safe-step rule. Flagged as best-effort in DESIGN.md.
+    Best-effort reconstruction (reference code unpublished); see
+    :class:`repro.core.api.LandingPC` and DESIGN.md.
     """
-
-    def init(params):
-        base_state = base_optimizer.init(params) if base_optimizer else ()
-        dist = jax.tree.map(lambda p: jnp.zeros([], jnp.float32), params)
-        return LandingState(jnp.zeros([], jnp.int32), base_state, dist)
-
-    def update(grads, state, params=None):
-        if params is None:
-            raise ValueError("landing_pc requires params")
-        if base_optimizer is not None:
-            g, base_state = base_optimizer.update(grads, state.base_state, params)
-        else:
-            g, base_state = grads, ()
-        eta0 = learning_rate(state.count) if callable(learning_rate) else learning_rate
-
-        def step(x, gg):
-            x32 = x if jnp.issubdtype(x.dtype, jnp.complexfloating) else x.astype(
-                jnp.promote_types(x.dtype, jnp.float32)
-            )
-            g32 = gg.astype(x32.dtype)
-            r = stiefel.riemannian_gradient(x32, g32)
-            n = stiefel.penalty_grad(x32)
-            rn = jnp.sqrt(jnp.sum(jnp.abs(r) ** 2, axis=(-2, -1), keepdims=True))
-            nn = jnp.sqrt(jnp.sum(jnp.abs(n) ** 2, axis=(-2, -1), keepdims=True))
-            lam_eff = lam * (1.0 + rn / (nn + 1e-12))
-            d = r + lam_eff.astype(r.dtype) * n
-            eta = _safe_eta(x32, d, eta0, eps)[..., None, None].astype(jnp.float32)
-            return (-(eta * d)).astype(x.dtype)
-
-        updates = jax.tree.map(step, params, g)
-        dist = jax.tree.map(
-            lambda x, u: jnp.max(
-                stiefel.manifold_distance(
-                    (x + u).astype(jnp.promote_types(x.dtype, jnp.float32))
-                )
-            ).astype(jnp.float32),
-            params,
-            updates,
+    return orthogonal_from_config(
+        LandingPCConfig(
+            learning_rate=learning_rate,
+            base_optimizer=base_optimizer,
+            lam=lam,
+            eps=eps,
         )
-        return updates, LandingState(state.count + 1, base_state, dist)
-
-    return GradientTransformation(init, update)
+    )

@@ -1,58 +1,38 @@
 """POGO — Proximal One-step Geometric Orthoptimizer (the paper's Alg. 1).
 
-Exposed as a ``GradientTransformation`` over a pytree whose leaves are
-stacked Stiefel matrices ``(..., p, n)`` with ``p <= n``. The transformation
-returns *updates* ``X_next - X`` so it composes with the standard
-``apply_updates`` contract and with ``optim.partition`` (orthogonal leaves
-get POGO, everything else gets AdamW — the pod-scale trainer relies on
-that split).
-
-Key structure (see DESIGN.md §1): all products are O(p^2 n) —
+The math lives in :class:`repro.core.api.Pogo`, expressed as the unified
+direction/land stages (see DESIGN.md §1); all products are O(p^2 n):
 
     G  = BaseOptimizer(grad)            (linear base optimizer, Def. 1)
     A  = X X^H, B = X G^H               (p x p)
-    R  = 1/2 (A G - B X)                Riemannian gradient
-    M  = X - eta R                      leap
+    R  = 1/2 (A G - B X)                Riemannian gradient (direction)
+    M  = X - eta R                      leap (driver)
     X' = (1+lam) M - lam (M M^H) M      land (lam = 1/2 or quartic root)
 
-``use_kernel=True`` routes the whole update through the fused Pallas TPU
-kernel (``repro.kernels.ops.pogo_update``); the default jnp path is the
-oracle that kernel is tested against.
+This module is the thin back-compat constructor: ``pogo(...)`` returns the
+same ``GradientTransformation`` as ``api.orthogonal("pogo", ...)``. Tall
+leaves, fp32 accumulation, kernel routing (``use_kernel=True`` -> fused
+Pallas ``repro.kernels.ops.pogo_update``), safety projection, and distance
+telemetry are all owned by the shared driver.
 """
 
 from __future__ import annotations
 
-import dataclasses
-from typing import NamedTuple, Optional
-
-import jax
-import jax.numpy as jnp
+from typing import Optional
 
 from ..optim.transform import GradientTransformation
-from . import quartic, stiefel
+from .api import (  # noqa: F401 (back-compat re-exports)
+    OrthoState,
+    Pogo,
+    PogoConfig,
+    _accum_dtype,
+    _scalar_dtype,
+    orthogonal,
+    orthogonal_from_config,
+)
 
-
-class PogoState(NamedTuple):
-    count: jax.Array
-    base_state: tuple  # state of the wrapped base optimizer
-    last_distance: jax.Array  # pytree of per-leaf max manifold distance (telemetry)
-
-
-@dataclasses.dataclass(frozen=True)
-class PogoConfig:
-    learning_rate: float | object = 1e-2  # float or schedule(count) -> eta
-    lam: float = 0.5
-    find_root: bool = False  # solve the quartic landing polynomial exactly
-    base_optimizer: Optional[GradientTransformation] = None  # must be *linear*
-    use_kernel: bool = False  # fused Pallas path
-    safety_project_every: int = 0  # optional Newton-Schulz re-projection cadence
-
-
-def _eta(config: PogoConfig, count: jax.Array) -> jax.Array:
-    lr = config.learning_rate
-    if callable(lr):
-        return lr(count)
-    return jnp.asarray(lr, jnp.float32)
+# Back-compat alias: POGO's state is the uniform driver state.
+PogoState = OrthoState
 
 
 def pogo(
@@ -64,95 +44,13 @@ def pogo(
     safety_project_every: int = 0,
 ) -> GradientTransformation:
     """Build the POGO transformation. See module docstring."""
-    config = PogoConfig(
-        learning_rate=learning_rate,
-        lam=lam,
-        find_root=find_root,
-        base_optimizer=base_optimizer,
-        use_kernel=use_kernel,
-        safety_project_every=safety_project_every,
+    return orthogonal_from_config(
+        PogoConfig(
+            learning_rate=learning_rate,
+            base_optimizer=base_optimizer,
+            use_kernel=use_kernel,
+            safety_project_every=safety_project_every,
+            lam=lam,
+            find_root=find_root,
+        )
     )
-
-    def init(params):
-        base_state = (
-            config.base_optimizer.init(params) if config.base_optimizer else ()
-        )
-        dist = jax.tree.map(lambda p: jnp.zeros([], jnp.float32), params)
-        return PogoState(
-            count=jnp.zeros([], jnp.int32), base_state=base_state, last_distance=dist
-        )
-
-    def update(grads, state, params=None):
-        if params is None:
-            raise ValueError("POGO is a manifold optimizer; params are required")
-        if config.base_optimizer is not None:
-            g, base_state = config.base_optimizer.update(grads, state.base_state, params)
-        else:
-            g, base_state = grads, ()
-        count = state.count + 1
-        eta = _eta(config, state.count)
-
-        def step(x, gg):
-            # Tall leaves are constrained along their transpose (St needs
-            # p <= n); shapes are static so this is trace-time dispatch.
-            transpose = x.shape[-2] > x.shape[-1]
-            if transpose:
-                x, gg = jnp.swapaxes(x, -1, -2), jnp.swapaxes(gg, -1, -2)
-            x32 = x.astype(_accum_dtype(x.dtype))
-            g32 = gg.astype(x32.dtype)
-            if config.use_kernel:
-                from ..kernels import ops as kops
-
-                x_next = kops.pogo_update(
-                    x32, g32, eta, lam=config.lam, find_root=config.find_root
-                )
-            else:
-                x_next = _pogo_step_ref(x32, g32, eta, config)
-            if config.safety_project_every:
-                do = (count % config.safety_project_every) == 0
-                x_next = jax.lax.cond(
-                    do, lambda v: stiefel.project_newton_schulz(v), lambda v: v, x_next
-                )
-            upd = (x_next - x32).astype(x.dtype)
-            if transpose:
-                upd = jnp.swapaxes(upd, -1, -2)
-            return upd
-
-        updates = jax.tree.map(step, params, g)
-
-        def _dist(x, u):
-            y = (x + u).astype(jnp.promote_types(x.dtype, jnp.float32))
-            if y.shape[-2] > y.shape[-1]:
-                y = jnp.swapaxes(y, -1, -2)
-            return jnp.max(stiefel.manifold_distance(y)).astype(jnp.float32)
-
-        dist = jax.tree.map(_dist, params, updates)
-        return updates, PogoState(count=count, base_state=base_state, last_distance=dist)
-
-    return GradientTransformation(init, update)
-
-
-def _accum_dtype(dtype):
-    """POGO's land step needs >= fp32 accumulation for 1e-6 feasibility."""
-    if jnp.issubdtype(dtype, jnp.complexfloating):
-        return dtype
-    return jnp.promote_types(dtype, jnp.float32)
-
-
-def _pogo_step_ref(x: jax.Array, g: jax.Array, eta, config: PogoConfig) -> jax.Array:
-    """Reference jnp POGO step on a single stacked leaf (..., p, n)."""
-    r = stiefel.riemannian_gradient(x, g)
-    m = x - jnp.asarray(eta, jnp.float32).astype(_scalar_dtype(x.dtype)) * r
-    if config.find_root:
-        lam = quartic.optimal_lambda(m, fallback=config.lam)
-        lam = lam[..., None, None].astype(_scalar_dtype(x.dtype))
-    else:
-        lam = jnp.asarray(config.lam, _scalar_dtype(x.dtype))
-    c = stiefel.gram(m)
-    return (1.0 + lam) * m - lam * (c @ m)
-
-
-def _scalar_dtype(dtype):
-    if jnp.issubdtype(dtype, jnp.complexfloating):
-        return jnp.float64 if dtype == jnp.complex128 else jnp.float32
-    return dtype

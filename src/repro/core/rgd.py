@@ -1,26 +1,33 @@
 """Riemannian gradient descent with retraction (classic feasible baseline).
 
-``X' = R_X(-eta * grad)`` with QR, polar, or Cayley retraction. This is the
-method the paper beats on scalability: QR/SVD are iterative, numerically
-fragile at low precision, and on accelerators involve host round-trips; with
-thousands of matrices they dominate step time (paper Fig. 1: 17 h vs 3 min).
+``X' = R_X(-eta * grad)`` with QR, polar, Cayley, or Newton-Schulz
+retraction. This is the method the paper beats on scalability: QR/SVD are
+iterative, numerically fragile at low precision, and on accelerators
+involve host round-trips; with thousands of matrices they dominate step
+time (paper Fig. 1: 17 h vs 3 min).
+
+In the unified two-stage API the retraction *is* the land stage
+(:class:`repro.core.api.Rgd`): qr/polar/newton_schulz project the leap
+``M = X - eta R``; cayley is multiplicative (exact rotation from the left
+skew generator ``Omega = Skew(G X^H)`` — complete only on O(p), see the
+note in the api module). This module keeps the thin back-compat
+constructor.
 """
 
 from __future__ import annotations
 
-from typing import NamedTuple, Optional
-
-import jax
-import jax.numpy as jnp
+from typing import Optional
 
 from ..optim.transform import GradientTransformation
-from . import stiefel
+from .api import (  # noqa: F401 (back-compat re-exports)
+    OrthoState,
+    Rgd,
+    RgdConfig,
+    orthogonal_from_config,
+)
 
-
-class RgdState(NamedTuple):
-    count: jax.Array
-    base_state: tuple
-    last_distance: jax.Array
+# Back-compat alias: the uniform driver state.
+RgdState = OrthoState
 
 
 def rgd(
@@ -28,58 +35,10 @@ def rgd(
     retraction: str = "qr",
     base_optimizer: Optional[GradientTransformation] = None,
 ) -> GradientTransformation:
-    if retraction not in ("qr", "polar", "cayley", "newton_schulz"):
-        raise ValueError(f"unknown retraction {retraction!r}")
-
-    def init(params):
-        base_state = base_optimizer.init(params) if base_optimizer else ()
-        dist = jax.tree.map(lambda p: jnp.zeros([], jnp.float32), params)
-        return RgdState(jnp.zeros([], jnp.int32), base_state, dist)
-
-    def update(grads, state, params=None):
-        if params is None:
-            raise ValueError("rgd requires params")
-        if base_optimizer is not None:
-            g, base_state = base_optimizer.update(grads, state.base_state, params)
-        else:
-            g, base_state = grads, ()
-        eta = learning_rate(state.count) if callable(learning_rate) else learning_rate
-
-        def step(x, gg):
-            x32 = x if jnp.issubdtype(x.dtype, jnp.complexfloating) else x.astype(
-                jnp.promote_types(x.dtype, jnp.float32)
-            )
-            g32 = gg.astype(x32.dtype)
-            if retraction == "cayley":
-                # Left-acting skew generator: Omega = Skew(G X^H) (p x p).
-                # NOTE: exact on the manifold but spans only the SO(p)
-                # orbit of X — a complete tangent basis needs the X-perp
-                # directions too, so for p < n this is the *rotation
-                # primitive* (as used inside RSDM), not a full RGD; use
-                # qr/polar/newton_schulz for p < n problems.
-                omega = stiefel.skew(g32 @ jnp.conj(jnp.swapaxes(x32, -1, -2)))
-                x_next = stiefel.retraction_cayley(x32, -jnp.asarray(eta, jnp.float32) * omega)
-            else:
-                r = stiefel.riemannian_gradient(x32, g32)
-                v = -jnp.asarray(eta, jnp.float32) * r
-                if retraction == "qr":
-                    x_next = stiefel.retraction_qr(x32, v)
-                elif retraction == "polar":
-                    x_next = stiefel.retraction_polar(x32, v)
-                else:  # newton_schulz
-                    x_next = stiefel.project_newton_schulz(x32 + v)
-            return (x_next - x32).astype(x.dtype)
-
-        updates = jax.tree.map(step, params, g)
-        dist = jax.tree.map(
-            lambda x, u: jnp.max(
-                stiefel.manifold_distance(
-                    (x + u).astype(jnp.promote_types(x.dtype, jnp.float32))
-                )
-            ).astype(jnp.float32),
-            params,
-            updates,
+    return orthogonal_from_config(
+        RgdConfig(
+            learning_rate=learning_rate,
+            base_optimizer=base_optimizer,
+            retraction=retraction,
         )
-        return updates, RgdState(state.count + 1, base_state, dist)
-
-    return GradientTransformation(init, update)
+    )

@@ -1,89 +1,55 @@
 """RSDM — Riemannian Random Submanifold Descent (Han et al. 2025) baseline.
 
 At each step, sample a random r-dimensional subspace of the rotation group
-acting on the rows of X and take an exact (Cayley-retracted) Riemannian step
-restricted to it:
+acting on the rows of X and take an exact (Cayley-retracted) Riemannian
+step restricted to it:
 
     Omega = Skew(G X^H)                 # full (p x p) left generator
-    U ~ Haar St(r, p)                   # random submanifold ("orthogonal sampling")
+    U ~ Haar St(r, p)                   # random submanifold
     W = U Omega U^H                     # restricted (r x r) skew generator
     O = Cayley(-eta W)                  # exact r x r rotation
-    Q = U^H O U + (I_p - U^H U)         # embed back: rotation of the sampled subspace
+    Q = U^H O U + (I_p - U^H U)         # embed back
     X' = Q X
 
 Q is exactly orthogonal in infinite precision, so RSDM is "feasible" on
-paper; in fp32 the repeated left-rotations accumulate rounding error and the
-iterates drift off the manifold — precisely the pathology the paper observes
-(Figs. 4-6) and resolves in fp64 (Fig. C.1). We reproduce both regimes.
+paper; in fp32 the repeated left-rotations accumulate rounding error and
+the iterates drift off the manifold — precisely the pathology the paper
+observes (Figs. 4-6) and resolves in fp64 (Fig. C.1). We reproduce both
+regimes.
+
+The math lives in :class:`repro.core.api.Rsdm` (a multiplicative method in
+the two-stage API); the driver owns RNG plumbing, base-optimizer chaining
+(new — the old hand-rolled version rejected ``base_optimizer`` and crashed
+when selected from the trainer), tall-leaf transposition, and telemetry.
 """
 
 from __future__ import annotations
 
-from typing import NamedTuple, Optional
-
-import jax
-import jax.numpy as jnp
+from typing import Optional
 
 from ..optim.transform import GradientTransformation
-from . import stiefel
+from .api import (  # noqa: F401 (back-compat re-exports)
+    OrthoState,
+    Rsdm,
+    RsdmConfig,
+    orthogonal_from_config,
+)
 
-
-class RsdmState(NamedTuple):
-    count: jax.Array
-    key: jax.Array
-    last_distance: jax.Array
+# Back-compat alias: the uniform driver state.
+RsdmState = OrthoState
 
 
 def rsdm(
     learning_rate=1e-2,
     submanifold_dim: int = 64,
     seed: int = 0,
+    base_optimizer: Optional[GradientTransformation] = None,
 ) -> GradientTransformation:
-    def init(params):
-        dist = jax.tree.map(lambda p: jnp.zeros([], jnp.float32), params)
-        return RsdmState(
-            jnp.zeros([], jnp.int32), jax.random.PRNGKey(seed), dist
+    return orthogonal_from_config(
+        RsdmConfig(
+            learning_rate=learning_rate,
+            base_optimizer=base_optimizer,
+            seed=seed,
+            submanifold_dim=submanifold_dim,
         )
-
-    def update(grads, state, params=None):
-        if params is None:
-            raise ValueError("rsdm requires params")
-        eta = learning_rate(state.count) if callable(learning_rate) else learning_rate
-        key, subkey = jax.random.split(state.key)
-        leaves, treedef = jax.tree.flatten(params)
-        gleaves = jax.tree.flatten(grads)[0]
-        keys = jax.random.split(subkey, len(leaves))
-
-        def step(x, gg, k):
-            x32 = x if jnp.issubdtype(x.dtype, jnp.complexfloating) else x.astype(
-                jnp.promote_types(x.dtype, jnp.float32)
-            )
-            g32 = gg.astype(x32.dtype)
-            p = x32.shape[-2]
-            r = min(submanifold_dim, p)
-            omega = stiefel.skew(g32 @ jnp.conj(jnp.swapaxes(x32, -1, -2)))  # (..., p, p)
-            u = stiefel.random_stiefel(k, (*x32.shape[:-2], r, p), x32.dtype)
-            uh = jnp.conj(jnp.swapaxes(u, -1, -2))
-            w = u @ omega @ uh  # (..., r, r) skew
-            eye_r = jnp.eye(r, dtype=x32.dtype)
-            s = -jnp.asarray(eta, jnp.float32) * w
-            o = jnp.linalg.solve(eye_r - 0.5 * s, eye_r + 0.5 * s)  # Cayley
-            q_sub = uh @ o @ u
-            proj = uh @ u
-            x_next = q_sub @ x32 + x32 - proj @ x32
-            return (x_next - x32).astype(x.dtype)
-
-        updates = [step(x, gg, k) for x, gg, k in zip(leaves, gleaves, keys)]
-        updates = jax.tree.unflatten(treedef, updates)
-        dist = jax.tree.map(
-            lambda x, u: jnp.max(
-                stiefel.manifold_distance(
-                    (x + u).astype(jnp.promote_types(x.dtype, jnp.float32))
-                )
-            ).astype(jnp.float32),
-            params,
-            updates,
-        )
-        return updates, RsdmState(state.count + 1, key, dist)
-
-    return GradientTransformation(init, update)
+    )

@@ -1,75 +1,41 @@
 """SLPG smooth-case baseline (Liu, Xiao & Yuan 2024), appendix-B form.
 
-For the smooth problem (r = 0) SLPG reduces to:
+For the smooth problem (r = 0) SLPG reduces to two stages:
 
-    Y  = X - eta * (G - Sym(X G^H) X)        # Euclidean-metric Riemannian grad
-    X' = (3/2 I - 1/2 Y Y^H) Y               # 1st-order Taylor of polar retraction
+    direction:  D = G - Sym(X G^H) X         # Euclidean-metric gradient
+    land:       X' = (3/2 I - 1/2 M M^H) M   # 1st-order polar retraction
 
 (converted to the row-orthogonal ``X X^H = I_p`` convention; the original
-paper uses column-orthogonal matrices). The normal step coincides with
-POGO's land step at lambda = 1/2; the tangent step differs: SLPG uses the
-Euclidean-metric gradient ``G - Sym(X G^H) X`` which is *not* orthogonal to
-the normal direction when X is off-manifold — the drift the paper discusses
-in §B and the reason SLPG needs small learning rates in Figs. 7-8.
+paper uses column-orthogonal matrices). The land stage coincides with
+POGO's at lambda = 1/2; the direction differs: the Euclidean-metric
+gradient is *not* orthogonal to the normal direction when X is
+off-manifold — the drift the paper discusses in §B and the reason SLPG
+needs small learning rates in Figs. 7-8.
+
+The math lives in :class:`repro.core.api.Slpg`; this module keeps the thin
+back-compat constructor.
 """
 
 from __future__ import annotations
 
-from typing import NamedTuple, Optional
-
-import jax
-import jax.numpy as jnp
+from typing import Optional
 
 from ..optim.transform import GradientTransformation
-from . import stiefel
+from .api import (  # noqa: F401 (back-compat re-exports)
+    OrthoState,
+    Slpg,
+    SlpgConfig,
+    orthogonal_from_config,
+)
 
-
-class SlpgState(NamedTuple):
-    count: jax.Array
-    base_state: tuple
-    last_distance: jax.Array
+# Back-compat alias: the uniform driver state.
+SlpgState = OrthoState
 
 
 def slpg(
     learning_rate=1e-2,
     base_optimizer: Optional[GradientTransformation] = None,
 ) -> GradientTransformation:
-    def init(params):
-        base_state = base_optimizer.init(params) if base_optimizer else ()
-        dist = jax.tree.map(lambda p: jnp.zeros([], jnp.float32), params)
-        return SlpgState(jnp.zeros([], jnp.int32), base_state, dist)
-
-    def update(grads, state, params=None):
-        if params is None:
-            raise ValueError("slpg requires params")
-        if base_optimizer is not None:
-            g, base_state = base_optimizer.update(grads, state.base_state, params)
-        else:
-            g, base_state = grads, ()
-        eta = learning_rate(state.count) if callable(learning_rate) else learning_rate
-
-        def step(x, gg):
-            x32 = x if jnp.issubdtype(x.dtype, jnp.complexfloating) else x.astype(
-                jnp.promote_types(x.dtype, jnp.float32)
-            )
-            g32 = gg.astype(x32.dtype)
-            # Euclidean-metric Riemannian gradient (row-orthogonal convention)
-            r = g32 - stiefel.sym(x32 @ jnp.conj(jnp.swapaxes(g32, -1, -2))) @ x32
-            y = x32 - jnp.asarray(eta, jnp.float32) * r
-            c = y @ jnp.conj(jnp.swapaxes(y, -1, -2))
-            x_next = (1.5 * y) - 0.5 * (c @ y)
-            return (x_next - x32).astype(x.dtype)
-
-        updates = jax.tree.map(step, params, g)
-        dist = jax.tree.map(
-            lambda x, u: jnp.max(
-                stiefel.manifold_distance(
-                    (x + u).astype(jnp.promote_types(x.dtype, jnp.float32))
-                )
-            ).astype(jnp.float32),
-            params,
-            updates,
-        )
-        return updates, SlpgState(state.count + 1, base_state, dist)
-
-    return GradientTransformation(init, update)
+    return orthogonal_from_config(
+        SlpgConfig(learning_rate=learning_rate, base_optimizer=base_optimizer)
+    )

@@ -1,0 +1,34 @@
+"""Version compat for jax distributed APIs.
+
+``jax.shard_map`` graduated from ``jax.experimental.shard_map`` after the
+0.4.x series, and the replication-check kwarg was renamed ``check_rep`` ->
+``check_vma`` along the way (not at the same release). Callers use the
+modern spelling; the shim translates based on the actual signature, not on
+where the function lives.
+"""
+
+from __future__ import annotations
+
+import inspect
+
+import jax
+
+if hasattr(jax, "shard_map"):
+    _shard_map_impl = jax.shard_map
+else:
+    from jax.experimental.shard_map import shard_map as _shard_map_impl
+
+try:
+    _ACCEPTS_CHECK_VMA = "check_vma" in inspect.signature(_shard_map_impl).parameters
+except (ValueError, TypeError):  # signature unavailable: assume old spelling
+    _ACCEPTS_CHECK_VMA = False
+
+if _ACCEPTS_CHECK_VMA:
+    shard_map = _shard_map_impl
+else:
+
+    def shard_map(f, /, *, mesh, in_specs, out_specs, check_vma=True, **kw):
+        return _shard_map_impl(
+            f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+            check_rep=check_vma, **kw,
+        )

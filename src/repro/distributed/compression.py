@@ -22,6 +22,8 @@ import jax.numpy as jnp
 from jax.sharding import Mesh
 from jax.sharding import PartitionSpec as P
 
+from .compat import shard_map
+
 
 class EFState(NamedTuple):
     residual: jax.Array  # same shape as the gradient
@@ -62,7 +64,7 @@ def make_compressed_allreduce(mesh: Mesh, axis: str = "data"):
             # training each data shard holds its own grad contribution; the
             # leaf spec here is "fully local" per device along data.
             spec = P(*([None] * g.ndim))
-            fn = jax.shard_map(
+            fn = shard_map(
                 inner, mesh=mesh,
                 in_specs=(spec, spec), out_specs=(spec, spec),
                 check_vma=False,

@@ -25,6 +25,8 @@ import jax.numpy as jnp
 from jax.sharding import Mesh
 from jax.sharding import PartitionSpec as P
 
+from .compat import shard_map
+
 
 def gpipe(
     stage_fn: Callable,  # (stage_params, x) -> x
@@ -87,7 +89,7 @@ def gpipe(
 
     def apply(stacked_stage_params, microbatches):
         param_specs = jax.tree.map(lambda x: P(axis), stacked_stage_params)
-        fn = jax.shard_map(
+        fn = shard_map(
             per_device,
             mesh=mesh,
             in_specs=(param_specs, P()),

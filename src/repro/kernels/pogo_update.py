@@ -33,6 +33,9 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+# Renamed across pallas releases (TPUCompilerParams -> CompilerParams).
+_CompilerParams = getattr(pltpu, "CompilerParams", None) or pltpu.TPUCompilerParams
+
 Array = jax.Array
 
 
@@ -160,7 +163,7 @@ def pogo_update_tiled(
             out_specs=[acc_spec, acc_spec],
         ),
         out_shape=[jax.ShapeDtypeStruct((bsz, p, p), jnp.float32)] * 2,
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "arbitrary")
         ),
         interpret=interpret,
@@ -178,7 +181,7 @@ def pogo_update_tiled(
             jax.ShapeDtypeStruct((bsz, p, n), jnp.float32),
             jax.ShapeDtypeStruct((bsz, p, p), jnp.float32),
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "arbitrary")
         ),
         interpret=interpret,
@@ -193,7 +196,7 @@ def pogo_update_tiled(
             out_specs=mat_spec,
         ),
         out_shape=jax.ShapeDtypeStruct((bsz, p, n), x.dtype),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "arbitrary")
         ),
         interpret=interpret,

@@ -6,6 +6,17 @@ from __future__ import annotations
 import jax
 
 
+def make_mesh(shape, axes):
+    """``jax.make_mesh`` with explicit-Auto axis types where the installed
+    jax supports them (``jax.sharding.AxisType`` appeared after 0.4.x;
+    older releases are Auto-only so omitting the kwarg is equivalent)."""
+    if hasattr(jax.sharding, "AxisType"):
+        return jax.make_mesh(
+            shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes)
+        )
+    return jax.make_mesh(shape, axes)
+
+
 def make_production_mesh(*, multi_pod: bool = False):
     """v5e pod mesh: 16x16 = 256 chips/pod; 2 pods = 512 for multi-pod.
 
@@ -15,9 +26,7 @@ def make_production_mesh(*, multi_pod: bool = False):
     """
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes)
-    )
+    return make_mesh(shape, axes)
 
 
 def make_test_mesh(n_devices: int | None = None, *, multi_pod: bool = False):
@@ -26,12 +35,6 @@ def make_test_mesh(n_devices: int | None = None, *, multi_pod: bool = False):
     if multi_pod:
         assert n % 2 == 0
         model = 2 if n >= 8 else 1
-        return jax.make_mesh(
-            (2, n // 2 // model, model), ("pod", "data", "model"),
-            axis_types=(jax.sharding.AxisType.Auto,) * 3,
-        )
+        return make_mesh((2, n // 2 // model, model), ("pod", "data", "model"))
     model = 2 if n >= 4 and n % 2 == 0 else 1
-    return jax.make_mesh(
-        (n // model, model), ("data", "model"),
-        axis_types=(jax.sharding.AxisType.Auto,) * 2,
-    )
+    return make_mesh((n // model, model), ("data", "model"))

@@ -45,7 +45,11 @@ def main(argv=None):
     ap.add_argument("--microbatches", type=int, default=1)
     ap.add_argument("--learning-rate", type=float, default=3e-4)
     ap.add_argument("--pogo-lr", type=float, default=0.5)
-    ap.add_argument("--orthoptimizer", default="pogo")
+    ap.add_argument("--orthoptimizer", default="pogo",
+                    help="any repro.core.METHODS key (pogo, landing, rgd, ...)")
+    ap.add_argument("--ortho-kwarg", action="append", default=[], metavar="K=V",
+                    help="method-specific kwarg, e.g. retraction=polar or "
+                         "submanifold_dim=32 (repeatable)")
     ap.add_argument("--pogo-kernel", action="store_true")
     ap.add_argument("--checkpoint-dir", default=None)
     ap.add_argument("--save-every", type=int, default=50)
@@ -81,11 +85,22 @@ def main(argv=None):
     params = tfm.init_params(key, cfg)
     params = ortho.project_init(params, cfg)
 
+    import ast
+
+    ortho_kwargs = {}
+    for kv in args.ortho_kwarg:
+        k, _, v = kv.partition("=")
+        try:
+            ortho_kwargs[k] = ast.literal_eval(v)
+        except (ValueError, SyntaxError):
+            ortho_kwargs[k] = v  # bare strings, e.g. retraction=polar
+
     train_cfg = TrainConfig(
         learning_rate=args.learning_rate,
         pogo_learning_rate=args.pogo_lr,
         microbatches=args.microbatches,
         orthoptimizer=args.orthoptimizer,
+        ortho_kwargs=ortho_kwargs,
         pogo_use_kernel=args.pogo_kernel,
         warmup_steps=min(20, args.steps // 5 + 1),
         decay_steps=args.steps,

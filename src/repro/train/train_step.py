@@ -1,7 +1,8 @@
 """The jitted training step: loss + grad + partitioned optimizer update.
 
 The optimizer is the paper's technique made first-class: orthogonal leaves
-(``models.ortho.label_tree``) are updated by POGO (VAdam base, fused-kernel
+(``models.ortho.label_tree``) are updated by the configured orthoptimizer
+(any ``core.METHODS`` entry, POGO by default, VAdam base, fused-kernel
 option), everything else by AdamW. Microbatch gradient accumulation runs as
 a ``lax.scan`` so the grad all-reduce of microbatch *i* can overlap the
 compute of *i+1* under XLA's latency-hiding scheduler.
@@ -10,15 +11,12 @@ compute of *i+1* under XLA's latency-hiding scheduler.
 from __future__ import annotations
 
 import dataclasses
-import functools
-from typing import Any, Optional
+from typing import Any, Mapping, Optional
 
 import jax
 import jax.numpy as jnp
 
-from .. import optim
-from ..core import pogo as _pogo_module  # noqa: F401 (shadowed by re-export)
-from ..core.pogo import pogo as pogo_fn
+from .. import core, optim
 from ..models import ortho, transformer as tfm
 
 PyTree = Any
@@ -27,18 +25,23 @@ PyTree = Any
 @dataclasses.dataclass(frozen=True)
 class TrainConfig:
     learning_rate: float = 3e-4
-    pogo_learning_rate: float = 0.5
+    pogo_learning_rate: float = 0.5  # the orthoptimizer's learning rate
     weight_decay: float = 0.01
     grad_clip: float = 1.0
-    pogo_lam: float = 0.5
-    pogo_find_root: bool = False
+    # None = the method's own default; forwarded only to methods whose
+    # config declares the field (e.g. lam exists for pogo and landing).
+    pogo_lam: Optional[float] = None
+    pogo_find_root: Optional[bool] = None
     pogo_use_kernel: bool = False
     pogo_base: str = "vadam"  # "vadam" | "sgd" | "momentum"
     microbatches: int = 1
     default_opt: str = "adamw"  # "adamw" | "adafactor" (pod-scale memory)
     warmup_steps: int = 100
     decay_steps: int = 10000
-    orthoptimizer: str = "pogo"  # or any core.ORTHOPTIMIZERS key (baselines)
+    orthoptimizer: str = "pogo"  # any core.METHODS key
+    ortho_kwargs: Optional[Mapping[str, Any]] = None  # extra method kwargs
+    ortho_seed: int = 0  # driver RNG seed (stochastic methods, e.g. rsdm)
+    ortho_safety_project_every: int = 0  # Newton-Schulz cadence, any method
 
 
 def make_optimizer(cfg, train_cfg: TrainConfig) -> optim.GradientTransformation:
@@ -64,20 +67,32 @@ def make_optimizer(cfg, train_cfg: TrainConfig) -> optim.GradientTransformation:
         "sgd": None,
         "momentum": optim.chain(optim.trace(0.9)),
     }[train_cfg.pogo_base]
-    if train_cfg.orthoptimizer == "pogo":
-        ortho_opt = pogo_fn(
-            learning_rate=train_cfg.pogo_learning_rate,
-            lam=train_cfg.pogo_lam,
-            find_root=train_cfg.pogo_find_root,
-            base_optimizer=base,
-            use_kernel=train_cfg.pogo_use_kernel,
+    method_kwargs = core.method_overrides(
+        train_cfg.orthoptimizer,
+        lam=train_cfg.pogo_lam,
+        find_root=train_cfg.pogo_find_root,
+    )
+    # Explicit per-method kwargs pass through unfiltered (typos should raise),
+    # except driver-level fields, which have dedicated TrainConfig knobs.
+    extra = dict(train_cfg.ortho_kwargs or {})
+    reserved = {f.name for f in dataclasses.fields(core.OrthoConfig)} & set(extra)
+    if reserved:
+        raise ValueError(
+            f"ortho_kwargs may not set driver-level fields {sorted(reserved)}; "
+            "use the dedicated TrainConfig fields (pogo_learning_rate, "
+            "pogo_use_kernel, pogo_base, ortho_seed, "
+            "ortho_safety_project_every) instead"
         )
-    else:
-        from ..core import ORTHOPTIMIZERS
-
-        ortho_opt = ORTHOPTIMIZERS[train_cfg.orthoptimizer](
-            learning_rate=train_cfg.pogo_learning_rate
-        )
+    method_kwargs.update(extra)
+    ortho_opt = core.orthogonal(
+        train_cfg.orthoptimizer,
+        learning_rate=train_cfg.pogo_learning_rate,
+        base_optimizer=base,
+        use_kernel=train_cfg.pogo_use_kernel,
+        safety_project_every=train_cfg.ortho_safety_project_every,
+        seed=train_cfg.ortho_seed,
+        **method_kwargs,
+    )
     return optim.partition(
         {"orthogonal": ortho_opt, "default": default_opt},
         lambda params: ortho.label_tree(params, cfg),
@@ -129,30 +144,9 @@ def make_train_step(cfg, train_cfg: TrainConfig, optimizer=None):
         metrics_out = {
             "loss": loss,
             "grad_norm": optim.global_norm(grads),
-            "ortho_distance": _pogo_distance(opt_state),
+            # Uniform telemetry: every method's OrthoState reports it.
+            "ortho_distance": core.max_distance(opt_state),
         }
         return params, opt_state, metrics_out
 
     return train_step, optimizer
-
-
-def _pogo_distance(opt_state) -> jax.Array:
-    """Max manifold distance across POGO-managed leaves (free telemetry)."""
-    dists = []
-
-    def visit(s):
-        if hasattr(s, "last_distance"):  # PogoState / LandingState / RgdState...
-            dists.extend(jax.tree.leaves(s.last_distance))
-            return
-        if hasattr(s, "inner_states"):  # PartitionState
-            for inner in s.inner_states.values():
-                visit(inner)
-            return
-        if isinstance(s, (tuple, list)):
-            for item in s:
-                visit(item)
-
-    visit(opt_state)
-    if not dists:
-        return jnp.zeros([], jnp.float32)
-    return jnp.max(jnp.stack(dists))

@@ -1,0 +1,428 @@
+"""Unified orthoptimizer API: parity with the pre-refactor implementations,
+typed-config registry construction, tall-leaf support for every method.
+
+The ``_ref_*`` functions below are the per-leaf update math of the
+pre-refactor hand-rolled optimizers, kept verbatim as the golden reference
+the migrated direction/land stages must reproduce (square and wide leaves;
+tall leaves were only handled by POGO before the redesign, so tall parity
+is checked against the transpose-dispatched reference)."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import optim
+from repro.core import api, quartic, stiefel
+from repro.core.api import (
+    METHODS,
+    OrthoState,
+    orthogonal,
+    orthogonal_from_config,
+)
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _accum(dtype):
+    if jnp.issubdtype(dtype, jnp.complexfloating):
+        return dtype
+    return jnp.promote_types(dtype, jnp.float32)
+
+
+def _sdt(dtype):
+    if jnp.issubdtype(dtype, jnp.complexfloating):
+        return jnp.float64 if dtype == jnp.complex128 else jnp.float32
+    return dtype
+
+
+# ----------------------------------------------------- pre-refactor references
+
+
+def _ref_safe_eta(x, direction, eta0, eps):
+    xh = jnp.conj(jnp.swapaxes(x, -1, -2))
+    dh = jnp.conj(jnp.swapaxes(direction, -1, -2))
+    p = x.shape[-2]
+    c = x @ xh - jnp.eye(p, dtype=x.dtype)
+    dm = -(x @ dh + direction @ xh)
+    em = direction @ dh
+
+    def ip(a, b):
+        return jnp.sum(jnp.real(jnp.conj(a) * b), axis=(-2, -1))
+
+    a4 = ip(em, em)
+    a3 = 2.0 * ip(dm, em)
+    a2 = ip(dm, dm) + 2.0 * ip(c, em)
+    a1 = 2.0 * ip(c, dm)
+    a0 = ip(c, c) - eps**2
+    roots = quartic.solve_quartic(a4, a3, a2, a1, a0)
+    real_ok = jnp.abs(jnp.imag(roots)) < 1e-5 * (1 + jnp.abs(jnp.real(roots)))
+    pos = jnp.real(roots) > 0
+    candidates = jnp.where(real_ok & pos, jnp.real(roots), jnp.inf)
+    eta_max = jnp.min(candidates, axis=-1)
+    violating = a0 > 0
+    eta = jnp.minimum(eta0, eta_max)
+    eta = jnp.where(violating, jnp.minimum(eta, 0.5 * eta0), eta)
+    return jnp.maximum(eta, 1e-8)
+
+
+def _ref_pogo(x, g, eta, lam=0.5, find_root=False):
+    x32 = x.astype(_accum(x.dtype))
+    g32 = g.astype(x32.dtype)
+    r = stiefel.riemannian_gradient(x32, g32)
+    m = x32 - jnp.asarray(eta, jnp.float32).astype(_sdt(x32.dtype)) * r
+    if find_root:
+        lam_v = quartic.optimal_lambda(m, fallback=lam)
+        lam_v = lam_v[..., None, None].astype(_sdt(x32.dtype))
+    else:
+        lam_v = jnp.asarray(lam, _sdt(x32.dtype))
+    c = stiefel.gram(m)
+    x_next = (1.0 + lam_v) * m - lam_v * (c @ m)
+    return (x_next - x32).astype(x.dtype)
+
+
+def _ref_landing(x, g, eta0, lam=1.0, eps=0.5, safe_step=True):
+    x32 = x.astype(_accum(x.dtype))
+    g32 = g.astype(x32.dtype)
+    r = stiefel.riemannian_gradient(x32, g32)
+    n = stiefel.penalty_grad(x32)
+    d = r + lam * n
+    if safe_step:
+        eta = _ref_safe_eta(x32, d, eta0, eps)[..., None, None]
+    else:
+        eta = jnp.asarray(eta0)
+    eta = eta.astype(jnp.float32)
+    return (-(eta * d)).astype(x.dtype)
+
+
+def _ref_landing_pc(x, g, eta0, lam=0.1, eps=0.5):
+    x32 = x.astype(_accum(x.dtype))
+    g32 = g.astype(x32.dtype)
+    r = stiefel.riemannian_gradient(x32, g32)
+    n = stiefel.penalty_grad(x32)
+    rn = jnp.sqrt(jnp.sum(jnp.abs(r) ** 2, axis=(-2, -1), keepdims=True))
+    nn = jnp.sqrt(jnp.sum(jnp.abs(n) ** 2, axis=(-2, -1), keepdims=True))
+    lam_eff = lam * (1.0 + rn / (nn + 1e-12))
+    d = r + lam_eff.astype(r.dtype) * n
+    eta = _ref_safe_eta(x32, d, eta0, eps)[..., None, None].astype(jnp.float32)
+    return (-(eta * d)).astype(x.dtype)
+
+
+def _ref_rgd(x, g, eta, retraction="qr"):
+    x32 = x.astype(_accum(x.dtype))
+    g32 = g.astype(x32.dtype)
+    if retraction == "cayley":
+        omega = stiefel.skew(g32 @ jnp.conj(jnp.swapaxes(x32, -1, -2)))
+        x_next = stiefel.retraction_cayley(x32, -jnp.asarray(eta, jnp.float32) * omega)
+    else:
+        r = stiefel.riemannian_gradient(x32, g32)
+        v = -jnp.asarray(eta, jnp.float32) * r
+        if retraction == "qr":
+            x_next = stiefel.retraction_qr(x32, v)
+        elif retraction == "polar":
+            x_next = stiefel.retraction_polar(x32, v)
+        else:
+            x_next = stiefel.project_newton_schulz(x32 + v)
+    return (x_next - x32).astype(x.dtype)
+
+
+def _ref_slpg(x, g, eta):
+    x32 = x.astype(_accum(x.dtype))
+    g32 = g.astype(x32.dtype)
+    r = g32 - stiefel.sym(x32 @ jnp.conj(jnp.swapaxes(g32, -1, -2))) @ x32
+    y = x32 - jnp.asarray(eta, jnp.float32) * r
+    c = y @ jnp.conj(jnp.swapaxes(y, -1, -2))
+    x_next = (1.5 * y) - 0.5 * (c @ y)
+    return (x_next - x32).astype(x.dtype)
+
+
+def _ref_rsdm(x, g, eta, key, submanifold_dim=8):
+    x32 = x.astype(_accum(x.dtype))
+    g32 = g.astype(x32.dtype)
+    p = x32.shape[-2]
+    r = min(submanifold_dim, p)
+    omega = stiefel.skew(g32 @ jnp.conj(jnp.swapaxes(x32, -1, -2)))
+    u = stiefel.random_stiefel(key, (*x32.shape[:-2], r, p), x32.dtype)
+    uh = jnp.conj(jnp.swapaxes(u, -1, -2))
+    w = u @ omega @ uh
+    eye_r = jnp.eye(r, dtype=x32.dtype)
+    s = -jnp.asarray(eta, jnp.float32) * w
+    o = jnp.linalg.solve(eye_r - 0.5 * s, eye_r + 0.5 * s)
+    q_sub = uh @ o @ u
+    proj = uh @ u
+    x_next = q_sub @ x32 + x32 - proj @ x32
+    return (x_next - x32).astype(x.dtype)
+
+
+ETA = 0.1
+
+REF_UPDATES = {
+    "pogo": lambda x, g, key: _ref_pogo(x, g, ETA),
+    "pogo_root": lambda x, g, key: _ref_pogo(x, g, ETA, find_root=True),
+    "landing": lambda x, g, key: _ref_landing(x, g, ETA),
+    "landing_unsafe": lambda x, g, key: _ref_landing(x, g, ETA, safe_step=False),
+    "landing_pc": lambda x, g, key: _ref_landing_pc(x, g, ETA),
+    "rgd_qr": lambda x, g, key: _ref_rgd(x, g, ETA, "qr"),
+    "rgd_polar": lambda x, g, key: _ref_rgd(x, g, ETA, "polar"),
+    "rgd_cayley": lambda x, g, key: _ref_rgd(x, g, ETA, "cayley"),
+    "rgd_ns": lambda x, g, key: _ref_rgd(x, g, ETA, "newton_schulz"),
+    "slpg": lambda x, g, key: _ref_slpg(x, g, ETA),
+    "rsdm": lambda x, g, key: _ref_rsdm(x, g, ETA, key),
+}
+
+NEW_OPTS = {
+    "pogo": lambda: orthogonal("pogo", learning_rate=ETA),
+    "pogo_root": lambda: orthogonal("pogo", learning_rate=ETA, find_root=True),
+    "landing": lambda: orthogonal("landing", learning_rate=ETA),
+    "landing_unsafe": lambda: orthogonal("landing", learning_rate=ETA, safe_step=False),
+    "landing_pc": lambda: orthogonal("landing_pc", learning_rate=ETA),
+    "rgd_qr": lambda: orthogonal("rgd", learning_rate=ETA, retraction="qr"),
+    "rgd_polar": lambda: orthogonal("rgd", learning_rate=ETA, retraction="polar"),
+    "rgd_cayley": lambda: orthogonal("rgd", learning_rate=ETA, retraction="cayley"),
+    "rgd_ns": lambda: orthogonal("rgd", learning_rate=ETA, retraction="newton_schulz"),
+    "slpg": lambda: orthogonal("slpg", learning_rate=ETA),
+    "rsdm": lambda: orthogonal("rsdm", learning_rate=ETA, submanifold_dim=8),
+}
+
+
+def _problem(shape, dtype):
+    x = stiefel.random_stiefel(KEY, shape, dtype)
+    g = 0.3 * stiefel.random_stiefel(jax.random.PRNGKey(1), shape, dtype)
+    # start slightly off-manifold so land/safe-step stages have work to do
+    x = x + jnp.asarray(0.01, dtype) * stiefel.random_stiefel(
+        jax.random.PRNGKey(2), shape, dtype
+    )
+    return x, g
+
+
+def _driver_leaf_key(seed=0):
+    """The driver's per-leaf key derivation for a single-leaf tree."""
+    _, subkey = jax.random.split(jax.random.PRNGKey(seed))
+    return jax.random.split(subkey, 1)[0]
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.complex64], ids=["f32", "c64"])
+@pytest.mark.parametrize("shape", [(16, 16), (12, 24)], ids=["square", "wide"])
+@pytest.mark.parametrize("name", sorted(REF_UPDATES))
+def test_parity_with_pre_refactor(name, shape, dtype):
+    x, g = _problem(shape, dtype)
+    opt = NEW_OPTS[name]()
+    state = opt.init(x)
+    u_new, state = opt.update(g, state, x)
+    u_ref = REF_UPDATES[name](x, g, _driver_leaf_key())
+    np.testing.assert_allclose(
+        np.asarray(u_new), np.asarray(u_ref), atol=5e-6, rtol=1e-5
+    )
+
+
+@pytest.mark.parametrize("name", sorted(REF_UPDATES))
+def test_tall_leaves_work_for_every_method(name):
+    """p > n leaves are constrained along the transpose for ALL methods now
+    (pre-refactor: POGO only). Parity: transpose-dispatched reference."""
+    wide = (10, 28)
+    x_w, g_w = _problem(wide, jnp.float32)
+    x_t, g_t = jnp.swapaxes(x_w, -1, -2), jnp.swapaxes(g_w, -1, -2)
+    opt = NEW_OPTS[name]()
+    state = opt.init(x_t)
+    u_t, state = opt.update(g_t, state, x_t)
+    u_ref = REF_UPDATES[name](x_w, g_w, _driver_leaf_key())
+    np.testing.assert_allclose(
+        np.asarray(u_t),
+        np.asarray(jnp.swapaxes(u_ref, -1, -2)),
+        atol=5e-6,
+        rtol=1e-5,
+    )
+    # the tall iterate approaches/stays near the manifold of its transpose
+    dist = float(stiefel.manifold_distance(jnp.swapaxes(x_t + u_t, -1, -2)))
+    assert dist < 0.6, f"{name}: tall-leaf distance {dist}"
+
+
+def test_parity_trajectory_pogo():
+    """Multi-step parity (catches state-threading bugs, not just one step)."""
+    x, g0 = _problem((12, 24), jnp.float32)
+    opt = NEW_OPTS["pogo"]()
+    state = opt.init(x)
+    x_new = x
+    x_ref = x
+    for i in range(5):
+        g = 0.3 * stiefel.random_stiefel(jax.random.PRNGKey(10 + i), x.shape)
+        u, state = opt.update(g, state, x_new)
+        x_new = x_new + u
+        x_ref = x_ref + _ref_pogo(x_ref, g, ETA)
+    np.testing.assert_allclose(np.asarray(x_new), np.asarray(x_ref), atol=2e-5)
+
+
+def test_rsdm_rng_stream_parity_multi_leaf():
+    """The driver reproduces the old per-leaf key derivation exactly:
+    split(state.rng) -> split(subkey, n_leaves), in leaf order."""
+    tree = {
+        "a": stiefel.random_stiefel(KEY, (8, 20)),
+        "b": stiefel.random_stiefel(jax.random.PRNGKey(3), (2, 6, 12)),
+    }
+    grads = jax.tree.map(
+        lambda x: 0.2 * stiefel.random_stiefel(jax.random.PRNGKey(4), x.shape), tree
+    )
+    opt = orthogonal("rsdm", learning_rate=ETA, submanifold_dim=8, seed=0)
+    state = opt.init(tree)
+    u_new, state = opt.update(grads, state, tree)
+
+    _, subkey = jax.random.split(jax.random.PRNGKey(0))
+    leaves, treedef = jax.tree.flatten(tree)
+    gleaves = jax.tree.flatten(grads)[0]
+    keys = jax.random.split(subkey, len(leaves))
+    u_ref = jax.tree.unflatten(
+        treedef,
+        [_ref_rsdm(x, g, ETA, k) for x, g, k in zip(leaves, gleaves, keys)],
+    )
+    jax.tree.map(
+        lambda a, b: np.testing.assert_allclose(
+            np.asarray(a), np.asarray(b), atol=5e-6
+        ),
+        u_new,
+        u_ref,
+    )
+    # second step advances the stream (updates differ from the first)
+    u2, _ = opt.update(grads, state, tree)
+    assert not np.allclose(np.asarray(u2["a"]), np.asarray(u_new["a"]))
+
+
+# --------------------------------------------------------------- registry
+
+
+def _mixed_tree():
+    return {
+        "ortho_wide": stiefel.random_stiefel(KEY, (6, 16)),
+        "ortho_tall": jnp.swapaxes(
+            stiefel.random_stiefel(jax.random.PRNGKey(5), (6, 16)), -1, -2
+        ),
+        "dense": jnp.ones((4, 4), jnp.float32),
+    }
+
+
+@pytest.mark.parametrize("name", sorted(METHODS))
+def test_every_method_constructs_from_typed_config_and_steps(name):
+    """Acceptance: every method builds from its typed config and runs one
+    partition-wrapped step (square AND tall ortho leaves + a dense leaf)."""
+    spec = METHODS[name]
+    cfg = spec.config_cls(learning_rate=0.05)
+    assert dataclasses.is_dataclass(cfg)
+    ortho_opt = orthogonal_from_config(cfg)
+    params = _mixed_tree()
+    labels = {
+        "ortho_wide": "orthogonal",
+        "ortho_tall": "orthogonal",
+        "dense": "default",
+    }
+    opt = optim.partition(
+        {"orthogonal": ortho_opt, "default": optim.adamw(1e-3)}, labels
+    )
+    state = opt.init(params)
+    grads = jax.tree.map(lambda x: 0.1 * jnp.ones_like(x), params)
+    updates, state = opt.update(grads, state, params)
+    for leaf in jax.tree.leaves(updates):
+        assert bool(jnp.all(jnp.isfinite(leaf)))
+    # uniform telemetry: exactly one OrthoState, finite distance
+    ostates = api.ortho_states(state)
+    assert len(ostates) == 1 and isinstance(ostates[0], OrthoState)
+    assert float(api.max_distance(state)) < 1.0
+
+
+@pytest.mark.parametrize("name", sorted(METHODS))
+def test_every_method_constructs_by_name_with_base_optimizer(name):
+    """Acceptance: orthogonal(method=...) works for all six — including
+    rsdm, which pre-refactor rejected base_optimizer and crashed when
+    selected from the trainer."""
+    opt = orthogonal(
+        name,
+        learning_rate=0.05,
+        base_optimizer=optim.chain(optim.trace(0.9)),
+    )
+    x = stiefel.random_stiefel(KEY, (8, 16))
+    state = opt.init(x)
+    g = 0.1 * jnp.ones_like(x)
+    u, state = opt.update(g, state, x)
+    u, state = opt.update(g, state, x)  # momentum state threads through
+    assert bool(jnp.all(jnp.isfinite(u)))
+    assert isinstance(state, OrthoState)
+    assert state.base_state != ()
+
+
+def test_unknown_method_and_bad_kwargs_raise():
+    with pytest.raises(ValueError, match="unknown orthoptimizer"):
+        orthogonal("muon", learning_rate=0.1)
+    with pytest.raises(TypeError, match="bad kwargs"):
+        orthogonal("slpg", learning_rate=0.1, lam=0.5)  # slpg has no lam
+    with pytest.raises(ValueError, match="unknown retraction"):
+        orthogonal("rgd", learning_rate=0.1, retraction="svd")
+    with pytest.raises(ValueError, match="unregistered config"):
+
+        @dataclasses.dataclass(frozen=True)
+        class Rogue(api.OrthoConfig):
+            pass
+
+        orthogonal_from_config(Rogue())
+
+
+def test_method_overrides_filters_generically():
+    assert api.method_overrides("pogo", lam=0.7, find_root=None) == {"lam": 0.7}
+    assert api.method_overrides("landing", lam=0.7) == {"lam": 0.7}
+    assert api.method_overrides("slpg", lam=0.7, find_root=True) == {}
+    with pytest.raises(ValueError):
+        api.method_overrides("nope", lam=0.7)
+
+
+def test_trainer_builds_every_method_without_special_cases():
+    """Acceptance: the trainer dispatch is uniform — every registered
+    method (rsdm included) builds through make_optimizer and takes a step
+    on a mixed param tree."""
+    from repro.configs import get_config
+    from repro.models import ortho, transformer as tfm
+    from repro.train.train_step import TrainConfig, make_optimizer
+
+    cfg = get_config("smollm-360m", smoke=True)
+    params = ortho.project_init(tfm.init_params(KEY, cfg), cfg)
+    grads = jax.tree.map(lambda x: 0.01 * jnp.ones_like(x), params)
+    for name in sorted(METHODS):
+        tc = TrainConfig(orthoptimizer=name, pogo_learning_rate=0.1,
+                         warmup_steps=1, decay_steps=10)
+        optimizer = make_optimizer(cfg, tc)
+        state = optimizer.init(params)
+        updates, state = optimizer.update(grads, state, params)
+        assert all(
+            bool(jnp.all(jnp.isfinite(u))) for u in jax.tree.leaves(updates)
+        ), name
+        assert np.isfinite(float(api.max_distance(state))), name
+
+
+def test_safety_projection_uniform_across_methods():
+    """safety_project_every is a driver feature now: a drifting method
+    (landing, eps-ball) snaps back onto St when the cadence hits."""
+    x = stiefel.random_stiefel(KEY, (8, 24))
+    opt = orthogonal(
+        "landing", learning_rate=0.3, eps=0.4, safety_project_every=4
+    )
+    state = opt.init(x)
+    g = 0.5 * stiefel.random_stiefel(jax.random.PRNGKey(6), x.shape)
+    dists = []
+    for _ in range(8):
+        u, state = opt.update(g, state, x)
+        x = x + u
+        dists.append(float(stiefel.manifold_distance(x)))
+    # steps 4 and 8 are projection steps: distance collapses to ~fp32 zero
+    assert dists[3] < 1e-5 and dists[7] < 1e-5
+    assert max(dists[:3]) > 1e-4  # and landing alone does drift
+
+
+def test_schedule_learning_rate_through_driver():
+    sched = lambda count: 0.1 / (1.0 + count.astype(jnp.float32))  # noqa: E731
+    opt = orthogonal("pogo", learning_rate=sched)
+    x = stiefel.random_stiefel(KEY, (8, 16))
+    state = opt.init(x)
+    g = 0.1 * jnp.ones_like(x)
+    u1, state = opt.update(g, state, x)
+    u2, state = opt.update(g, state, x)
+    np.testing.assert_allclose(np.asarray(u1), np.asarray(_ref_pogo(x, g, 0.1)),
+                               atol=5e-6)
+    assert float(jnp.max(jnp.abs(u2))) < float(jnp.max(jnp.abs(u1)))

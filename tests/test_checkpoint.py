@@ -10,6 +10,7 @@ import numpy as np
 import pytest
 
 from repro.checkpoint import checkpoint as ckpt
+from repro.launch.mesh import make_mesh as _make_mesh
 
 
 @pytest.fixture
@@ -77,8 +78,7 @@ def test_async_save(tmp_path, tree):
 def test_elastic_restore_resharding(tmp_path, tree):
     """Files are device-count independent: restore onto explicit shardings."""
     ckpt.save(str(tmp_path), 1, tree)
-    mesh = jax.make_mesh((1,), ("data",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    mesh = _make_mesh((1,), ("data",))
     sh = jax.tree.map(
         lambda x: jax.sharding.NamedSharding(mesh, jax.sharding.PartitionSpec()),
         tree,

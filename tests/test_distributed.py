@@ -148,13 +148,14 @@ def test_compressed_allreduce_error_feedback():
         """
         from jax.sharding import PartitionSpec as P
         from repro.distributed.compression import compressed_psum
-        mesh = jax.make_mesh((8,), ("data",),
-            axis_types=(jax.sharding.AxisType.Auto,))
+        from repro.distributed.compat import shard_map
+        from repro.launch.mesh import make_mesh as _make_mesh
+        mesh = _make_mesh((8,), ("data",))
 
         def worker(g, r):
             return compressed_psum(g, "data", r)
 
-        fn = jax.jit(jax.shard_map(worker, mesh=mesh,
+        fn = jax.jit(shard_map(worker, mesh=mesh,
             in_specs=(P("data"), P("data")), out_specs=(P("data"), P("data")),
             check_vma=False))
 
