@@ -1,5 +1,7 @@
 """Shared benchmark machinery: orthoptimizer registry, timed optimization
-runs, CSV emission (``name,us_per_call,derived``)."""
+runs, CSV emission (``name,us_per_call,derived``) with a parallel
+machine-readable record stream (``RECORDS``, written to JSON by
+``benchmarks.run --json``)."""
 
 from __future__ import annotations
 
@@ -11,6 +13,12 @@ import jax.numpy as jnp
 
 from repro import optim
 from repro.core import api, stiefel
+
+# Machine-readable mirror of every emit() row: the orchestrator tags the
+# active suite (CURRENT_SUITE) and dumps RECORDS with --json so the perf
+# trajectory is trackable across PRs (BENCH_<suite>.json artifacts).
+RECORDS: list[dict] = []
+CURRENT_SUITE: Optional[str] = None
 
 
 def method_configs(lr_scale: float = 1.0, rsdm_dim: int = 64):
@@ -105,5 +113,17 @@ def _widen(x):
     return x
 
 
-def emit(name: str, us_per_call: float, derived: str):
+def emit(name: str, us_per_call: float, derived: str, **extra):
+    """One benchmark row: CSV to stdout + a structured record.
+
+    ``extra`` carries machine-readable problem sizes / derived metrics
+    (n_matrices, p, n, trace_s, ...) that the CSV string can't.
+    """
     print(f"{name},{us_per_call:.1f},{derived}", flush=True)
+    RECORDS.append({
+        "suite": CURRENT_SUITE,
+        "name": name,
+        "us_per_call": float(us_per_call),
+        "derived": derived,
+        **extra,
+    })

@@ -1,14 +1,19 @@
 """Benchmark orchestrator: one function per paper table/figure.
 
-Prints ``name,us_per_call,derived`` CSV rows. The roofline suite runs in a
-subprocess (it needs 512 fake host devices, which must not leak into the
-wall-clock benches). ``--full`` restores paper-scale problem sizes;
-``--skip-roofline`` for quick local runs.
+Prints ``name,us_per_call,derived`` CSV rows; ``--json OUT.json``
+additionally writes every row as a machine-readable record (name,
+us_per_call, derived, problem sizes) so the perf trajectory is tracked
+across PRs (convention: commit headline runs as ``BENCH_<suite>.json``).
+The roofline suite runs in a subprocess (it needs 512 fake host devices,
+which must not leak into the wall-clock benches) and is CSV-only.
+``--full`` restores paper-scale problem sizes; ``--smoke`` shrinks to CI
+sizes; ``--skip-roofline`` for quick local runs.
 """
 
 from __future__ import annotations
 
 import argparse
+import json
 import os
 import subprocess
 import sys
@@ -17,14 +22,20 @@ import sys
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true", help="paper-scale sizes")
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny CI sizes (suites that support it)")
     ap.add_argument("--skip-roofline", action="store_true")
     ap.add_argument("--only", default=None, help="comma list of suite names")
+    ap.add_argument("--json", default=None, metavar="OUT.json",
+                    help="also write the rows as machine-readable records")
     args = ap.parse_args(argv)
 
     from . import (
         cnn_kernels,
+        common,
         kernel_bench,
         lambda_ablation,
+        many_matrices,
         ovit,
         pca,
         precision_ablation,
@@ -41,6 +52,8 @@ def main(argv=None):
         "precision": lambda: precision_ablation.run(full=args.full),  # Fig. C.1
         "lambda": lambda: lambda_ablation.run(full=args.full),        # Figs. C.2/3
         "kernels": lambda: kernel_bench.run(full=args.full),          # Pallas
+        "many_matrices": lambda: many_matrices.run(                   # §Groups
+            full=args.full, smoke=args.smoke),
     }
     only = set(args.only.split(",")) if args.only else None
 
@@ -48,7 +61,21 @@ def main(argv=None):
     for name, fn in suites.items():
         if only and name not in only:
             continue
+        common.CURRENT_SUITE = name
         fn()
+    common.CURRENT_SUITE = None
+
+    if args.json:
+        payload = {
+            "suites": sorted({r["suite"] for r in common.RECORDS}),
+            "full": args.full,
+            "smoke": args.smoke,
+            "records": common.RECORDS,
+        }
+        with open(args.json, "w") as f:
+            json.dump(payload, f, indent=2)
+        print(f"# wrote {len(common.RECORDS)} records to {args.json}",
+              flush=True)
 
     if not args.skip_roofline and (only is None or "roofline" in only):
         env = dict(os.environ)

@@ -27,6 +27,7 @@ import json
 import os
 import shutil
 import threading
+import warnings
 from typing import Any, Optional
 
 import jax
@@ -139,30 +140,109 @@ def latest_step(directory: str) -> Optional[int]:
     return None
 
 
+def _distance_runs(like: PyTree) -> list:
+    """Contiguous flat-leaf index ranges occupied by grouped-distance
+    telemetry (``core.api.GroupedDistances``) inside ``like``. Lazy import:
+    checkpointing stays usable for trees with no optimizer state."""
+    try:
+        from ..core.api import GroupedDistances
+    except ImportError:  # pragma: no cover - core always ships
+        return []
+    nodes = jax.tree.leaves(
+        like, is_leaf=lambda n: isinstance(n, GroupedDistances)
+    )
+    runs, cur = [], 0
+    for node in nodes:
+        if isinstance(node, GroupedDistances):
+            k = len(jax.tree.leaves(node))
+            runs.append((cur, cur + k))
+            cur += k
+        else:
+            cur += 1
+    return runs
+
+
+def _load_leaf(path: str, meta: dict) -> np.ndarray:
+    arr = np.load(os.path.join(path, meta["file"]))
+    if meta["dtype"] in _VIEW_DTYPES:
+        arr = arr.view(_VIEW_DTYPES[meta["dtype"]])
+    return arr
+
+
 def restore(directory: str, step: int, like: PyTree, *, shardings: PyTree = None) -> PyTree:
     """Restore into the structure of ``like``; reshard onto ``shardings``
-    (elastic: files are device-count independent)."""
+    (elastic: files are device-count independent).
+
+    Deprecation shim (DESIGN.md §Constraint groups): checkpoints written
+    before the grouped orthoptimizer driver store ``last_distance`` as one
+    fp32 scalar per constrained leaf; ``like`` built by the current driver
+    carries per-group ``(B,)`` arrays instead. When the leaf counts (or the
+    shapes inside the distance slots) disagree for that reason, the stale
+    telemetry is dropped and re-initialized to zeros — distances are
+    recomputed on the next update — while count/base/rng state restores
+    normally. Resolvable only for a single grouped-distance run (one
+    orthoptimizer state per checkpoint tree); anything else still raises.
+    """
     path = os.path.join(directory, f"step_{step:09d}")
     with open(os.path.join(path, "manifest.json")) as f:
         manifest = json.load(f)
     leaves_like, treedef = jax.tree.flatten(like)
-    if manifest["n_leaves"] != len(leaves_like):
-        raise ValueError(
-            f"checkpoint has {manifest['n_leaves']} leaves, expected {len(leaves_like)}"
+    runs = _distance_runs(like)
+    n_like, n_ckpt = len(leaves_like), manifest["n_leaves"]
+    legacy = False
+    if n_ckpt != n_like:
+        # Legacy leaf-wise telemetry is the only count drift we adapt to,
+        # and only when the checkpoint region standing in for the grouped
+        # distances really looks like it: per-leaf fp32 SCALARS. Any other
+        # count mismatch (dropped/added leaves elsewhere) must still raise
+        # — silently shifting the leaf mapping would corrupt the restore.
+        delta = n_ckpt - n_like
+        start, stop = runs[0] if len(runs) == 1 else (0, 0)
+        n_legacy = (stop - start) + delta
+        legacy = (
+            len(runs) == 1
+            and n_legacy > 0
+            and all(
+                m["shape"] == [] and m["dtype"] == "float32"
+                for m in manifest["leaves"][start:start + n_legacy]
+            )
         )
+        if not legacy:
+            raise ValueError(
+                f"checkpoint has {n_ckpt} leaves, expected {n_like}"
+            )
     shard_leaves = (
         jax.tree.leaves(shardings, is_leaf=lambda x: hasattr(x, "spec"))
         if shardings is not None
         else [None] * len(leaves_like)
     )
+
+    def in_distance_run(i: int) -> bool:
+        return any(start <= i < stop for start, stop in runs)
+
+    def ckpt_index(i: int):
+        """Map a ``like`` flat index to its checkpoint leaf, or None for a
+        distance slot whose legacy counterpart was dropped."""
+        if not legacy:
+            return i
+        start, stop = runs[0]
+        if i < start:
+            return i
+        if i < stop:
+            return None
+        return i + (n_ckpt - n_like)
+
+    telemetry_reset = False
     out = []
-    for i, (meta, ref, sh) in enumerate(
-        zip(manifest["leaves"], leaves_like, shard_leaves)
-    ):
-        arr = np.load(os.path.join(path, meta["file"]))
-        if meta["dtype"] in _VIEW_DTYPES:
-            arr = arr.view(_VIEW_DTYPES[meta["dtype"]])
-        if tuple(arr.shape) != tuple(ref.shape):
+    for i, (ref, sh) in enumerate(zip(leaves_like, shard_leaves)):
+        j = ckpt_index(i)
+        arr = None if j is None else _load_leaf(path, manifest["leaves"][j])
+        if arr is None or (
+            tuple(arr.shape) != tuple(ref.shape) and in_distance_run(i)
+        ):
+            arr = np.zeros(ref.shape, np.float32)
+            telemetry_reset = True
+        elif tuple(arr.shape) != tuple(ref.shape):
             raise ValueError(
                 f"leaf {i}: checkpoint shape {arr.shape} != expected {ref.shape}"
             )
@@ -170,6 +250,14 @@ def restore(directory: str, step: int, like: PyTree, *, shardings: PyTree = None
             out.append(jax.device_put(arr, sh))
         else:
             out.append(jnp.asarray(arr, dtype=ref.dtype))
+    if telemetry_reset:
+        warnings.warn(
+            "restored a pre-group checkpoint: leaf-wise last_distance "
+            "telemetry was dropped and re-initialized to zeros in the "
+            "grouped layout (recomputed on the next optimizer step)",
+            DeprecationWarning,
+            stacklevel=2,
+        )
     return jax.tree.unflatten(treedef, out)
 
 

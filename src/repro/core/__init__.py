@@ -11,6 +11,10 @@ as modules and keep thin back-compat constructors (``core.pogo.pogo`` is
 from . import api, landing, pogo, quartic, rgd, rsdm, slpg, stiefel
 from .api import (
     METHODS,
+    ConstraintSet,
+    GroupedDistances,
+    GroupPlan,
+    GroupSpec,
     LandingConfig,
     LandingPCConfig,
     Method,
@@ -20,10 +24,13 @@ from .api import (
     RgdConfig,
     RsdmConfig,
     SlpgConfig,
+    leaf_distances,
     max_distance,
     method_overrides,
     orthogonal,
     orthogonal_from_config,
+    ortho_states,
+    plan_groups,
     register_method,
 )
 from .landing import landing_pc
@@ -50,9 +57,16 @@ __all__ = [
     "SlpgConfig",
     "RsdmConfig",
     "METHODS",
+    "ConstraintSet",
+    "GroupSpec",
+    "GroupPlan",
+    "GroupedDistances",
+    "plan_groups",
     "orthogonal",
     "orthogonal_from_config",
     "register_method",
     "method_overrides",
     "max_distance",
+    "leaf_distances",
+    "ortho_states",
 ]

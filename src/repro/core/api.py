@@ -16,8 +16,17 @@ retraction) correction. This module says that once, in code:
 The driver (:func:`orthogonal`) owns everything a method should not have
 to re-implement: base-optimizer chaining, tall-leaf (p > n) transpose
 dispatch, >= fp32 accumulation, optional Newton-Schulz safety projection,
-fused-kernel routing, per-leaf RNG plumbing, and uniform manifold-distance
+fused-kernel routing, stacked RNG plumbing, and uniform manifold-distance
 telemetry in :class:`OrthoState`. A method file shrinks to its math.
+
+The constraint *set* is first-class (DESIGN.md §Constraint groups): the
+driver buckets the param leaves by (manifold-orientation shape, dtype)
+into :class:`GroupSpec` batches — :func:`plan_groups`, static at trace
+time — and runs the two stages ONCE per group on a stacked ``(B, p, n)``
+tensor, so thousands of constrained matrices cost a handful of batched
+dispatches (and one fused Pallas call each under ``use_kernel``) instead
+of an unrolled per-leaf loop. ``grouping="per_leaf"`` keeps the unrolled
+reference path.
 
 Construction is config-driven: each method has a typed config dataclass
 (:class:`PogoConfig`, :class:`LandingConfig`, ...) registered in
@@ -30,6 +39,8 @@ the O(p^2 n) cost table.
 from __future__ import annotations
 
 import dataclasses
+import math
+import warnings
 from typing import Any, Callable, NamedTuple, Optional
 
 import jax
@@ -41,36 +52,250 @@ from . import quartic, stiefel
 Array = jax.Array
 
 
+# ---------------------------------------------------------- constraint groups
+
+
+@dataclasses.dataclass(frozen=True)
+class GroupMember:
+    """One param leaf's slot inside a :class:`GroupSpec` batch.
+
+    ``leaf`` is the flat index in the param tree, ``lead`` the leaf's
+    leading stack dims (flattened into the group's batch axis), ``offset``
+    the leaf's first row in the stacked ``(B, p, n)`` tensor, and
+    ``key_base`` the leaf's first slot in the step's stacked RNG key array
+    (global matrix id, counted in flat-leaf order so the key a matrix sees
+    is independent of how leaves were bucketed).
+    """
+
+    leaf: int
+    lead: tuple[int, ...]
+    transpose: bool
+    offset: int
+    key_base: int
+
+    @property
+    def count(self) -> int:
+        return math.prod(self.lead)
+
+
+@dataclasses.dataclass(frozen=True)
+class GroupSpec:
+    """One constraint group: every member shares the manifold-orientation
+    shape ``(p, n)`` (p <= n; tall leaves enter transposed) and dtype, so
+    the whole group runs the two-stage update as ONE batched ``(B, p, n)``
+    dispatch. ``batch`` is B = sum of member matrix counts."""
+
+    p: int
+    n: int
+    dtype: Any  # np.dtype (hashable)
+    members: tuple[GroupMember, ...]
+    batch: int
+
+    def sharding_hint(self):
+        """(axis, size) hint for distributing the group: shard the batch
+        axis (dim 0 of the stacked tensor / the ``(B,)`` distance array)
+        across the data-parallel mesh axes. Consumed by
+        ``distributed.sharding.opt_state_specs`` and
+        ``distributed.shard_hints.group_batch``."""
+        return ("batch", self.batch)
+
+
+@jax.tree_util.register_static
+@dataclasses.dataclass(frozen=True)
+class GroupPlan:
+    """Static bucketing of a param tree into constraint groups.
+
+    Derived from (static) leaf shapes/dtypes at trace time; hashable, so it
+    rides inside :class:`OrthoState` as a zero-leaf pytree node and inside
+    jit caches for free. ``grouping="auto"`` buckets by (manifold shape,
+    dtype); ``grouping="per_leaf"`` makes one group per leaf (the unrolled
+    back-compat reference path)."""
+
+    groups: tuple[GroupSpec, ...]
+    treedef: Any  # the param treedef (for leaf-wise telemetry views)
+    n_leaves: int
+    n_matrices: int
+
+
+def plan_groups(leaves, treedef, grouping: str = "auto") -> GroupPlan:
+    """Bucket flat param ``leaves`` into :class:`GroupSpec` batches.
+
+    Rules (DESIGN.md §Constraint groups): each leaf ``(..., p0, n0)`` is a
+    stack of ``prod(lead)`` constrained matrices; tall leaves (p0 > n0) are
+    constrained along their transpose, so the bucket key is the manifold
+    orientation ``(min, max)`` plus dtype. Groups keep first-appearance
+    order; members keep flat-leaf order within a group.
+    """
+    if grouping not in ("auto", "per_leaf"):
+        raise ValueError(
+            f"grouping must be 'auto' or 'per_leaf', got {grouping!r}"
+        )
+    buckets: dict = {}
+    order: list = []
+    key_base = 0
+    for i, x in enumerate(leaves):
+        if x.ndim < 2:
+            raise ValueError(
+                f"orthoptimizer leaves must be matrices (..., p, n); leaf {i} "
+                f"has shape {x.shape}"
+            )
+        p0, n0 = x.shape[-2], x.shape[-1]
+        transpose = p0 > n0
+        p, n = (n0, p0) if transpose else (p0, n0)
+        lead = tuple(x.shape[:-2])
+        count = math.prod(lead)
+        key = (p, n, jnp.dtype(x.dtype)) if grouping == "auto" else ("leaf", i)
+        if key not in buckets:
+            buckets[key] = {"p": p, "n": n, "dtype": jnp.dtype(x.dtype),
+                            "members": [], "batch": 0}
+            order.append(key)
+        b = buckets[key]
+        b["members"].append(GroupMember(
+            leaf=i, lead=lead, transpose=transpose,
+            offset=b["batch"], key_base=key_base,
+        ))
+        b["batch"] += count
+        key_base += count
+    groups = tuple(
+        GroupSpec(p=b["p"], n=b["n"], dtype=b["dtype"],
+                  members=tuple(b["members"]), batch=b["batch"])
+        for b in (buckets[k] for k in order)
+    )
+    return GroupPlan(groups=groups, treedef=treedef,
+                     n_leaves=len(leaves), n_matrices=key_base)
+
+
+def _gather_group(group: GroupSpec, leaves) -> Array:
+    """Stack a group's member leaves into one ``(B, p, n)`` tensor."""
+    parts = []
+    for m in group.members:
+        x = leaves[m.leaf]
+        if m.transpose:
+            x = jnp.swapaxes(x, -1, -2)
+        parts.append(jnp.reshape(x, (m.count, group.p, group.n)))
+    return parts[0] if len(parts) == 1 else jnp.concatenate(parts, axis=0)
+
+
+def _scatter_group(group: GroupSpec, stacked: Array, out: list) -> None:
+    """Split a group's ``(B, p, n)`` result back into member-leaf layout."""
+    for m in group.members:
+        u = stacked[m.offset:m.offset + m.count]
+        u = jnp.reshape(u, (*m.lead, group.p, group.n))
+        if m.transpose:
+            u = jnp.swapaxes(u, -1, -2)
+        out[m.leaf] = u
+
+
+@jax.tree_util.register_pytree_node_class
+class ConstraintSet:
+    """Stacked storage for a constrained param tree.
+
+    Holds one ``(B, p, n)`` array per constraint group plus the static
+    :class:`GroupPlan`. At true scale (thousands of matrices) the stacked
+    layout is the natural resting state: the driver's per-step
+    gather/scatter of N leaves disappears because a ConstraintSet IS a
+    pytree of stacked leaves — each flattens straight into a single-leaf
+    group, so ``orthogonal(...)`` consumes it with zero repacking.
+
+        cs = ConstraintSet.from_tree(params)          # stack once
+        gs = ConstraintSet.from_tree(grads)           # same plan/layout
+        u, state = opt.update(gs, state, cs)          # pure batched stages
+        params = cs.apply(u).to_tree()                # unstack at the end
+
+    ``from_tree``/``to_tree`` round-trip exactly (tall leaves transpose in
+    and back out).
+    """
+
+    def __init__(self, plan: GroupPlan, stacks: tuple):
+        self.plan = plan
+        self.stacks = tuple(stacks)
+
+    @classmethod
+    def from_tree(cls, tree, grouping: str = "auto") -> "ConstraintSet":
+        leaves, treedef = jax.tree.flatten(tree)
+        plan = plan_groups(leaves, treedef, grouping)
+        stacks = tuple(_gather_group(g, leaves) for g in plan.groups)
+        return cls(plan, stacks)
+
+    def to_tree(self):
+        out: list = [None] * self.plan.n_leaves
+        for group, stack in zip(self.plan.groups, self.stacks):
+            _scatter_group(group, stack, out)
+        return jax.tree.unflatten(self.plan.treedef, out)
+
+    def apply(self, updates: "ConstraintSet") -> "ConstraintSet":
+        """Add an update set (same plan) — stacked ``params + updates``."""
+        if updates.plan != self.plan:
+            raise ValueError("ConstraintSet plans differ")
+        return ConstraintSet(
+            self.plan,
+            tuple(s + u for s, u in zip(self.stacks, updates.stacks)),
+        )
+
+    def tree_flatten(self):
+        return self.stacks, self.plan
+
+    @classmethod
+    def tree_unflatten(cls, plan, stacks):
+        return cls(plan, stacks)
+
+    def __repr__(self):
+        shapes = ", ".join(str(tuple(s.shape)) for s in self.stacks)
+        return f"ConstraintSet({self.plan.n_matrices} matrices: {shapes})"
+
+
 # --------------------------------------------------------------------- state
+
+
+class GroupedDistances(NamedTuple):
+    """Per-group stacked manifold-distance telemetry.
+
+    ``per_group[g]`` is a ``(B_g,)`` fp32 array: ``||X_b X_b^H - I||_F`` of
+    each *post-update* matrix in group ``g``'s batch, measured in manifold
+    orientation. Replaces the pre-group per-leaf scalar pytree (thousands
+    of scalars -> a handful of arrays). ``plan`` is static (zero leaves
+    when flattened); :func:`leaf_distances` reconstructs the old leaf-wise
+    view from it.
+    """
+
+    plan: GroupPlan
+    per_group: tuple  # tuple of (B_g,) fp32 arrays, one per group
 
 
 class OrthoState(NamedTuple):
     """Uniform optimizer state for every orthoptimizer method.
 
-    ``last_distance`` is the telemetry contract (DESIGN.md §Telemetry): a
-    pytree of per-leaf fp32 scalars, ``max_b ||X_b X_b^H - I||_F`` of the
-    *post-update* iterate, measured in the manifold orientation (tall
-    leaves are transposed first). ``rng`` advances only for methods with
-    ``needs_rng``; ``extras`` holds method-specific state (empty for all
-    built-ins).
+    ``last_distance`` is the telemetry contract (DESIGN.md §Constraint
+    groups): a
+    :class:`GroupedDistances` of per-group ``(B,)`` fp32 arrays holding
+    ``||X_b X_b^H - I||_F`` of the *post-update* iterate, measured in the
+    manifold orientation (tall leaves are transposed first). Consume it
+    through :func:`max_distance` (global max) or :func:`leaf_distances`
+    (old per-leaf scalar view); the pre-group leaf-wise scalar pytree
+    layout is still readable through both for one release. ``rng`` advances
+    only for methods with ``needs_rng``; ``extras`` holds method-specific
+    state (empty for all built-ins).
     """
 
     count: jax.Array
     base_state: tuple  # state of the wrapped (linear) base optimizer
     rng: jax.Array
-    last_distance: Any  # pytree of per-leaf fp32 scalars
+    last_distance: Any  # GroupedDistances (legacy: per-leaf scalar pytree)
     extras: Any = ()
 
 
 @dataclasses.dataclass
 class StepCtx:
-    """Per-leaf context handed to both method stages.
+    """Per-group context handed to both method stages.
 
-    ``x``/``g`` are the accumulation-dtype leaf in manifold orientation
-    (p <= n). ``eta`` starts as the scalar learning rate; a direction stage
-    may replace it with a per-batch array (Landing's safe step). ``scratch``
-    carries whatever stage 1 wants stage 2 to see (e.g. the Cayley
-    generator).
+    ``x``/``g`` are the accumulation-dtype stacked group ``(B, p, n)`` in
+    manifold orientation (p <= n). ``eta`` starts as the scalar learning
+    rate; a direction stage may replace it with a per-batch array
+    (Landing's safe step). ``key`` is a stacked per-matrix key array
+    ``(B, 2)`` for methods with ``needs_rng`` — one independent key per
+    constrained matrix, so grouped and per-leaf dispatch draw identical
+    streams. ``scratch`` carries whatever stage 1 wants stage 2 to see
+    (e.g. the Cayley generator).
     """
 
     x: Array
@@ -329,7 +554,9 @@ class Rsdm(Method):
         ctx.scratch["omega"] = stiefel.skew(
             g @ jnp.conj(jnp.swapaxes(x, -1, -2))
         )
-        ctx.scratch["u"] = stiefel.random_stiefel(
+        # ctx.key is a stacked (B, 2) per-matrix key array: each matrix in
+        # the group batch samples its own independent Haar submanifold.
+        ctx.scratch["u"] = stiefel.random_stiefel_stacked(
             ctx.key, (*x.shape[:-2], r, p), x.dtype
         )
         return None
@@ -359,6 +586,8 @@ class OrthoConfig:
     use_kernel: bool = False  # fused Pallas path where the method has one
     safety_project_every: int = 0  # Newton-Schulz re-projection cadence
     seed: int = 0  # PRNG seed for stochastic methods (RSDM)
+    grouping: str = "auto"  # "auto": batch same-(shape,dtype) leaves into
+    # one (B, p, n) dispatch per group; "per_leaf": unrolled reference path
 
 
 @dataclasses.dataclass(frozen=True)
@@ -464,9 +693,17 @@ def orthogonal(
     use_kernel: bool = False,
     safety_project_every: int = 0,
     seed: int = 0,
+    grouping: str = "auto",
     **method_kwargs,
 ) -> GradientTransformation:
-    """Build any registered orthoptimizer by name. See module docstring."""
+    """Build any registered orthoptimizer by name. See module docstring.
+
+    ``grouping="auto"`` (default) buckets the param leaves into constraint
+    groups — one batched ``(B, p, n)`` two-stage dispatch per (manifold
+    shape, dtype) bucket — so thousands of constrained matrices cost a
+    handful of kernel launches instead of an unrolled per-leaf loop.
+    ``grouping="per_leaf"`` keeps the one-dispatch-per-leaf reference path.
+    """
     if method not in METHODS:
         raise ValueError(f"unknown orthoptimizer {method!r} (have {sorted(METHODS)})")
     spec = METHODS[method]
@@ -477,6 +714,7 @@ def orthogonal(
             use_kernel=use_kernel,
             safety_project_every=safety_project_every,
             seed=seed,
+            grouping=grouping,
             **method_kwargs,
         )
     except TypeError as e:
@@ -495,13 +733,37 @@ def orthogonal_from_config(cfg: OrthoConfig) -> GradientTransformation:
     return _build(spec.factory(**_method_kwargs(cfg)), cfg)
 
 
+def _group_batch_hint(x: Array) -> Array:
+    """Pin a stacked group tensor's batch axis onto the DP mesh axes.
+
+    Lazy import: ``distributed`` is optional at this layer, and the hint is
+    a no-op when no mesh is set (unit tests, single-device runs).
+    """
+    try:
+        from ..distributed import shard_hints
+    except ImportError:  # pragma: no cover - distributed always ships
+        return x
+    return shard_hints.group_batch(x)
+
+
 def _build(method: Method, cfg: OrthoConfig) -> GradientTransformation:
     base = cfg.base_optimizer
     has_kernel = cfg.use_kernel and method.kernel_update is not None
+    if cfg.grouping not in ("auto", "per_leaf"):
+        raise ValueError(
+            f"grouping must be 'auto' or 'per_leaf', got {cfg.grouping!r}"
+        )
 
     def init(params):
         base_state = base.init(params) if base else ()
-        dist = jax.tree.map(lambda p: jnp.zeros([], jnp.float32), params)
+        leaves, treedef = jax.tree.flatten(params)
+        plan = plan_groups(leaves, treedef, cfg.grouping)
+        dist = GroupedDistances(
+            plan=plan,
+            per_group=tuple(
+                jnp.zeros((grp.batch,), jnp.float32) for grp in plan.groups
+            ),
+        )
         return OrthoState(
             count=jnp.zeros([], jnp.int32),
             base_state=base_state,
@@ -528,20 +790,29 @@ def _build(method: Method, cfg: OrthoConfig) -> GradientTransformation:
 
         leaves, treedef = jax.tree.flatten(params)
         gleaves = jax.tree.flatten(g)[0]
-        if method.needs_rng:
+        # Bucketing is trace-time work on static shapes: under jit it runs
+        # once per compilation, and the whole update below is one batched
+        # dispatch per group instead of one per leaf.
+        plan = plan_groups(leaves, treedef, cfg.grouping)
+        if method.needs_rng and plan.n_matrices:
+            # One split for the whole step: a stacked (N, 2) key array,
+            # indexed per matrix inside the batched stage (no Python list
+            # of N keys, no per-leaf split ops).
             rng, subkey = jax.random.split(state.rng)
-            keys = list(jax.random.split(subkey, len(leaves)))
+            all_keys = jax.random.split(subkey, plan.n_matrices)
         else:
-            rng = state.rng
-            keys = [None] * len(leaves)
+            rng, all_keys = state.rng, None
 
-        def step(x, gg, key):
-            # Tall leaves are constrained along their transpose (St needs
-            # p <= n); shapes are static so this is trace-time dispatch.
-            transpose = x.shape[-2] > x.shape[-1]
-            if transpose:
-                x, gg = jnp.swapaxes(x, -1, -2), jnp.swapaxes(gg, -1, -2)
-            x32 = x.astype(_accum_dtype(x.dtype))
+        def group_step(group: GroupSpec, xg: Array, gg: Array):
+            """One batched two-stage update for a whole constraint group."""
+            keys = None
+            if all_keys is not None:
+                kparts = [
+                    all_keys[m.key_base:m.key_base + m.count]
+                    for m in group.members
+                ]
+                keys = kparts[0] if len(kparts) == 1 else jnp.concatenate(kparts)
+            x32 = xg.astype(_accum_dtype(xg.dtype))
             g32 = gg.astype(x32.dtype)
             eta = jnp.asarray(eta0, jnp.float32).astype(_scalar_dtype(x32.dtype))
             ctx = StepCtx(
@@ -549,7 +820,7 @@ def _build(method: Method, cfg: OrthoConfig) -> GradientTransformation:
                 g=g32,
                 eta=eta,
                 count=count,
-                key=key,
+                key=keys,
                 use_kernel=cfg.use_kernel,
                 scratch={},
             )
@@ -567,34 +838,52 @@ def _build(method: Method, cfg: OrthoConfig) -> GradientTransformation:
                 x_next = jax.lax.cond(
                     do, lambda v: stiefel.project_newton_schulz(v), lambda v: v, x_next
                 )
-            upd = (x_next - x32).astype(x.dtype)
-            if transpose:
-                upd = jnp.swapaxes(upd, -1, -2)
-            return upd
+            ug = (x_next - x32).astype(xg.dtype)
+            # Telemetry rides the batch: one (B,) distance array per group
+            # instead of thousands of per-leaf scalars.
+            y = (xg + ug).astype(jnp.promote_types(xg.dtype, jnp.float32))
+            dist = stiefel.manifold_distance(y).astype(jnp.float32)
+            return ug, dist
 
-        upd_leaves = [step(x, gg, k) for x, gg, k in zip(leaves, gleaves, keys)]
-        updates = jax.tree.unflatten(treedef, upd_leaves)
-        dist = jax.tree.map(_leaf_distance, params, updates)
+        out: list = [None] * len(leaves)
+        dists = []
+        for group in plan.groups:
+            xg = _group_batch_hint(_gather_group(group, leaves))
+            gg = _group_batch_hint(_gather_group(group, gleaves))
+            ug, dist = group_step(group, xg, gg)
+            dists.append(dist)
+            _scatter_group(group, ug, out)
+        updates = jax.tree.unflatten(treedef, out)
         return updates, OrthoState(
             count=count,
             base_state=base_state,
             rng=rng,
-            last_distance=dist,
+            last_distance=GroupedDistances(plan=plan, per_group=tuple(dists)),
             extras=state.extras,
         )
 
     return GradientTransformation(init, update)
 
 
-def _leaf_distance(x, u):
-    """Post-update ``max ||XX^H - I||_F`` in manifold orientation, fp32."""
-    y = (x + u).astype(jnp.promote_types(x.dtype, jnp.float32))
-    if y.shape[-2] > y.shape[-1]:
-        y = jnp.swapaxes(y, -1, -2)
-    return jnp.max(stiefel.manifold_distance(y)).astype(jnp.float32)
-
-
 # ----------------------------------------------------------------- telemetry
+
+
+_LEGACY_DISTANCE_WARNED = False
+
+
+def _warn_legacy_distance() -> None:
+    global _LEGACY_DISTANCE_WARNED
+    if not _LEGACY_DISTANCE_WARNED:
+        _LEGACY_DISTANCE_WARNED = True
+        warnings.warn(
+            "leaf-wise OrthoState.last_distance (per-leaf scalar pytree) is "
+            "deprecated: states written by the grouped driver carry "
+            "GroupedDistances (per-group stacked (B,) arrays). The legacy "
+            "layout stays readable through ortho_states()/max_distance() "
+            "for one release.",
+            DeprecationWarning,
+            stacklevel=3,
+        )
 
 
 def ortho_states(opt_state) -> list[OrthoState]:
@@ -607,14 +896,45 @@ def ortho_states(opt_state) -> list[OrthoState]:
 
 
 def max_distance(opt_state) -> jax.Array:
-    """Max manifold distance across every orthoptimizer-managed leaf.
+    """Max manifold distance across every orthoptimizer-managed matrix.
 
     This is the uniform telemetry contract: any state built by
     :func:`orthogonal` reports it, so trainers need no per-method walking.
+    Reads both the grouped layout (:class:`GroupedDistances`) and — with a
+    one-time deprecation warning — the pre-group per-leaf scalar pytree.
     """
     dists = []
     for s in ortho_states(opt_state):
-        dists.extend(jax.tree.leaves(s.last_distance))
+        ld = s.last_distance
+        if isinstance(ld, GroupedDistances):
+            dists.extend(ld.per_group)
+        else:
+            legacy = jax.tree.leaves(ld)
+            if legacy:
+                _warn_legacy_distance()
+            dists.extend(legacy)
     if not dists:
         return jnp.zeros([], jnp.float32)
-    return jnp.max(jnp.stack(dists))
+    return jnp.max(jnp.stack([jnp.max(d) for d in dists]))
+
+
+def leaf_distances(state: OrthoState):
+    """Per-leaf scalar distance pytree (the pre-group telemetry view).
+
+    Reconstructs, from the grouped ``(B,)`` arrays and the static
+    :class:`GroupPlan`, a pytree with the param structure holding each
+    leaf's ``max`` post-update manifold distance — exactly what
+    ``last_distance`` used to store per leaf. Legacy leaf-wise states pass
+    through unchanged (with the one-time deprecation warning).
+    """
+    ld = state.last_distance
+    if not isinstance(ld, GroupedDistances):
+        if jax.tree.leaves(ld):
+            _warn_legacy_distance()
+        return ld
+    plan = ld.plan
+    out: list = [None] * plan.n_leaves
+    for group, arr in zip(plan.groups, ld.per_group):
+        for m in group.members:
+            out[m.leaf] = jnp.max(arr[m.offset:m.offset + m.count])
+    return jax.tree.unflatten(plan.treedef, out)

@@ -121,6 +121,31 @@ def random_stiefel(key: jax.Array, shape: tuple[int, ...], dtype=jnp.float32) ->
     return _ht(q)  # (..., p, n) row-orthonormal
 
 
+def random_stiefel_stacked(
+    keys: jax.Array, shape: tuple[int, ...], dtype=jnp.float32
+) -> Array:
+    """Haar St(p, n) sample with one independent key per stacked matrix.
+
+    ``keys`` is ``(*batch, 2)`` — a stacked key array, e.g. from one
+    ``jax.random.split(key, B)`` — and ``shape`` is ``(*batch, p, n)``.
+    Each matrix of the batch is drawn from its own key, so the sample a
+    given matrix sees is independent of how the batch was assembled
+    (grouped and per-leaf driver dispatch draw identical streams). A
+    single unstacked key (``keys.ndim == 1``) falls back to
+    :func:`random_stiefel` over the whole shape.
+    """
+    *batch, p, n = shape
+    if keys.ndim == 1:
+        return random_stiefel(keys, shape, dtype)
+    if tuple(keys.shape[:-1]) != tuple(batch):
+        raise ValueError(
+            f"stacked keys {keys.shape} do not match batch dims of {shape}"
+        )
+    flat = keys.reshape(-1, keys.shape[-1])
+    sample = jax.vmap(lambda k: random_stiefel(k, (p, n), dtype))(flat)
+    return sample.reshape(*shape)
+
+
 def project_qr(x: Array) -> Array:
     """Project onto St(p, n) via QR of X^H (row-orthonormalize)."""
     q, r = jnp.linalg.qr(_ht(x))

@@ -53,6 +53,32 @@ def _batch_axes(mesh: Mesh, batch: int):
     return tuple(best) if len(best) > 1 else best[0]
 
 
+def group_batch(x: jax.Array) -> jax.Array:
+    """Pin a constraint group's stacked batch axis (dim 0) to the DP axes.
+
+    The grouped orthoptimizer driver (``core.api``, DESIGN.md §Constraint
+    groups) stacks thousands of constrained matrices into one ``(B, p, n)``
+    tensor per group; B is embarrassingly parallel (every matrix updates
+    independently), so it shards over the same ``(pod, data)`` axes as the
+    activation batch. No-op without a mesh or when B doesn't divide any DP
+    axis subset.
+
+    TPU-only: the CPU host-platform partitioner miscompiles batch-axis
+    resharding of concatenated param stacks (observed on the (4, 2) test
+    mesh: a bare with_sharding_constraint + matmul returns wrong values),
+    so off-TPU the hint is a no-op and groups inherit their members'
+    layouts. The (B,) distance arrays still take the group spec through
+    ``sharding.opt_state_specs``.
+    """
+    if _MESH is None or x.ndim < 3 or jax.default_backend() != "tpu":
+        return x
+    axes = _batch_axes(_MESH, x.shape[0])
+    if axes is None:
+        return x
+    spec = P(axes, *([None] * (x.ndim - 1)))
+    return jax.lax.with_sharding_constraint(x, NamedSharding(_MESH, spec))
+
+
 def activation(x: jax.Array, model_dim: Optional[int] = None) -> jax.Array:
     """Pin batch dim -> (pod, data); optionally one dim -> model."""
     if _MESH is None or x.ndim == 0:

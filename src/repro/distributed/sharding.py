@@ -185,11 +185,21 @@ def param_shardings(params: PyTree, mesh: Mesh, mode: str = "2d") -> PyTree:
 # ------------------------------------------------------------------ opt state
 
 
+def group_batch_spec(mesh: Mesh, batch: int, mode: str = "2d") -> P:
+    """Spec for a constraint group's batch axis: the ``(B,)`` distance
+    arrays (and the stacked ``(B, p, n)`` group tensors they mirror) shard
+    B over the largest divisible DP-axis subset — the group's sharding
+    hint (``core.GroupSpec.sharding_hint``) made concrete for a mesh."""
+    return batch_spec(mesh, batch, mode)
+
+
 def opt_state_specs(opt_state: PyTree, params: PyTree, mesh: Mesh,
                     mode: str = "2d") -> PyTree:
     """Best-effort specs for optimizer state: moment trees mirror param
     specs (matched by shape); per-matrix scalars take the param spec prefix;
-    anything else replicates."""
+    grouped-distance ``(B,)`` arrays shard their batch axis over the DP
+    axes (:func:`group_batch_spec`); anything else replicates."""
+    from ..core.api import GroupedDistances  # lazy: avoid import cycle
     pspecs_flat = [
         (leaf.shape, spec)
         for (path, leaf), spec in zip(
@@ -206,6 +216,14 @@ def opt_state_specs(opt_state: PyTree, params: PyTree, mesh: Mesh,
             prefix_by_shape.setdefault(shape[:-2], P(*spec[: max(len(shape) - 2, 0)]))
 
     def assign(leaf):
+        if isinstance(leaf, GroupedDistances):
+            return GroupedDistances(
+                plan=leaf.plan,
+                per_group=tuple(
+                    group_batch_spec(mesh, int(d.shape[0]), mode)
+                    for d in leaf.per_group
+                ),
+            )
         shape = tuple(leaf.shape)
         if shape in by_shape:
             return by_shape[shape]
@@ -213,7 +231,9 @@ def opt_state_specs(opt_state: PyTree, params: PyTree, mesh: Mesh,
             return prefix_by_shape[shape]
         return P()
 
-    return jax.tree.map(assign, opt_state)
+    return jax.tree.map(
+        assign, opt_state, is_leaf=lambda n: isinstance(n, GroupedDistances)
+    )
 
 
 # -------------------------------------------------------------------- batches

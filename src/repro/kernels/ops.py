@@ -92,7 +92,11 @@ def _pogo_dispatch(x, g, eta, lam, *, find_root, interpret):
     xp = _pad_pn(xb, p_pad, n_pad)
     gp = _pad_pn(gb, p_pad, n_pad)
     if kind == "whole":
-        block_b = arg
+        # Never let the block exceed the real batch: grouped driver calls
+        # arrive as one (B, p, n) stack per constraint group, and a B
+        # smaller than the VMEM-derived block would otherwise be padded up
+        # to it (a single matrix paying for a full block of wasted rows).
+        block_b = max(1, min(arg, bsz))
         b_pad = _round_up(bsz, block_b)
         if b_pad != bsz:
             xp = jnp.pad(xp, [(0, b_pad - bsz), (0, 0), (0, 0)])
@@ -126,7 +130,7 @@ def _landing_dispatch(x, g, lam, *, interpret):
     kind, arg, p_pad, n_pad = _plan(p, n)
     if kind != "whole":
         return ref.landing_field_ref(x, g, lam)
-    block_b = arg
+    block_b = max(1, min(arg, bsz))
     xp = _pad_pn(xb, p_pad, n_pad)
     gp = _pad_pn(gb, p_pad, n_pad)
     b_pad = _round_up(bsz, block_b)
@@ -153,7 +157,7 @@ def _ns_dispatch(x, *, iters, interpret):
     kind, arg, p_pad, n_pad = _plan(p, n)
     if kind != "whole":
         return ref.newton_schulz_ref(x, iters)
-    block_b = arg
+    block_b = max(1, min(arg, bsz))
     xp = _pad_pn(xb, p_pad, n_pad)
     b_pad = _round_up(bsz, block_b)
     if b_pad != bsz:

@@ -51,6 +51,10 @@ def main(argv=None):
                     help="method-specific kwarg, e.g. retraction=polar or "
                          "submanifold_dim=32 (repeatable)")
     ap.add_argument("--pogo-kernel", action="store_true")
+    ap.add_argument("--ortho-grouping", default="auto",
+                    choices=["auto", "per_leaf"],
+                    help="batch same-shape constrained leaves into one "
+                         "grouped dispatch (auto) or unroll per leaf")
     ap.add_argument("--checkpoint-dir", default=None)
     ap.add_argument("--save-every", type=int, default=50)
     ap.add_argument("--fake-devices", type=int, default=None)
@@ -101,6 +105,7 @@ def main(argv=None):
         microbatches=args.microbatches,
         orthoptimizer=args.orthoptimizer,
         ortho_kwargs=ortho_kwargs,
+        ortho_grouping=args.ortho_grouping,
         pogo_use_kernel=args.pogo_kernel,
         warmup_steps=min(20, args.steps // 5 + 1),
         decay_steps=args.steps,

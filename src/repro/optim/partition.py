@@ -6,8 +6,15 @@ else (``"default"``) gets AdamW. Labels are a pytree of strings with the
 same structure as the params, or a callable producing one.
 
 Implementation: flatten once, group leaf indices by label, run each inner
-transform over its own flat list-pytree, scatter updates back. This keeps
-inner transforms completely unaware of masking.
+transform over its own flat tuple-pytree, scatter updates back. This keeps
+inner transforms completely unaware of masking. The flat tuple is the
+handoff to the grouped orthoptimizer driver (``core.api``): it re-buckets
+its members into constraint groups — one batched ``(B, p, n)`` dispatch
+per (manifold shape, dtype) bucket — so a model with thousands of
+constrained matrices costs a handful of fused updates, not a leaf loop.
+Tuples (not lists) keep the sub-treedef hashable/stable across steps, so
+the inner driver's static :class:`~repro.core.api.GroupPlan` caches
+cleanly under jit.
 """
 
 from __future__ import annotations
@@ -47,7 +54,7 @@ def partition(
         lab_flat, p_flat, _ = _resolve(labels, params, transforms)
         states = {}
         for name in names:
-            sub = [p for p, l in zip(p_flat, lab_flat) if l == name]
+            sub = tuple(p for p, l in zip(p_flat, lab_flat) if l == name)
             states[name] = transforms[name].init(sub)
         return PartitionState(inner_states=states)
 
@@ -60,8 +67,8 @@ def partition(
         new_states = {}
         for name in names:
             idx = [i for i, l in enumerate(lab_flat) if l == name]
-            sub_g = [g_flat[i] for i in idx]
-            sub_p = [p_flat[i] for i in idx] if p_flat is not None else None
+            sub_g = tuple(g_flat[i] for i in idx)
+            sub_p = tuple(p_flat[i] for i in idx) if p_flat is not None else None
             upd, new_states[name] = transforms[name].update(
                 sub_g, state.inner_states[name], sub_p
             )

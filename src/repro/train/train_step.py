@@ -42,6 +42,8 @@ class TrainConfig:
     ortho_kwargs: Optional[Mapping[str, Any]] = None  # extra method kwargs
     ortho_seed: int = 0  # driver RNG seed (stochastic methods, e.g. rsdm)
     ortho_safety_project_every: int = 0  # Newton-Schulz cadence, any method
+    ortho_grouping: str = "auto"  # "auto": one batched dispatch per
+    # constraint group (same-shape ortho leaves); "per_leaf": unrolled
 
 
 def make_optimizer(cfg, train_cfg: TrainConfig) -> optim.GradientTransformation:
@@ -81,9 +83,12 @@ def make_optimizer(cfg, train_cfg: TrainConfig) -> optim.GradientTransformation:
             f"ortho_kwargs may not set driver-level fields {sorted(reserved)}; "
             "use the dedicated TrainConfig fields (pogo_learning_rate, "
             "pogo_use_kernel, pogo_base, ortho_seed, "
-            "ortho_safety_project_every) instead"
+            "ortho_safety_project_every, ortho_grouping) instead"
         )
     method_kwargs.update(extra)
+    # The ortho partition is handed the flat list of constrained leaves;
+    # the driver buckets them into constraint groups (one batched (B, p, n)
+    # dispatch per group) unless ortho_grouping="per_leaf".
     ortho_opt = core.orthogonal(
         train_cfg.orthoptimizer,
         learning_rate=train_cfg.pogo_learning_rate,
@@ -91,6 +96,7 @@ def make_optimizer(cfg, train_cfg: TrainConfig) -> optim.GradientTransformation:
         use_kernel=train_cfg.pogo_use_kernel,
         safety_project_every=train_cfg.ortho_safety_project_every,
         seed=train_cfg.ortho_seed,
+        grouping=train_cfg.ortho_grouping,
         **method_kwargs,
     )
     return optim.partition(

@@ -198,7 +198,8 @@ def _problem(shape, dtype):
 
 
 def _driver_leaf_key(seed=0):
-    """The driver's per-leaf key derivation for a single-leaf tree."""
+    """The driver's per-matrix key derivation for a single-matrix tree:
+    split(rng) -> stacked split(subkey, n_matrices), matrix 0's key."""
     _, subkey = jax.random.split(jax.random.PRNGKey(seed))
     return jax.random.split(subkey, 1)[0]
 
@@ -255,8 +256,10 @@ def test_parity_trajectory_pogo():
 
 
 def test_rsdm_rng_stream_parity_multi_leaf():
-    """The driver reproduces the old per-leaf key derivation exactly:
-    split(state.rng) -> split(subkey, n_leaves), in leaf order."""
+    """The driver derives one stacked key array per step — split(state.rng)
+    -> split(subkey, n_matrices) — indexed per MATRIX in flat-leaf order,
+    so stacked leaves draw one independent submanifold per matrix and the
+    stream does not depend on how leaves are bucketed into groups."""
     tree = {
         "a": stiefel.random_stiefel(KEY, (8, 20)),
         "b": stiefel.random_stiefel(jax.random.PRNGKey(3), (2, 6, 12)),
@@ -269,19 +272,34 @@ def test_rsdm_rng_stream_parity_multi_leaf():
     u_new, state = opt.update(grads, state, tree)
 
     _, subkey = jax.random.split(jax.random.PRNGKey(0))
-    leaves, treedef = jax.tree.flatten(tree)
-    gleaves = jax.tree.flatten(grads)[0]
-    keys = jax.random.split(subkey, len(leaves))
-    u_ref = jax.tree.unflatten(
-        treedef,
-        [_ref_rsdm(x, g, ETA, k) for x, g, k in zip(leaves, gleaves, keys)],
-    )
+    keys = jax.random.split(subkey, 3)  # 1 matrix in "a" + 2 stacked in "b"
+    u_ref = {
+        "a": _ref_rsdm(tree["a"], grads["a"], ETA, keys[0]),
+        "b": jnp.stack(
+            [
+                _ref_rsdm(tree["b"][j], grads["b"][j], ETA, keys[1 + j])
+                for j in range(2)
+            ]
+        ),
+    }
     jax.tree.map(
         lambda a, b: np.testing.assert_allclose(
             np.asarray(a), np.asarray(b), atol=5e-6
         ),
         u_new,
         u_ref,
+    )
+    # grouping must not perturb the stream: per_leaf dispatch, same keys
+    opt_pl = orthogonal(
+        "rsdm", learning_rate=ETA, submanifold_dim=8, seed=0, grouping="per_leaf"
+    )
+    u_pl, _ = opt_pl.update(grads, opt_pl.init(tree), tree)
+    jax.tree.map(
+        lambda a, b: np.testing.assert_allclose(
+            np.asarray(a), np.asarray(b), atol=5e-6
+        ),
+        u_new,
+        u_pl,
     )
     # second step advances the stream (updates differ from the first)
     u2, _ = opt.update(grads, state, tree)

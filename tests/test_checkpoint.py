@@ -75,6 +75,122 @@ def test_async_save(tmp_path, tree):
     assert ckpt.latest_step(str(tmp_path)) == 11
 
 
+def _legacy_opt_state(params):
+    """A pre-group optimizer state: last_distance as per-leaf scalars."""
+    from repro.core.api import OrthoState
+
+    return {
+        "ortho": OrthoState(
+            count=jnp.asarray(42, jnp.int32),
+            base_state=(),
+            rng=jax.random.PRNGKey(5),
+            last_distance=jax.tree.map(
+                lambda p: jnp.asarray(0.125, jnp.float32), params
+            ),
+            extras=(),
+        ),
+        "trailer": jnp.arange(4.0),
+    }
+
+
+def test_legacy_leafwise_state_restores_into_grouped_layout(tmp_path):
+    """Deprecation shim: a checkpoint written with the pre-group per-leaf
+    last_distance pytree restores into the grouped layout — count/rng and
+    every non-telemetry leaf intact, distances reset to zeros (they are
+    recomputed on the next optimizer step)."""
+    from repro.core import api, stiefel
+
+    params = {
+        "a": stiefel.random_stiefel(jax.random.PRNGKey(0), (4, 8)),
+        "b": stiefel.random_stiefel(jax.random.PRNGKey(1), (4, 8)),
+        "c": stiefel.random_stiefel(jax.random.PRNGKey(2), (3, 6)),
+    }
+    old = _legacy_opt_state(params)  # 3 distance scalars
+    ckpt.save(str(tmp_path), 9, old)
+
+    opt = api.orthogonal("pogo", learning_rate=0.1)
+    new_state = opt.init(params)  # 2 groups -> 2 distance arrays
+    like = {"ortho": new_state, "trailer": jnp.zeros(4)}
+    with pytest.warns(DeprecationWarning, match="pre-group"):
+        step, restored = ckpt.restore_latest(str(tmp_path), like)
+    assert step == 9
+    assert int(restored["ortho"].count) == 42
+    np.testing.assert_array_equal(
+        np.asarray(restored["ortho"].rng), np.asarray(jax.random.PRNGKey(5))
+    )
+    np.testing.assert_allclose(np.asarray(restored["trailer"]), np.arange(4.0))
+    ld = restored["ortho"].last_distance
+    assert isinstance(ld, api.GroupedDistances)
+    for g, arr in zip(ld.plan.groups, ld.per_group):
+        assert arr.shape == (g.batch,)
+        np.testing.assert_allclose(np.asarray(arr), 0.0)
+    # and the restored state steps normally
+    grads = jax.tree.map(lambda x: 0.1 * jnp.ones_like(x), params)
+    u, _ = opt.update(grads, restored["ortho"], params)
+    assert all(bool(jnp.all(jnp.isfinite(x))) for x in jax.tree.leaves(u))
+
+
+def test_legacy_same_count_distance_shape_drift(tmp_path):
+    """Equal leaf counts but scalar-vs-(B,) distance shapes: the distance
+    slot resets, everything else must still shape-check."""
+    from repro.core import api, stiefel
+
+    params = {"a": stiefel.random_stiefel(jax.random.PRNGKey(0), (4, 8))}
+    old = _legacy_opt_state(params)  # 1 distance scalar
+    ckpt.save(str(tmp_path), 3, old)
+    opt = api.orthogonal("pogo", learning_rate=0.1)
+    like = {"ortho": opt.init(params), "trailer": jnp.zeros(4)}  # 1 (1,) array
+    with pytest.warns(DeprecationWarning, match="pre-group"):
+        restored = ckpt.restore(str(tmp_path), 3, like)
+    np.testing.assert_allclose(
+        np.asarray(restored["ortho"].last_distance.per_group[0]), [0.0]
+    )
+    assert int(restored["ortho"].count) == 42
+
+
+def test_non_legacy_count_drift_still_raises(tmp_path):
+    """The legacy shim only engages when the checkpoint region standing in
+    for the grouped distances holds per-leaf fp32 scalars. A current-format
+    checkpoint restored into a tree with a leaf removed elsewhere must
+    raise — not silently shift the leaf mapping."""
+    from repro.core import api, stiefel
+
+    params = {"a": stiefel.random_stiefel(jax.random.PRNGKey(0), (4, 8))}
+    opt = api.orthogonal("pogo", learning_rate=0.1)
+    state = opt.init(params)
+    tree_full = {
+        "ortho": state,
+        "t1": jnp.arange(4.0),
+        "t2": jnp.arange(100.0, 104.0),
+    }
+    ckpt.save(str(tmp_path), 1, tree_full)
+    like = {"ortho": state, "t1": jnp.zeros(4)}  # t2 removed
+    with pytest.raises(ValueError, match="leaves"):
+        ckpt.restore(str(tmp_path), 1, like)
+
+
+def test_grouped_state_roundtrips(tmp_path):
+    """The grouped state itself checkpoints losslessly (plan is static —
+    zero leaves — and reconstructs from the `like` treedef)."""
+    from repro.core import api, stiefel
+
+    params = {
+        "a": stiefel.random_stiefel(jax.random.PRNGKey(0), (4, 8)),
+        "b": stiefel.random_stiefel(jax.random.PRNGKey(1), (4, 8)),
+    }
+    opt = api.orthogonal("pogo", learning_rate=0.1)
+    state = opt.init(params)
+    grads = jax.tree.map(lambda x: 0.1 * jnp.ones_like(x), params)
+    u, state = opt.update(grads, state, params)
+    ckpt.save(str(tmp_path), 1, state)
+    restored = ckpt.restore(str(tmp_path), 1, state)
+    assert isinstance(restored.last_distance, api.GroupedDistances)
+    np.testing.assert_allclose(
+        np.asarray(restored.last_distance.per_group[0]),
+        np.asarray(state.last_distance.per_group[0]),
+    )
+
+
 def test_elastic_restore_resharding(tmp_path, tree):
     """Files are device-count independent: restore onto explicit shardings."""
     ckpt.save(str(tmp_path), 1, tree)

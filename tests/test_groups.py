@@ -1,0 +1,387 @@
+"""Constraint-group driver: bucketing rules, grouped<->per-leaf parity for
+every registered method (mixed tall/wide/stacked/complex leaves), the
+one-program-per-group compile guarantee, grouped telemetry, the legacy
+leaf-wise deprecation shim, and the batch-axis sharding hint."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import api, stiefel
+from repro.core.api import (
+    METHODS,
+    ConstraintSet,
+    GroupedDistances,
+    OrthoState,
+    leaf_distances,
+    max_distance,
+    orthogonal,
+    plan_groups,
+)
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _mixed_tree():
+    """Wide, tall, stacked and complex leaves: three f32 leaves share the
+    (6, 16) manifold orientation (one of them stored tall, one stacked), a
+    second f32 shape, and a complex leaf — 3 groups under "auto"."""
+    return {
+        "wide": stiefel.random_stiefel(KEY, (6, 16)),
+        "tall": jnp.swapaxes(
+            stiefel.random_stiefel(jax.random.PRNGKey(1), (6, 16)), -1, -2
+        ),
+        "stacked": stiefel.random_stiefel(jax.random.PRNGKey(2), (3, 6, 16)),
+        "other": stiefel.random_stiefel(jax.random.PRNGKey(3), (4, 12)),
+        "cplx": stiefel.random_stiefel(
+            jax.random.PRNGKey(4), (6, 12), jnp.complex64
+        ),
+    }
+
+
+def _grads_like(tree, seed=9):
+    def g(x):
+        r = jax.random.normal(jax.random.PRNGKey(seed), x.shape)
+        if jnp.issubdtype(x.dtype, jnp.complexfloating):
+            r = r + 1j * jax.random.normal(jax.random.PRNGKey(seed + 1), x.shape)
+        return 0.1 * r.astype(x.dtype)
+
+    return jax.tree.map(g, tree)
+
+
+VARIANTS = {
+    "pogo": {},
+    "pogo_root": {"find_root": True},
+    "landing": {},
+    "landing_unsafe": {"safe_step": False},
+    "landing_pc": {},
+    "rgd_qr": {"retraction": "qr"},
+    "rgd_polar": {"retraction": "polar"},
+    "rgd_cayley": {"retraction": "cayley"},
+    "rgd_ns": {"retraction": "newton_schulz"},
+    "slpg": {},
+    "rsdm": {"submanifold_dim": 4},
+}
+
+
+def _method_of(variant: str) -> str:
+    return variant.split("_")[0] if variant.split("_")[0] in METHODS else variant
+
+
+# ------------------------------------------------------------------ bucketing
+
+
+def test_plan_buckets_by_manifold_shape_and_dtype():
+    tree = _mixed_tree()
+    leaves, treedef = jax.tree.flatten(tree)
+    plan = plan_groups(leaves, treedef, "auto")
+    keys = [(g.p, g.n, str(g.dtype)) for g in plan.groups]
+    assert len(plan.groups) == 3
+    assert (6, 12, "complex64") in keys
+    assert (4, 12, "float32") in keys
+    assert (6, 16, "float32") in keys
+    big = plan.groups[keys.index((6, 16, "float32"))]
+    # wide + tall + 3-stack share one group; tall member enters transposed
+    assert big.batch == 5
+    assert sorted(m.count for m in big.members) == [1, 1, 3]
+    assert any(m.transpose for m in big.members)
+    # key_base is assigned in flat-leaf order across ALL groups
+    assert plan.n_matrices == 7
+    assert plan.n_leaves == 5
+
+
+def test_plan_per_leaf_is_one_group_per_leaf():
+    tree = _mixed_tree()
+    leaves, treedef = jax.tree.flatten(tree)
+    plan = plan_groups(leaves, treedef, "per_leaf")
+    assert len(plan.groups) == len(leaves)
+    assert all(len(g.members) == 1 for g in plan.groups)
+
+
+def test_plan_rejects_vectors_and_bad_grouping():
+    with pytest.raises(ValueError, match="matrices"):
+        plan_groups([jnp.ones((4,))], jax.tree.flatten([jnp.ones((4,))])[1], "auto")
+    with pytest.raises(ValueError, match="grouping"):
+        orthogonal("pogo", learning_rate=0.1, grouping="bogus")
+
+
+def test_plan_is_static_and_hashable():
+    tree = _mixed_tree()
+    leaves, treedef = jax.tree.flatten(tree)
+    a = plan_groups(leaves, treedef, "auto")
+    b = plan_groups(leaves, treedef, "auto")
+    assert a == b and hash(a) == hash(b)
+    # static pytree node: zero leaves, rides inside jitted state for free
+    assert jax.tree.leaves(a) == []
+
+
+# -------------------------------------------------------------------- parity
+
+
+@pytest.mark.parametrize("variant", sorted(VARIANTS))
+def test_grouped_matches_per_leaf(variant):
+    """Acceptance: grouping="auto" reproduces grouping="per_leaf" updates
+    and last_distance telemetry for every method, on a tree mixing wide,
+    tall, stacked and complex leaves."""
+    tree = _mixed_tree()
+    grads = _grads_like(tree)
+    outs = {}
+    for grouping in ("auto", "per_leaf"):
+        opt = orthogonal(
+            _method_of(variant),
+            learning_rate=0.1,
+            grouping=grouping,
+            **VARIANTS[variant],
+        )
+        state = opt.init(tree)
+        u, state = opt.update(grads, state, tree)
+        outs[grouping] = (u, state)
+    u_a, s_a = outs["auto"]
+    u_p, s_p = outs["per_leaf"]
+    jax.tree.map(
+        lambda a, b: np.testing.assert_allclose(
+            np.asarray(a), np.asarray(b), atol=5e-6, rtol=1e-5
+        ),
+        u_a,
+        u_p,
+    )
+    jax.tree.map(
+        lambda a, b: np.testing.assert_allclose(
+            np.asarray(a), np.asarray(b), atol=5e-6
+        ),
+        leaf_distances(s_a),
+        leaf_distances(s_p),
+    )
+    np.testing.assert_allclose(
+        float(max_distance(s_a)), float(max_distance(s_p)), atol=5e-6
+    )
+
+
+def test_grouped_matches_per_leaf_multi_step_with_base():
+    """State threading (count, base momentum, rng) is grouping-agnostic."""
+    from repro import optim
+
+    tree = _mixed_tree()
+    trajs = {}
+    for grouping in ("auto", "per_leaf"):
+        opt = orthogonal(
+            "pogo",
+            learning_rate=0.1,
+            grouping=grouping,
+            base_optimizer=optim.chain(optim.trace(0.9)),
+        )
+        params = tree
+        state = opt.init(params)
+        for i in range(4):
+            grads = _grads_like(params, seed=20 + i)
+            u, state = opt.update(grads, state, params)
+            params = jax.tree.map(jnp.add, params, u)
+        trajs[grouping] = params
+    jax.tree.map(
+        lambda a, b: np.testing.assert_allclose(
+            np.asarray(a), np.asarray(b), atol=2e-5
+        ),
+        trajs["auto"],
+        trajs["per_leaf"],
+    )
+
+
+# ------------------------------------------------------------ compile counts
+
+
+def test_same_shape_leaves_compile_one_group_program(monkeypatch):
+    """Regression: N same-shape leaves must trace the stage functions ONCE
+    under "auto" (one batched program per group), N times under
+    "per_leaf" — the whole point of the grouped driver."""
+    calls = {"n": 0}
+    orig = api.Pogo.direction
+
+    def counting(self, x, g, ctx):
+        calls["n"] += 1
+        return orig(self, x, g, ctx)
+
+    monkeypatch.setattr(api.Pogo, "direction", counting)
+    tree = {
+        "a": stiefel.random_stiefel(KEY, (8, 16)),
+        "b": stiefel.random_stiefel(jax.random.PRNGKey(1), (8, 16)),
+        "c": jnp.swapaxes(stiefel.random_stiefel(jax.random.PRNGKey(2), (8, 16)), -1, -2),
+    }
+    grads = _grads_like(tree)
+    for grouping, expect in (("auto", 1), ("per_leaf", 3)):
+        opt = orthogonal("pogo", learning_rate=0.1, grouping=grouping)
+        state = opt.init(tree)
+        calls["n"] = 0
+        jax.jit(opt.update)(grads, state, tree)
+        assert calls["n"] == expect, (grouping, calls["n"])
+
+
+# ----------------------------------------------------------------- telemetry
+
+
+def test_grouped_distances_layout_and_views():
+    tree = _mixed_tree()
+    grads = _grads_like(tree)
+    opt = orthogonal("pogo", learning_rate=0.1)
+    state = opt.init(tree)
+    u, state = opt.update(grads, state, tree)
+    ld = state.last_distance
+    assert isinstance(ld, GroupedDistances)
+    assert len(ld.per_group) == len(ld.plan.groups)
+    for g, arr in zip(ld.plan.groups, ld.per_group):
+        assert arr.shape == (g.batch,) and arr.dtype == jnp.float32
+    # leaf view has the param structure; global max agrees with the arrays
+    view = leaf_distances(state)
+    assert jax.tree.structure(view) == jax.tree.structure(tree)
+    want = max(float(jnp.max(a)) for a in ld.per_group)
+    np.testing.assert_allclose(float(max_distance(state)), want, rtol=1e-6)
+    assert want < 1e-4  # pogo lands ~on-manifold in one step
+
+
+def test_legacy_leafwise_state_readable_with_one_warning():
+    """Deprecation shim: pre-group states (per-leaf scalar pytree) stay
+    readable through max_distance/leaf_distances, warning once."""
+    legacy = OrthoState(
+        count=jnp.zeros([], jnp.int32),
+        base_state=(),
+        rng=jax.random.PRNGKey(0),
+        last_distance={"a": jnp.asarray(0.25, jnp.float32),
+                       "b": jnp.asarray(0.5, jnp.float32)},
+        extras=(),
+    )
+    monkey_flag = api._LEGACY_DISTANCE_WARNED
+    api._LEGACY_DISTANCE_WARNED = False
+    try:
+        with pytest.warns(DeprecationWarning, match="leaf-wise"):
+            assert float(max_distance(legacy)) == 0.5
+        # second read: no further warning
+        import warnings as _w
+
+        with _w.catch_warnings():
+            _w.simplefilter("error")
+            assert float(max_distance(legacy)) == 0.5
+            assert leaf_distances(legacy)["a"] == 0.25
+    finally:
+        api._LEGACY_DISTANCE_WARNED = monkey_flag
+
+
+# ----------------------------------------------------------------------- rng
+
+
+def test_rsdm_grouped_keys_are_per_matrix_and_grouping_invariant():
+    """Stacked (B, 2) key fan-out: each matrix draws its own submanifold,
+    identically under either grouping (keys indexed in flat-leaf order)."""
+    tree = {
+        "a": stiefel.random_stiefel(KEY, (6, 16)),
+        "b": stiefel.random_stiefel(jax.random.PRNGKey(1), (2, 6, 16)),
+    }
+    grads = _grads_like(tree)
+    us = {}
+    for grouping in ("auto", "per_leaf"):
+        opt = orthogonal(
+            "rsdm", learning_rate=0.3, submanifold_dim=4, seed=7,
+            grouping=grouping,
+        )
+        u, _ = opt.update(grads, opt.init(tree), tree)
+        us[grouping] = u
+    jax.tree.map(
+        lambda a, b: np.testing.assert_allclose(
+            np.asarray(a), np.asarray(b), atol=5e-6
+        ),
+        us["auto"],
+        us["per_leaf"],
+    )
+    # distinct matrices saw distinct keys: the two stacked updates differ
+    u_b = np.asarray(us["auto"]["b"])
+    assert not np.allclose(u_b[0], u_b[1])
+
+
+def test_random_stiefel_stacked_matches_per_key_samples():
+    keys = jax.random.split(KEY, 6).reshape(2, 3, 2)
+    u = stiefel.random_stiefel_stacked(keys, (2, 3, 4, 8))
+    assert u.shape == (2, 3, 4, 8)
+    direct = stiefel.random_stiefel(keys[1, 2], (4, 8))
+    np.testing.assert_allclose(np.asarray(u[1, 2]), np.asarray(direct), atol=1e-6)
+    with pytest.raises(ValueError, match="batch dims"):
+        stiefel.random_stiefel_stacked(keys, (3, 2, 4, 8))
+
+
+# ------------------------------------------------------------- ConstraintSet
+
+
+def test_constraint_set_roundtrip_and_update():
+    """Stacked storage: from_tree/to_tree round-trips exactly (tall leaves
+    included), is a pytree, and feeds the driver with zero repacking —
+    producing the same trajectory as the leaf tree."""
+    tree = _mixed_tree()
+    cs = ConstraintSet.from_tree(tree)
+    assert cs.plan.n_matrices == 7
+    jax.tree.map(
+        lambda a, b: np.testing.assert_array_equal(np.asarray(a), np.asarray(b)),
+        cs.to_tree(),
+        tree,
+    )
+    # pytree: stacked leaves flatten out, the plan is aux data
+    assert len(jax.tree.leaves(cs)) == len(cs.stacks)
+
+    grads = _grads_like(tree)
+    gs = ConstraintSet.from_tree(grads)
+    opt = orthogonal("pogo", learning_rate=0.1)
+    u_cs, s_cs = opt.update(gs, opt.init(cs), cs)
+    assert isinstance(u_cs, ConstraintSet)
+    u_tree, s_tree = opt.update(grads, opt.init(tree), tree)
+    jax.tree.map(
+        lambda a, b: np.testing.assert_allclose(
+            np.asarray(a), np.asarray(b), atol=5e-6, rtol=1e-5
+        ),
+        cs.apply(u_cs).to_tree(),
+        jax.tree.map(jnp.add, tree, u_tree),
+    )
+    np.testing.assert_allclose(
+        float(max_distance(s_cs)), float(max_distance(s_tree)), atol=5e-6
+    )
+
+
+def test_constraint_set_apply_rejects_foreign_plan():
+    a = ConstraintSet.from_tree({"x": stiefel.random_stiefel(KEY, (4, 8))})
+    b = ConstraintSet.from_tree({"x": stiefel.random_stiefel(KEY, (4, 12))})
+    with pytest.raises(ValueError, match="plans differ"):
+        a.apply(b)
+
+
+# ------------------------------------------------------------------ sharding
+
+
+@dataclasses.dataclass
+class _StubMesh:
+    shape: dict
+
+
+def test_group_batch_spec_and_opt_state_specs():
+    from jax.sharding import PartitionSpec as P
+
+    from repro.distributed import sharding
+
+    mesh = _StubMesh(shape={"data": 2, "model": 2})
+    assert sharding.group_batch_spec(mesh, 4) == P("data")
+    assert sharding.group_batch_spec(mesh, 3) == P(None)
+
+    tree = {
+        "a": stiefel.random_stiefel(KEY, (8, 16)),
+        "b": stiefel.random_stiefel(jax.random.PRNGKey(1), (3, 8, 16)),
+    }
+    opt = orthogonal("pogo", learning_rate=0.1)
+    state = opt.init(tree)
+    specs = sharding.opt_state_specs(state, tree, mesh)
+    ld = specs.last_distance
+    assert isinstance(ld, GroupedDistances)
+    # one group of B=4: its (B,) distance array shards over the data axis
+    assert ld.per_group == (P("data"),)
+
+
+def test_group_sharding_hint_exposed():
+    leaves, treedef = jax.tree.flatten([stiefel.random_stiefel(KEY, (2, 4, 8))])
+    plan = plan_groups(leaves, treedef, "auto")
+    assert plan.groups[0].sharding_hint() == ("batch", 2)
