@@ -1,0 +1,90 @@
+"""CI perf-regression guard: bench records vs the committed baseline.
+
+Compares ``us_per_call`` of matching record names between a fresh bench
+JSON (e.g. ``bench_smoke.json`` from ``benchmarks.run --smoke --json``)
+and the committed baseline (``BENCH_many_matrices.json``); exits 1 when
+any matched record regresses by more than ``--max-regress`` (default
+25%). Speedup/derived rows (whose ``us_per_call`` mirrors another row)
+are compared too — they carry the same timing.
+
+Escape hatches, in order:
+  * env ``BENCH_REGRESSION_OK=1`` (CI sets it from a ``bench-regression-ok``
+    PR label) downgrades failures to warnings;
+  * records present in only one file are reported but never fail the run
+    (grids may legitimately change);
+  * timing-free rows (us_per_call == 0) are skipped.
+
+Usage:
+    python -m benchmarks.check_regression \
+        --baseline BENCH_many_matrices.json --current bench_smoke.json
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+
+def load_records(path: str) -> dict[str, float]:
+    with open(path) as f:
+        payload = json.load(f)
+    out: dict[str, float] = {}
+    for rec in payload.get("records", []):
+        us = float(rec.get("us_per_call") or 0.0)
+        if us > 0:
+            out[rec["name"]] = us
+    return out
+
+
+def compare(baseline: dict[str, float], current: dict[str, float],
+            max_regress: float) -> tuple[list[str], list[str]]:
+    regressions, report = [], []
+    for name in sorted(set(baseline) & set(current)):
+        base, cur = baseline[name], current[name]
+        ratio = cur / base
+        line = f"{name}: {base:.1f} -> {cur:.1f} us ({ratio:.2f}x)"
+        report.append(line)
+        if ratio > 1.0 + max_regress:
+            regressions.append(line)
+    only_base = sorted(set(baseline) - set(current))
+    only_cur = sorted(set(current) - set(baseline))
+    if only_base:
+        report.append(f"# baseline-only records (ignored): {len(only_base)}")
+    if only_cur:
+        report.append(f"# new records (no baseline yet): {len(only_cur)}")
+    return regressions, report
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--baseline", required=True)
+    ap.add_argument("--current", required=True)
+    ap.add_argument("--max-regress", type=float, default=0.25,
+                    help="allowed fractional slowdown (0.25 = +25%%)")
+    args = ap.parse_args(argv)
+
+    baseline = load_records(args.baseline)
+    current = load_records(args.current)
+    regressions, report = compare(baseline, current, args.max_regress)
+    for line in report:
+        print(line)
+    if not set(baseline) & set(current):
+        print("WARNING: no overlapping records — guard is vacuous")
+        return 0
+    if regressions:
+        print(f"\n{len(regressions)} record(s) regressed more than "
+              f"{args.max_regress:.0%}:")
+        for line in regressions:
+            print(f"  REGRESSION {line}")
+        if os.environ.get("BENCH_REGRESSION_OK"):
+            print("BENCH_REGRESSION_OK set: downgrading to warning")
+            return 0
+        return 1
+    print("perf guard: OK")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -7,14 +7,24 @@ that N independent (p, n) Stiefel matrices cost one batched ``(N, p, n)``
 two-stage dispatch instead of an unrolled N-leaf loop whose trace time,
 kernel launches and telemetry scalars all grow linearly in N.
 
-Three dispatch modes over a POGO problem of N matrices:
+Dispatch modes over a POGO problem of N matrices:
 
   * ``per_leaf``  — the unrolled reference: one program per leaf;
   * ``auto``      — grouped driver over the N-leaf tree: one batched
     stage dispatch, but the tree boundary still costs a per-step
     gather/scatter of N leaves;
   * ``stacked``   — ``core.ConstraintSet`` storage: params stay stacked,
-    so the update is the pure batched stage (the at-scale resting state).
+    so the update is the pure batched stage (the at-scale resting state);
+  * ``auto_fused`` / ``stacked_fused`` — the same with ``use_kernel=True``:
+    the single-pass fused group step (base moments + update + telemetry in
+    one HBM round trip on TPU; its jnp form elsewhere, which still removes
+    the O(p^2 n) telemetry gram via the (p, p) algebraic identity).
+
+The fused problems run with a momentum (``trace``) base so the in-step
+base-optimizer fusion is part of what is measured; their unfused
+counterparts (``auto``/``stacked``) use the identical base. The grids
+always include the CI smoke sizes (N in {8, 16}) so the bench-smoke
+regression guard has matching baseline records.
 
 Metrics per mode:
 
@@ -42,7 +52,7 @@ import jax.numpy as jnp
 
 from repro.core import api, stiefel
 
-from .common import emit
+from .common import emit, min_window_us
 
 N_DIM = 256
 STEPS = 20
@@ -53,7 +63,7 @@ def _problem(n_mat: int, p: int, n: int, mode: str):
     per-layer model tree has) or as ConstraintSet stacked storage."""
     base = stiefel.random_stiefel(jax.random.PRNGKey(0), (n_mat, p, n))
     gbase = 0.1 * jax.random.normal(jax.random.PRNGKey(1), (n_mat, p, n))
-    if mode == "stacked":
+    if mode.startswith("stacked"):
         params = api.ConstraintSet.from_tree({"w": base})
         grads = api.ConstraintSet.from_tree({"w": gbase})
         return params, grads
@@ -65,7 +75,13 @@ def _problem(n_mat: int, p: int, n: int, mode: str):
 def _time_step(n_mat: int, p: int, n: int, mode: str, steps: int = STEPS):
     params, grads = _problem(n_mat, p, n, mode)
     grouping = "per_leaf" if mode == "per_leaf" else "auto"
-    opt = api.orthogonal("pogo", learning_rate=0.1, grouping=grouping)
+    from repro import optim
+
+    opt = api.orthogonal(
+        "pogo", learning_rate=0.1, grouping=grouping,
+        base_optimizer=optim.chain(optim.trace(0.3)),
+        use_kernel=mode.endswith("_fused"),
+    )
     state = opt.init(params)
 
     @jax.jit
@@ -78,11 +94,13 @@ def _time_step(n_mat: int, p: int, n: int, mode: str, steps: int = STEPS):
     jax.block_until_ready(params2)
     trace_s = time.perf_counter() - t0
 
-    t0 = time.perf_counter()
-    for _ in range(steps):
-        params2, state2 = step(params2, state2, grads)
-    jax.block_until_ready(params2)
-    us = 1e6 * (time.perf_counter() - t0) / steps
+    def run_steps(k):
+        nonlocal params2, state2
+        for _ in range(k):
+            params2, state2 = step(params2, state2, grads)
+        jax.block_until_ready(params2)
+
+    us = min_window_us(run_steps, steps)
     e2e_us = (1e6 * trace_s + us * steps) / steps
     return trace_s, us, e2e_us
 
@@ -103,22 +121,43 @@ def run(full: bool = False, smoke: bool = False):
         headline = [(16, 16)]
         steps = 5
     elif full:
-        n_grid, p_grid = [1024, 2048, 4096, 8192], [4, 16, 64]
+        n_grid, p_grid = [8, 16, 1024, 2048, 4096, 8192], [4, 16, 64]
         headline = [(2048, 16), (2048, 4)]
         steps = STEPS
     else:
-        n_grid, p_grid = [256, 1024, 2048], [4, 16, 64]
+        # always include the CI smoke sizes so bench_smoke.json records
+        # find matching names in the committed baseline
+        n_grid, p_grid = [8, 16, 256, 1024, 2048], [4, 16, 64]
         headline = [(2048, 16)]
         steps = STEPS
 
     auto: dict = {}
+    stacked: dict = {}
     for p in p_grid:
         for n_mat in n_grid:
-            for mode in ("auto", "stacked"):
+            for mode in ("auto", "stacked", "auto_fused", "stacked_fused"):
                 trace_s, us, e2e = _time_step(n_mat, p, N_DIM, mode, steps)
                 if mode == "auto":
                     auto[(n_mat, p)] = (trace_s, us, e2e)
+                stacked[(mode, n_mat, p)] = (trace_s, us, e2e)
                 _emit_mode(mode, n_mat, p, trace_s, us, e2e, steps)
+    # Fused-vs-unfused speedup at the headline points (the ISSUE-3 gate:
+    # fused stacked must beat the committed stacked baseline end to end).
+    for n_mat, p in headline:
+        if ("stacked", n_mat, p) not in stacked:
+            continue
+        u_tr, u_us, u_e2e = stacked[("stacked", n_mat, p)]
+        f_tr, f_us, f_e2e = stacked[("stacked_fused", n_mat, p)]
+        emit(
+            f"many_matrices/fused_speedup/N{n_mat}_p{p}",
+            f_us,
+            f"e2e_x={u_e2e / f_e2e:.2f},step_x={u_us / f_us:.2f}",
+            n_matrices=n_mat, p=p, n=N_DIM, steps=steps,
+            e2e_step_speedup=u_e2e / f_e2e,
+            steady_step_speedup=u_us / f_us,
+            unfused={"trace_s": u_tr, "us": u_us, "e2e_us": u_e2e},
+            fused={"trace_s": f_tr, "us": f_us, "e2e_us": f_e2e},
+        )
     # The per-leaf reference only runs at the headline points: its trace
     # cost IS the bottleneck being demonstrated (tracing an 8k-leaf
     # program everywhere would make the suite take hours for no signal).

@@ -253,6 +253,92 @@ def analyze_cell(arch: str, shape_name: str, force: bool = False):
     return result
 
 
+# --------------------------------------------------------- group-step roofline
+#
+# HBM passes over the (B, p, n) operands per optimizer step, counted from
+# the dataflow (fp32 words; (p, p) accumulators and scalars are ignored —
+# they are O(p/n) of a pass). With a momentum base the unfused driver
+# pays: base pass (read g, read mu, write mu', write g') + update (read x,
+# read g', write x') + telemetry gram (read x') = 8; the fused group step
+# pays read x, g, mu + write x', mu' = 5. Without a base: 4 -> 3.
+GROUP_STEP_PASSES = {
+    ("unfused", "trace"): 8,
+    ("fused", "trace"): 5,
+    ("unfused", "none"): 4,
+    ("fused", "none"): 3,
+}
+
+
+def run_group_step(full: bool = False, smoke: bool = False):
+    """Achieved bytes/step and fraction-of-roofline for fused vs unfused
+    grouped POGO steps (suite ``group_roofline``; rows feed BENCH json).
+
+    The byte count is the *algorithmic* HBM traffic of the step
+    (GROUP_STEP_PASSES x B x p x n x 4); achieved GB/s = bytes / measured
+    step time, and fraction-of-roofline divides by the v5e HBM model
+    (819 GB/s). On the CPU container the fraction is tiny — the column
+    exists to track the fused/unfused *ratio* and to be meaningful on TPU.
+    """
+    import jax
+
+    from repro import optim
+    from repro.core import api, stiefel
+
+    from .common import emit, min_window_us
+
+    if smoke:
+        problems = [(16, 16, 256)]
+        steps = 5
+    else:
+        # (16, 16, 256) mirrors the smoke problem so the committed baseline
+        # has matching record names for the CI perf-regression guard.
+        problems = [(16, 16, 256), (2048, 16, 256)]
+        problems += [(2048, 64, 256)] if full else []
+        steps = 20
+
+    for n_mat, p, n in problems:
+        x = stiefel.random_stiefel(jax.random.PRNGKey(0), (n_mat, p, n))
+        g = 0.1 * jax.random.normal(jax.random.PRNGKey(1), (n_mat, p, n))
+        params = api.ConstraintSet.from_tree({"w": x})
+        grads = api.ConstraintSet.from_tree({"w": g})
+        for mode in ("unfused", "fused"):
+            opt = api.orthogonal(
+                "pogo", learning_rate=0.1,
+                base_optimizer=optim.chain(optim.trace(0.3)),
+                use_kernel=(mode == "fused"),
+            )
+            state = opt.init(params)
+
+            @jax.jit
+            def step(params, state, grads):
+                u, s = opt.update(grads, state, params)
+                return params.apply(u), s
+
+            ps, st = step(params, state, grads)
+            jax.block_until_ready(ps.stacks)
+
+            def run_steps(k):
+                nonlocal ps, st
+                for _ in range(k):
+                    ps, st = step(ps, st, grads)
+                jax.block_until_ready(ps.stacks)
+
+            us = min_window_us(run_steps, steps)
+            passes = GROUP_STEP_PASSES[(mode, "trace")]
+            step_bytes = passes * n_mat * p * n * 4
+            achieved = step_bytes / (us / 1e6)
+            frac = achieved / HBM_BW
+            emit(
+                f"roofline/group_step/{mode}/N{n_mat}_p{p}",
+                us,
+                f"passes={passes},GBps={achieved / 1e9:.2f},"
+                f"roofline_frac={frac:.4f}",
+                mode=mode, n_matrices=n_mat, p=p, n=n, steps=steps,
+                hbm_passes=passes, bytes_per_step=step_bytes,
+                achieved_bytes_per_s=achieved, roofline_fraction=frac,
+            )
+
+
 def main():
     # must run before jax init (the dryrun import sets the device count)
     os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")

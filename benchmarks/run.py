@@ -40,6 +40,7 @@ def main(argv=None):
         pca,
         precision_ablation,
         procrustes,
+        roofline,
         unitary_pc,
     )
 
@@ -53,6 +54,8 @@ def main(argv=None):
         "lambda": lambda: lambda_ablation.run(full=args.full),        # Figs. C.2/3
         "kernels": lambda: kernel_bench.run(full=args.full),          # Pallas
         "many_matrices": lambda: many_matrices.run(                   # §Groups
+            full=args.full, smoke=args.smoke),
+        "group_roofline": lambda: roofline.run_group_step(            # §Fusion
             full=args.full, smoke=args.smoke),
     }
     only = set(args.only.split(",")) if args.only else None

@@ -186,6 +186,17 @@ def _scatter_group(group: GroupSpec, stacked: Array, out: list) -> None:
         out[m.leaf] = u
 
 
+def _gather_group_scalars(group: GroupSpec, leaves) -> Array:
+    """Stack per-matrix scalar leaves (shape = lead dims) into ``(B,)``."""
+    parts = [jnp.reshape(leaves[m.leaf], (m.count,)) for m in group.members]
+    return parts[0] if len(parts) == 1 else jnp.concatenate(parts)
+
+
+def _scatter_group_scalars(group: GroupSpec, stacked: Array, out: list) -> None:
+    for m in group.members:
+        out[m.leaf] = jnp.reshape(stacked[m.offset:m.offset + m.count], m.lead)
+
+
 @jax.tree_util.register_pytree_node_class
 class ConstraintSet:
     """Stacked storage for a constrained param tree.
@@ -310,6 +321,20 @@ class StepCtx:
 # ------------------------------------------------------------------- methods
 
 
+class FusedSlots(NamedTuple):
+    """Runtime operands of one fused group step: the base-optimizer
+    description (``optim.fused.FusedBase`` fields) plus the group-gathered
+    moment buffers — ``mu`` stacked ``(B, p, n)``, ``nu`` ``(B,)``
+    per-matrix scalars, ``count`` the base's own step counter."""
+
+    kind: str
+    hyper: tuple
+    post_scale: float
+    mu: Optional[Array]
+    nu: Optional[Array]
+    count: Optional[Array]
+
+
 class Method:
     """Protocol for one orthoptimizer: the two pluggable stages.
 
@@ -320,18 +345,49 @@ class Method:
     ``land(m, ctx)`` maps the intermediate iterate back toward St(p, n);
     the default is the identity (Landing-family methods only correct
     asymptotically).
+
+    A method with a **single-pass fused group step** (base-optimizer
+    moments + direction + leap + land + feasibility telemetry in one HBM
+    round trip — Pallas kernel on TPU, jnp fallback elsewhere) declares
+    ``fused_stage`` (the kernel stage id) and may veto per-instance via
+    ``fused_ready()`` (e.g. POGO's quartic ``find_root`` or Landing's
+    safe step have no fused form). The driver routes through
+    ``fused_step`` when the stage, the instance, the base optimizer
+    (``optim.fused.resolve_fused_base``) and every group dtype allow it.
     """
 
     name: str = "?"
     multiplicative: bool = False  # land() ignores M, computes X' from ctx
     needs_rng: bool = False  # driver splits a per-leaf key into ctx.key
     kernel_update: Optional[Callable] = None  # fused whole-update override
+    fused_stage: Optional[str] = None  # kernels/fused_step stage id
+    lam: float = 0.5  # landing strength; read by the default fused_step
 
     def direction(self, x: Array, g: Array, ctx: StepCtx) -> Optional[Array]:
         raise NotImplementedError
 
     def land(self, m: Array, ctx: StepCtx) -> Array:
         return m
+
+    def fused_ready(self) -> bool:
+        """Instance-level gate for the fused group step."""
+        return self.fused_stage is not None
+
+    def fused_step(self, x: Array, g: Array, ctx: StepCtx, slots: FusedSlots):
+        """One fused group step: ``(x_next, mu', nu', dist)``."""
+        from ..kernels import ops as kops
+
+        return kops.fused_group_step(
+            x, g, ctx.eta,
+            method=self.fused_stage,
+            lam=self.lam,
+            base_kind=slots.kind,
+            hyper=slots.hyper,
+            post_scale=slots.post_scale,
+            mu=slots.mu,
+            nu=slots.nu,
+            count=slots.count,
+        )
 
 
 def _accum_dtype(dtype):
@@ -356,10 +412,14 @@ class Pogo(Method):
     """
 
     name = "pogo"
+    fused_stage = "pogo"
 
     def __init__(self, lam: float = 0.5, find_root: bool = False):
         self.lam = lam
         self.find_root = find_root
+
+    def fused_ready(self) -> bool:
+        return not self.find_root  # the quartic root has no fused form
 
     def direction(self, x, g, ctx):
         return stiefel.riemannian_gradient(x, g)
@@ -426,11 +486,17 @@ class Landing(Method):
     """
 
     name = "landing"
+    fused_stage = "landing"
 
     def __init__(self, lam: float = 1.0, eps: float = 0.5, safe_step: bool = True):
         self.lam = lam
         self.eps = eps
         self.safe_step = safe_step
+
+    def fused_ready(self) -> bool:
+        # The exact safe step rescales eta per matrix from a quartic solve;
+        # it has no in-kernel form, so only the fixed-step variant fuses.
+        return not self.safe_step
 
     def _field(self, x, g, ctx):
         if ctx.use_kernel and not jnp.issubdtype(x.dtype, jnp.complexfloating):
@@ -460,6 +526,7 @@ class LandingPC(Landing):
     """
 
     name = "landing_pc"
+    fused_stage = None  # relative field balancing is not the fused stage
 
     def __init__(self, lam: float = 0.1, eps: float = 0.5):
         super().__init__(lam=lam, eps=eps, safe_step=True)
@@ -747,8 +814,20 @@ def _group_batch_hint(x: Array) -> Array:
 
 
 def _build(method: Method, cfg: OrthoConfig) -> GradientTransformation:
+    from ..optim import fused as optim_fused
+
     base = cfg.base_optimizer
     has_kernel = cfg.use_kernel and method.kernel_update is not None
+    # Single-pass fused group step: base moments + direction + leap + land
+    # + telemetry in one HBM round trip. Requires a kernel-replayable base
+    # (optim/fused.py) and a method instance with a fused stage.
+    fused_base = optim_fused.resolve_fused_base(base)
+    can_fuse = (
+        cfg.use_kernel
+        and fused_base is not None
+        and method.fused_stage is not None
+        and method.fused_ready()
+    )
     if cfg.grouping not in ("auto", "per_leaf"):
         raise ValueError(
             f"grouping must be 'auto' or 'per_leaf', got {cfg.grouping!r}"
@@ -777,7 +856,31 @@ def _build(method: Method, cfg: OrthoConfig) -> GradientTransformation:
             raise ValueError(
                 f"{method.name} is a manifold optimizer; params are required"
             )
-        if base is not None:
+        leaves, treedef = jax.tree.flatten(params)
+        # Bucketing is trace-time work on static shapes: under jit it runs
+        # once per compilation, and the whole update below is one batched
+        # dispatch per group instead of one per leaf.
+        plan = plan_groups(leaves, treedef, cfg.grouping)
+        # Fused routing is a static (trace-time) decision: complex groups
+        # have no fused kernel, and mixing fused/unfused groups would split
+        # the base-optimizer state update, so any complex group falls the
+        # whole step back to the two-phase path.
+        fused_now = can_fuse and not any(
+            jnp.issubdtype(grp.dtype, jnp.complexfloating)
+            for grp in plan.groups
+        )
+        mu_leaves = nu_leaves = None
+        base_count = None
+        if fused_now:
+            # The base optimizer runs *inside* the fused step: hand the raw
+            # gradients through and thread the moment buffers per group.
+            g, base_state = grads, state.base_state
+            mu_tree, nu_tree, base_count = fused_base.get_slots(state.base_state)
+            if mu_tree is not None:
+                mu_leaves = jax.tree.flatten(mu_tree)[0]
+            if nu_tree is not None:
+                nu_leaves = jax.tree.flatten(nu_tree)[0]
+        elif base is not None:
             g, base_state = base.update(grads, state.base_state, params)
         else:
             g, base_state = grads, ()
@@ -788,12 +891,7 @@ def _build(method: Method, cfg: OrthoConfig) -> GradientTransformation:
             else cfg.learning_rate
         )
 
-        leaves, treedef = jax.tree.flatten(params)
         gleaves = jax.tree.flatten(g)[0]
-        # Bucketing is trace-time work on static shapes: under jit it runs
-        # once per compilation, and the whole update below is one batched
-        # dispatch per group instead of one per leaf.
-        plan = plan_groups(leaves, treedef, cfg.grouping)
         if method.needs_rng and plan.n_matrices:
             # One split for the whole step: a stacked (N, 2) key array,
             # indexed per matrix inside the batched stage (no Python list
@@ -845,14 +943,83 @@ def _build(method: Method, cfg: OrthoConfig) -> GradientTransformation:
             dist = stiefel.manifold_distance(y).astype(jnp.float32)
             return ug, dist
 
+        def group_step_fused(group: GroupSpec, xg: Array, gg: Array,
+                             mug, nug):
+            """One single-pass fused group step: the base-optimizer moment
+            update, direction + leap + land and the feasibility telemetry
+            come back from one kernel (or its jnp oracle off-TPU) — no
+            separate base pass, no telemetry gram over X'."""
+            x32 = xg.astype(_accum_dtype(xg.dtype))
+            g32 = gg.astype(x32.dtype)
+            eta = jnp.asarray(eta0, jnp.float32)
+            ctx = StepCtx(
+                x=x32, g=g32, eta=eta, count=count, key=None,
+                use_kernel=cfg.use_kernel, scratch={},
+            )
+            slots = FusedSlots(
+                kind=fused_base.kind, hyper=fused_base.hyper,
+                post_scale=fused_base.post_scale,
+                mu=mug, nu=nug, count=base_count,
+            )
+            x_next, mu2, nu2, dist = method.fused_step(x32, g32, ctx, slots)
+            if cfg.safety_project_every:
+                do = (count % cfg.safety_project_every) == 0
+
+                def _proj(args):
+                    v, _ = args
+                    w = stiefel.project_newton_schulz(v)
+                    return w, stiefel.manifold_distance(w).astype(jnp.float32)
+
+                x_next, dist = jax.lax.cond(
+                    do, _proj, lambda args: args, (x_next, dist)
+                )
+            ug = (x_next - x32).astype(xg.dtype)
+            # The telemetry contract measures the *stored* iterate. For
+            # reduced-precision params the f32 kernel distance would
+            # under-report the post-cast infeasibility (bf16 rounding
+            # re-perturbs X' off the manifold), so re-measure on the cast
+            # result — the fused telemetry saving applies to groups whose
+            # storage dtype is already the accumulation dtype.
+            if xg.dtype != x32.dtype:
+                y = (xg + ug).astype(jnp.promote_types(xg.dtype, jnp.float32))
+                dist = stiefel.manifold_distance(y)
+            return ug, dist.astype(jnp.float32), mu2, nu2
+
         out: list = [None] * len(leaves)
+        mu_out: list = [None] * len(leaves)
+        nu_out: list = [None] * len(leaves)
         dists = []
         for group in plan.groups:
             xg = _group_batch_hint(_gather_group(group, leaves))
             gg = _group_batch_hint(_gather_group(group, gleaves))
-            ug, dist = group_step(group, xg, gg)
+            if fused_now:
+                mug = (
+                    _group_batch_hint(_gather_group(group, mu_leaves))
+                    if mu_leaves is not None else None
+                )
+                nug = (
+                    _gather_group_scalars(group, nu_leaves)
+                    if nu_leaves is not None else None
+                )
+                ug, dist, mu2, nu2 = group_step_fused(group, xg, gg, mug, nug)
+                if mu2 is not None:
+                    _scatter_group(group, mu2, mu_out)
+                if nu2 is not None:
+                    _scatter_group_scalars(group, nu2, nu_out)
+            else:
+                ug, dist = group_step(group, xg, gg)
             dists.append(dist)
             _scatter_group(group, ug, out)
+        if fused_now:
+            mu_tree2 = (
+                jax.tree.unflatten(treedef, mu_out)
+                if mu_leaves is not None else None
+            )
+            nu_tree2 = (
+                jax.tree.unflatten(treedef, nu_out)
+                if nu_leaves is not None else None
+            )
+            base_state = fused_base.set_slots(base_state, mu_tree2, nu_tree2)
         updates = jax.tree.unflatten(treedef, out)
         return updates, OrthoState(
             count=count,

@@ -1,14 +1,18 @@
 """Pallas TPU kernels for the paper's compute hot spots.
 
 The paper's contribution *is* an optimizer built from a short fixed GEMM
-sequence, so the hot spot is the orthoptimizer step itself: ``pogo_update``
-(fused leap+land), ``landing_field`` (fused baseline field), and
-``newton_schulz`` (matmul-only polar projection for init / RGD retraction).
+sequence, so the hot spot is the orthoptimizer step itself:
+``fused_group_step`` (the single-pass fused group step: base-optimizer
+moments + POGO/Landing update + feasibility telemetry in one HBM round
+trip), ``pogo_update`` (fused leap+land), ``landing_field`` (fused
+baseline field, whole and tiled), and ``newton_schulz`` (matmul-only
+polar projection for init / RGD retraction). Kernel block sizes come
+from the autotuning planner in ``autotune.py`` (JSON-persisted cache).
 
 Validated on CPU via ``interpret=True`` against the pure-jnp oracles in
 ``ref.py`` (this container has no TPU; kernels target v5e).
 """
 
-from . import ops, ref
+from . import autotune, ops, ref
 
-__all__ = ["ops", "ref"]
+__all__ = ["autotune", "ops", "ref"]

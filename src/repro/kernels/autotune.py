@@ -1,0 +1,244 @@
+"""Autotuned kernel planner: timed (block_b / tile_n) choice + JSON cache.
+
+``ops.py`` used to pick a kernel plan from a fixed VMEM heuristic. The
+heuristic stays (it defines the *feasible* candidate set — nothing that
+blows the VMEM budget is ever timed), but when several candidates fit,
+the planner times each once and keeps the fastest. Results are cached
+
+  * in-process (``PlanCache._mem``) so a key is timed at most once per
+    process, and
+  * in a JSON file (``~/.cache/repro_kernels/autotune.json`` by default,
+    override with ``REPRO_AUTOTUNE_CACHE``) so trainer restarts and
+    benchmark runs reuse tuned plans across processes.
+
+Cache file format (versioned; unknown versions are ignored, corrupt
+files are treated as empty):
+
+    {"version": 1,
+     "plans": {"<key>": {"kind": "whole", "block_b": 64, "tile_n": 0,
+                          "us_per_matrix": 12.3, "source": "autotune"}}}
+
+Keys are ``p=16,n=256,b=2048,dtype=float32,stages=pogo+trace,
+backend=tpu,interp=0`` — shape, dtype AND the fused-stage set, since the
+in-kernel base stage changes the working set and the arithmetic.
+
+Timing happens at *trace* time (plan selection is static): candidates run
+on concrete numpy operands inside ``jax.core.eval_context()``, the
+escape hatch that makes them execute eagerly even while an outer
+``jax.jit`` trace is active (omnistaging would otherwise stage the
+nested call — see ``_bench``). Autotuning defaults to on for real TPU
+backends and off in interpret mode (timing the interpreter is
+meaningless); ``REPRO_AUTOTUNE=1`` / ``0`` forces either way.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import tempfile
+import time
+from typing import Callable, Optional
+
+# Process-wide counters, exposed for tests and diagnostics.
+STATS = {"timing_runs": 0, "hits_mem": 0, "hits_disk": 0, "misses": 0}
+
+
+def default_cache_path() -> str:
+    env = os.environ.get("REPRO_AUTOTUNE_CACHE")
+    if env:
+        return env
+    return os.path.join(
+        os.path.expanduser("~"), ".cache", "repro_kernels", "autotune.json"
+    )
+
+
+def plan_key(p: int, n: int, bsz: int, dtype, stages: str, *,
+             backend: str, interpret: bool) -> str:
+    return (
+        f"p={p},n={n},b={bsz},dtype={dtype},stages={stages},"
+        f"backend={backend},interp={int(interpret)}"
+    )
+
+
+class PlanCache:
+    """Two-level (memory + JSON file) plan cache, multi-process tolerant:
+    writes re-read the file and replace it atomically, so concurrent
+    trainers merge rather than clobber."""
+
+    VERSION = 1
+
+    def __init__(self, path: Optional[str] = None):
+        self.path = default_cache_path() if path is None else path
+        self._mem: dict[str, dict] = {}
+        self._disk_loaded = False
+
+    def _load_disk(self) -> None:
+        if self._disk_loaded:
+            return
+        self._disk_loaded = True
+        try:
+            with open(self.path) as f:
+                payload = json.load(f)
+            if payload.get("version") == self.VERSION:
+                for k, v in payload.get("plans", {}).items():
+                    self._mem.setdefault(k, dict(v))
+        except (OSError, ValueError):
+            pass
+
+    def lookup(self, key: str) -> Optional[dict]:
+        if key in self._mem:
+            STATS["hits_mem"] += 1
+            return dict(self._mem[key])
+        self._load_disk()
+        if key in self._mem:
+            STATS["hits_disk"] += 1
+            return dict(self._mem[key])
+        STATS["misses"] += 1
+        return None
+
+    def store(self, key: str, plan: dict, persist: bool = True) -> None:
+        self._mem[key] = dict(plan)
+        if not persist:
+            return
+        try:
+            current: dict[str, dict] = {}
+            try:
+                with open(self.path) as f:
+                    payload = json.load(f)
+                if payload.get("version") == self.VERSION:
+                    current = payload.get("plans", {})
+            except (OSError, ValueError):
+                pass
+            current[key] = dict(plan)
+            d = os.path.dirname(self.path) or "."
+            os.makedirs(d, exist_ok=True)
+            fd, tmp = tempfile.mkstemp(dir=d, suffix=".tmp")
+            with os.fdopen(fd, "w") as f:
+                json.dump({"version": self.VERSION, "plans": current}, f,
+                          indent=1, sort_keys=True)
+            os.replace(tmp, self.path)
+        except OSError:
+            pass  # cache is an optimization; never fail the step over it
+
+
+_CACHE: Optional[PlanCache] = None
+
+
+def get_cache() -> PlanCache:
+    global _CACHE
+    if _CACHE is None:
+        _CACHE = PlanCache()
+    return _CACHE
+
+
+def set_cache(cache: Optional[PlanCache]) -> None:
+    """Swap the process-wide cache (tests; ``None`` resets to default)."""
+    global _CACHE
+    _CACHE = cache
+
+
+def autotune_enabled(interpret: bool) -> bool:
+    forced = os.environ.get("REPRO_AUTOTUNE")
+    if forced is not None:
+        return forced not in ("0", "false", "off", "")
+    return not interpret  # real TPU lowering: timing is meaningful
+
+
+def choose(
+    key: str,
+    candidates: list[dict],
+    time_candidate: Callable[[dict], float],
+    *,
+    cache: Optional[PlanCache] = None,
+    enabled: bool = True,
+) -> dict:
+    """Pick a plan for ``key`` from ``candidates`` (all VMEM-feasible).
+
+    Cached plans are returned without timing (a stale cached plan that is
+    no longer in the candidate set — e.g. after a VMEM-budget change — is
+    discarded and re-tuned; a cached *heuristic* plan is re-timed once
+    autotuning is enabled and there is a real choice to make). With
+    autotuning disabled or a single candidate, the first candidate (the
+    heuristic default) wins and is cached in-memory only.
+
+    Timing is best-effort, matching the cache philosophy ("an
+    optimization; never fail the step over it"): a candidate that fails
+    to compile or run is skipped, and if every candidate fails the
+    heuristic default wins.
+    """
+    if not candidates:
+        raise ValueError(f"no feasible kernel plan candidates for {key}")
+    cache = get_cache() if cache is None else cache
+    retime = enabled and len(candidates) > 1
+    hit = cache.lookup(key)
+    if hit is not None:
+        sig = {(c["kind"], c["block_b"], c["tile_n"]) for c in candidates}
+        in_sig = (hit.get("kind"), hit.get("block_b"), hit.get("tile_n")) in sig
+        if in_sig and not (retime and hit.get("source") == "heuristic"):
+            return hit
+    if not retime:
+        plan = dict(candidates[0])
+        plan["source"] = "heuristic"
+        cache.store(key, plan, persist=False)
+        return plan
+    best, best_t = None, float("inf")
+    for cand in candidates:
+        STATS["timing_runs"] += 1
+        try:
+            t = time_candidate(cand)
+        except Exception:  # noqa: BLE001 - skip uncompilable candidates
+            continue
+        if t < best_t:
+            best, best_t = dict(cand), t
+    if best is None:  # every candidate failed to time: heuristic default
+        plan = dict(candidates[0])
+        plan["source"] = "heuristic"
+        cache.store(key, plan, persist=False)
+        return plan
+    best["us_per_matrix"] = best_t * 1e6
+    best["source"] = "autotune"
+    cache.store(key, best, persist=True)
+    return best
+
+
+def _bench(fn, *args, reps: int = 2) -> float:
+    """Per-call seconds for a jax callable on concrete operands: one
+    warmup for compile, then the min of ``reps`` timed calls — the reps
+    reuse the compiled executable, so a candidate is compiled exactly
+    once per tuning pass.
+
+    Timing runs during an *outer* jit trace (plan selection is trace-time
+    Python). Under omnistaging, any primitive bound while a dynamic trace
+    is active is staged into that trace — even a nested ``jit`` call on
+    fully concrete operands — so a naive timing loop would measure trace
+    overhead and ``block_until_ready`` would silently no-op on the tracer
+    result. ``jax.core.eval_context()`` escapes to a clean trace state so
+    the candidate executes eagerly for real (``ensure_compile_time_eval``
+    is not enough — it leaks into the nested pallas kernel trace and
+    breaks index-map lowering). Operands must still be concrete (numpy);
+    the guards below turn any regression of either invariant into a loud
+    error instead of silently persisting garbage plans.
+    """
+    import jax
+
+    leaked = [a for a in jax.tree.leaves(args) if isinstance(a, jax.core.Tracer)]
+    if leaked:
+        raise RuntimeError(
+            "autotune timer received traced operands — build timing inputs "
+            "with numpy so the candidate actually executes"
+        )
+    with jax.core.eval_context():
+        out = fn(*args)
+        if any(isinstance(o, jax.core.Tracer) for o in jax.tree.leaves(out)):
+            raise RuntimeError(
+                "autotune timer produced a traced result — the candidate "
+                "was staged into an outer trace instead of executing"
+            )
+        jax.block_until_ready(out)
+        best = float("inf")
+        for _ in range(reps):
+            t0 = time.perf_counter()
+            out = fn(*args)
+            jax.block_until_ready(out)
+            best = min(best, time.perf_counter() - t0)
+        return best

@@ -1,0 +1,448 @@
+"""Single-pass fused group step as Pallas TPU kernels.
+
+One kernel per constraint group and step: reads ``X``, the *raw* gradient
+``g`` and the linear base optimizer's moment buffer(s) from HBM once,
+updates the moments in-kernel (``none`` | ``trace`` | ``vadam`` stages —
+see ``optim/fused.py`` for the layout contract), computes the POGO /
+Landing direction + leap + land, and writes ``X'``, the new moments and
+the per-matrix feasibility distance. Compared to the unfused driver path
+(base-optimizer XLA pass over g/mu + update kernel re-reading X and the
+transformed gradient + a telemetry gram pass over X') this removes ~3
+full HBM passes over the ``(B, p, n)`` operands — at O(p) flops/byte the
+update is far below the roofline ridge, so those passes *are* the step
+time (see ``pogo_update.py``'s analysis).
+
+Telemetry never re-reads X': with ``C = M M^H`` resident in VMEM the
+post-land gram is algebraic,
+
+    X' = ((1+lam) I - lam C) M
+    X' X'^H = (1+lam)^2 C - 2 lam (1+lam) C^2 + lam^2 C^3
+
+so ``||X' X'^H - I||_F`` costs three tiny (p, p) products. The Landing
+stage measures the gram of the VMEM-resident (whole) or tile-accumulated
+(tiled) X' directly — same zero-extra-HBM property.
+
+Two variants, mirroring ``pogo_update.py``:
+
+  * ``fused_step_whole``   — grid over the matrix batch, full (p, n)
+    matrices resident; single HBM pass.
+  * ``fused_step_tiled``   — three-phase (POGO) / two-phase (Landing)
+    pipeline over n-tiles for large n, reusing the phase-1 (p, p)
+    accumulation structure. The VAdam scalar normalization commutes with
+    the linear direction map (``R(s g) = s R(g)``), so phase 1
+    accumulates with the *unscaled* momentum and the per-matrix scalar
+    is applied in phase 2 — the full transformed gradient never needs to
+    exist in HBM.
+
+MXU alignment: callers (ops.py) pad p to a multiple of 8 and n to a
+multiple of 128; zero padding is exact for every stage (zero rows/cols
+propagate as zeros; padded batch rows are sliced off by the caller).
+Scalar operands ride a prefetched fp32 vector:
+``[eta, lam, post_scale, h0..h4]`` with ``h* = (decay,)`` for trace and
+``(b1, b2, eps, c1, c2)`` for VAdam (c1/c2 the bias corrections,
+computed by the caller from the base step count).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from .pogo_update import _CompilerParams, _phase3_kernel
+
+Array = jax.Array
+
+_DN = (((2,), (2,)), ((0,), (0,)))  # contract over n:   (bm,p,n)x(bm,p,n)->(bm,p,p)
+_DP = (((2,), (1,)), ((0,), (0,)))  # (bm,p,p)x(bm,p,n)->(bm,p,n); also (p,p)x(p,p)
+
+N_SCALARS = 8  # eta, lam, post_scale, h0..h4
+
+
+def _dot(a, b, dims):
+    return jax.lax.dot_general(a, b, dims, preferred_element_type=jnp.float32)
+
+
+def _base_stage_whole(scal_ref, g, mu_ref, nu_ref, mu_out, nu_out, base_kind, nesterov):
+    """In-kernel linear base optimizer; returns the transformed gradient."""
+    ps = scal_ref[2]
+    if base_kind == "none":
+        return ps * g
+    if base_kind == "trace":
+        decay = scal_ref[3]
+        mu2 = decay * mu_ref[...].astype(jnp.float32) + g
+        mu_out[...] = mu2.astype(mu_out.dtype)
+        geff = decay * mu2 + g if nesterov else mu2
+        return ps * geff
+    # vadam
+    b1, b2, eps = scal_ref[3], scal_ref[4], scal_ref[5]
+    c1, c2 = scal_ref[6], scal_ref[7]
+    mu2 = b1 * mu_ref[...].astype(jnp.float32) + (1.0 - b1) * g
+    mu_out[...] = mu2.astype(mu_out.dtype)
+    sq = jnp.sum(g * g, axis=(1, 2))  # raw-gradient norm per matrix
+    nu2 = b2 * nu_ref[...].astype(jnp.float32)[:, 0] + (1.0 - b2) * sq
+    nu_out[...] = nu2[:, None].astype(nu_out.dtype)
+    denom = jnp.sqrt(nu2 / c2) + eps
+    return (ps / c1) * mu2 / denom[:, None, None]
+
+
+def _masked_eye(p_pad: int, p_valid: int):
+    """I_p embedded in the padded (p_pad, p_pad) block: zero-padded rows of
+    the operands produce zero rows in every gram, so the telemetry residual
+    must not subtract 1 on the padded diagonal."""
+    eye = jnp.eye(p_pad, dtype=jnp.float32)
+    if p_valid >= p_pad:
+        return eye
+    row = jax.lax.broadcasted_iota(jnp.int32, (p_pad, p_pad), 0)
+    return eye * (row < p_valid).astype(jnp.float32)
+
+
+def _residual_dist(w, p_valid: int):
+    """||W - I_p||_F per matrix from a (bm, p_pad, p_pad) gram block."""
+    res = w - _masked_eye(w.shape[-1], p_valid)[None]
+    return jnp.sqrt(jnp.sum(res * res, axis=(1, 2)))
+
+
+def _fused_whole_kernel(scal_ref, *refs, method, base_kind, nesterov, p_valid):
+    eta = scal_ref[0]
+    lam = scal_ref[1]
+    it = iter(refs)
+    x_ref = next(it)
+    g_ref = next(it)
+    mu_ref = next(it) if base_kind != "none" else None
+    nu_ref = next(it) if base_kind == "vadam" else None
+    o_ref = next(it)
+    mu_out = next(it) if base_kind != "none" else None
+    nu_out = next(it) if base_kind == "vadam" else None
+    dist_ref = next(it)
+
+    x = x_ref[...].astype(jnp.float32)  # (bm, p, n)
+    g = g_ref[...].astype(jnp.float32)
+    geff = _base_stage_whole(
+        scal_ref, g, mu_ref, nu_ref, mu_out, nu_out, base_kind, nesterov
+    )
+    a = _dot(x, x, _DN)
+    b = _dot(x, geff, _DN)
+    r = 0.5 * (_dot(a, geff, _DP) - _dot(b, x, _DP))
+    if method == "pogo":
+        m = x - eta * r
+        c = _dot(m, m, _DN)
+        o_ref[...] = ((1.0 + lam) * m - lam * _dot(c, m, _DP)).astype(o_ref.dtype)
+        # Telemetry from the resident (p, p) accumulator — the algebraic
+        # identity X'X'^H = (1+lam)^2 C - 2lam(1+lam) C^2 + lam^2 C^3.
+        cc = _dot(c, c, _DP)
+        ccc = _dot(cc, c, _DP)
+        w = (1.0 + lam) ** 2 * c - 2.0 * lam * (1.0 + lam) * cc + lam**2 * ccc
+    else:  # landing
+        ax = _dot(a, x, _DP)
+        x2 = x - eta * (r + lam * (ax - x))
+        o_ref[...] = x2.astype(o_ref.dtype)
+        w = _dot(x2, x2, _DN)  # X' still resident: direct gram, zero HBM
+    dist_ref[...] = _residual_dist(w, p_valid)[:, None]
+
+
+def fused_step_whole(
+    x: Array,
+    g: Array,
+    mu: Array | None,
+    nu: Array | None,
+    scal: Array,
+    *,
+    method: str,
+    base_kind: str,
+    nesterov: bool = False,
+    block_b: int = 1,
+    interpret: bool = False,
+    p_valid: int | None = None,
+):
+    """Whole-matrix fused step. x, g (B, p, n) padded/aligned by the caller;
+    mu (B, p, n) and nu (B, 1) present per ``base_kind``; scal the
+    N_SCALARS fp32 vector. Returns (x', mu', nu', dist) with dist (B, 1)."""
+    bsz, p, n = x.shape
+    assert bsz % block_b == 0, (bsz, block_b)
+    mat_spec = pl.BlockSpec((block_b, p, n), lambda i, s: (i, 0, 0))
+    col_spec = pl.BlockSpec((block_b, 1), lambda i, s: (i, 0))
+    in_specs = [mat_spec, mat_spec]
+    operands = [x, g]
+    out_specs = [mat_spec]
+    out_shape = [jax.ShapeDtypeStruct(x.shape, x.dtype)]
+    if base_kind != "none":
+        in_specs.append(mat_spec)
+        operands.append(mu)
+        out_specs.append(mat_spec)
+        out_shape.append(jax.ShapeDtypeStruct(mu.shape, mu.dtype))
+    if base_kind == "vadam":
+        in_specs.append(col_spec)
+        operands.append(nu)
+        out_specs.append(col_spec)
+        out_shape.append(jax.ShapeDtypeStruct(nu.shape, nu.dtype))
+    out_specs.append(col_spec)
+    out_shape.append(jax.ShapeDtypeStruct((bsz, 1), jnp.float32))
+
+    kernel = functools.partial(
+        _fused_whole_kernel, method=method, base_kind=base_kind,
+        nesterov=nesterov, p_valid=p if p_valid is None else p_valid,
+    )
+    outs = pl.pallas_call(
+        kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=(bsz // block_b,),
+            in_specs=in_specs,
+            out_specs=out_specs,
+        ),
+        out_shape=out_shape,
+        interpret=interpret,
+    )(scal, *operands)
+    outs = list(outs)
+    x2 = outs.pop(0)
+    mu2 = outs.pop(0) if base_kind != "none" else None
+    nu2 = outs.pop(0) if base_kind == "vadam" else None
+    dist = outs.pop(0)
+    return x2, mu2, nu2, dist
+
+
+# ---------------------------------------------------------------------- tiled
+
+
+def _t1_kernel(scal_ref, *refs, base_kind, nesterov):
+    """Phase 1 (grid (B, NT)): in-kernel base moments per tile + accumulate
+    A = X X^T and Bp = X Geu^T, where Geu is the *unscaled* transformed
+    gradient (trace: the actual momentum output; vadam: the first moment —
+    its scalar normalization is applied in phase 2)."""
+    t = pl.program_id(1)
+    it = iter(refs)
+    x_ref = next(it)
+    g_ref = next(it)
+    mu_ref = next(it) if base_kind != "none" else None
+    a_ref = next(it)
+    b_ref = next(it)
+    mu_out = next(it) if base_kind != "none" else None
+    sq_ref = next(it) if base_kind == "vadam" else None
+
+    x = x_ref[...].astype(jnp.float32)  # (1, p, tn)
+    g = g_ref[...].astype(jnp.float32)
+    if base_kind == "none":
+        geu = g
+    elif base_kind == "trace":
+        decay = scal_ref[3]
+        mu2 = decay * mu_ref[...].astype(jnp.float32) + g
+        mu_out[...] = mu2.astype(mu_out.dtype)
+        geu = decay * mu2 + g if nesterov else mu2
+    else:  # vadam
+        b1 = scal_ref[3]
+        mu2 = b1 * mu_ref[...].astype(jnp.float32) + (1.0 - b1) * g
+        mu_out[...] = mu2.astype(mu_out.dtype)
+        geu = mu2
+    a_part = _dot(x, x, _DN)
+    b_part = _dot(x, geu, _DN)
+
+    @pl.when(t == 0)
+    def _init():
+        a_ref[...] = jnp.zeros_like(a_ref)
+        b_ref[...] = jnp.zeros_like(b_ref)
+        if sq_ref is not None:
+            sq_ref[...] = jnp.zeros_like(sq_ref)
+
+    a_ref[...] += a_part
+    b_ref[...] += b_part
+    if sq_ref is not None:
+        sq_ref[...] += jnp.sum(g * g, axis=(1, 2))[:, None]
+
+
+def _geff_tile(scal_ref, src_ref, g_ref, s_ref, base_kind, nesterov):
+    """Unscaled transformed-gradient tile for phase 2 + its scalar s."""
+    src = src_ref[...].astype(jnp.float32)
+    if base_kind == "trace" and nesterov:
+        decay = scal_ref[3]
+        src = decay * src + g_ref[...].astype(jnp.float32)
+    return src, s_ref[...][:, :, None]  # (1, p, tn), (1, 1, 1)
+
+
+def _t2_pogo_kernel(scal_ref, *refs, base_kind, nesterov):
+    """Phase 2: M = X - eta * s * 1/2 (A Geu - Bp X) per tile; accumulate
+    C = M M^T."""
+    eta = scal_ref[0]
+    t = pl.program_id(1)
+    it = iter(refs)
+    x_ref = next(it)
+    src_ref = next(it)
+    g_ref = next(it) if (base_kind == "trace" and nesterov) else None
+    a_ref = next(it)
+    b_ref = next(it)
+    s_ref = next(it)
+    m_ref = next(it)
+    c_ref = next(it)
+
+    x = x_ref[...].astype(jnp.float32)
+    geu, s = _geff_tile(scal_ref, src_ref, g_ref, s_ref, base_kind, nesterov)
+    r = 0.5 * (_dot(a_ref[...], geu, _DP) - _dot(b_ref[...], x, _DP))
+    m = x - eta * s * r
+    m_ref[...] = m
+    c_part = _dot(m, m, _DN)
+
+    @pl.when(t == 0)
+    def _init():
+        c_ref[...] = jnp.zeros_like(c_ref)
+
+    c_ref[...] += c_part
+
+
+def _t2_landing_kernel(scal_ref, *refs, base_kind, nesterov):
+    """Phase 2 (terminal for Landing): X' per tile from the shared (p, p)
+    accumulators; accumulate W = X' X'^T for the telemetry residual."""
+    eta = scal_ref[0]
+    lam = scal_ref[1]
+    t = pl.program_id(1)
+    it = iter(refs)
+    x_ref = next(it)
+    src_ref = next(it)
+    g_ref = next(it) if (base_kind == "trace" and nesterov) else None
+    a_ref = next(it)
+    b_ref = next(it)
+    s_ref = next(it)
+    o_ref = next(it)
+    w_ref = next(it)
+
+    x = x_ref[...].astype(jnp.float32)
+    geu, s = _geff_tile(scal_ref, src_ref, g_ref, s_ref, base_kind, nesterov)
+    r = 0.5 * (_dot(a_ref[...], geu, _DP) - _dot(b_ref[...], x, _DP))
+    normal = _dot(a_ref[...], x, _DP) - x
+    x2 = x - eta * (s * r + lam * normal)
+    o_ref[...] = x2.astype(o_ref.dtype)
+    w_part = _dot(x2, x2, _DN)
+
+    @pl.when(t == 0)
+    def _init():
+        w_ref[...] = jnp.zeros_like(w_ref)
+
+    w_ref[...] += w_part
+
+
+def _tiled_call(kernel, grid, in_specs, out_specs, out_shape, scal, operands,
+                interpret):
+    return pl.pallas_call(
+        kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=grid,
+            in_specs=in_specs,
+            out_specs=out_specs,
+        ),
+        out_shape=out_shape,
+        compiler_params=_CompilerParams(
+            dimension_semantics=("parallel", "arbitrary")
+        ),
+        interpret=interpret,
+    )(scal, *operands)
+
+
+def fused_step_tiled(
+    x: Array,
+    g: Array,
+    mu: Array | None,
+    nu: Array | None,
+    scal: Array,
+    *,
+    method: str,
+    base_kind: str,
+    nesterov: bool = False,
+    tile_n: int = 512,
+    interpret: bool = False,
+    p_valid: int | None = None,
+):
+    """Tiled fused step for large n (n % tile_n == 0). Same contract as
+    :func:`fused_step_whole`; the POGO distance is derived from the phase-2
+    C accumulator via the algebraic identity (three (p, p) batched matmuls
+    in plain XLA — no kernel pass over X')."""
+    bsz, p, n = x.shape
+    assert n % tile_n == 0, (n, tile_n)
+    nt = n // tile_n
+    grid = (bsz, nt)
+    mat_spec = pl.BlockSpec((1, p, tile_n), lambda i, t, s: (i, 0, t))
+    acc_spec = pl.BlockSpec((1, p, p), lambda i, t, s: (i, 0, 0))
+    col_spec = pl.BlockSpec((1, 1), lambda i, t, s: (i, 0))
+
+    # ---- phase 1: moments + (p, p) accumulators
+    in_specs = [mat_spec, mat_spec]
+    operands = [x, g]
+    if base_kind != "none":
+        in_specs.append(mat_spec)
+        operands.append(mu)
+    out_specs = [acc_spec, acc_spec]
+    out_shape = [jax.ShapeDtypeStruct((bsz, p, p), jnp.float32)] * 2
+    if base_kind != "none":
+        out_specs.append(mat_spec)
+        out_shape.append(jax.ShapeDtypeStruct(mu.shape, mu.dtype))
+    if base_kind == "vadam":
+        out_specs.append(col_spec)
+        out_shape.append(jax.ShapeDtypeStruct((bsz, 1), jnp.float32))
+    outs = _tiled_call(
+        functools.partial(_t1_kernel, base_kind=base_kind, nesterov=nesterov),
+        grid, in_specs, out_specs, out_shape, scal, operands, interpret,
+    )
+    outs = list(outs)
+    a = outs.pop(0)
+    bp = outs.pop(0)
+    mu2 = outs.pop(0) if base_kind != "none" else None
+    sq = outs.pop(0) if base_kind == "vadam" else None
+
+    # ---- inter-phase scalars: O(B) jnp work, no (p, n) traffic
+    ps = scal[2]
+    nu2 = None
+    if base_kind == "vadam":
+        b2, eps, c1, c2 = scal[4], scal[5], scal[6], scal[7]
+        nu2_f = b2 * nu.astype(jnp.float32) + (1.0 - b2) * sq
+        s_col = (ps / c1) / (jnp.sqrt(nu2_f / c2) + eps)
+        nu2 = nu2_f.astype(nu.dtype)
+    else:
+        s_col = jnp.full((bsz, 1), 1.0, jnp.float32) * ps
+
+    # ---- phase 2 (+3 for POGO)
+    src = g if base_kind == "none" else mu2
+    in_specs = [mat_spec, mat_spec]
+    operands = [x, src]
+    if base_kind == "trace" and nesterov:
+        in_specs.append(mat_spec)
+        operands.append(g)
+    in_specs += [acc_spec, acc_spec, col_spec]
+    operands += [a, bp, s_col]
+
+    if method == "pogo":
+        m, c = _tiled_call(
+            functools.partial(
+                _t2_pogo_kernel, base_kind=base_kind, nesterov=nesterov
+            ),
+            grid, in_specs, [mat_spec, acc_spec],
+            [
+                jax.ShapeDtypeStruct((bsz, p, n), jnp.float32),
+                jax.ShapeDtypeStruct((bsz, p, p), jnp.float32),
+            ],
+            scal, operands, interpret,
+        )
+        x2 = _tiled_call(
+            _phase3_kernel, grid, [mat_spec, acc_spec], mat_spec,
+            jax.ShapeDtypeStruct((bsz, p, n), x.dtype), scal, [m, c], interpret,
+        )
+        lam = scal[1]
+        c2m = c @ c
+        w = (1.0 + lam) ** 2 * c - 2.0 * lam * (1.0 + lam) * c2m \
+            + lam**2 * (c2m @ c)
+    else:  # landing
+        x2, w = _tiled_call(
+            functools.partial(
+                _t2_landing_kernel, base_kind=base_kind, nesterov=nesterov
+            ),
+            grid, in_specs, [mat_spec, acc_spec],
+            [
+                jax.ShapeDtypeStruct((bsz, p, n), x.dtype),
+                jax.ShapeDtypeStruct((bsz, p, p), jnp.float32),
+            ],
+            scal, operands, interpret,
+        )
+    res = w - _masked_eye(p, p if p_valid is None else p_valid)
+    dist = jnp.sqrt(jnp.sum(res * res, axis=(-2, -1)))[:, None]
+    return x2, mu2, nu2, dist

@@ -4,6 +4,11 @@ Single pass per matrix block: shares the (p, p) accumulators A = X X^T and
 B = X G^T between the Riemannian-gradient term 1/2 (A G - B X) and the
 normal term (A - I) X — the baseline Landing optimizer's whole per-step
 field in one HBM round trip.
+
+``landing_field_tiled`` covers the large-n regime by reusing the POGO
+three-phase pipeline's phase-1 (p, p) accumulation (``pogo_update.
+_phase1_kernel``) followed by a per-tile field phase, so big Landing
+groups stay on the kernel fast path instead of falling back to jnp.
 """
 
 from __future__ import annotations
@@ -12,6 +17,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
+
+from .pogo_update import _CompilerParams, _phase1_kernel
 
 Array = jax.Array
 
@@ -53,3 +60,60 @@ def landing_field(
         out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype),
         interpret=interpret,
     )(scal, x, g)
+
+
+def _field_tile_kernel(scal_ref, x_ref, g_ref, a_ref, b_ref, o_ref):
+    """Lambda(X) per tile from the phase-1 accumulators (grid: (B, NT))."""
+    lam = scal_ref[0]
+    x = x_ref[...].astype(jnp.float32)  # (1, p, tn)
+    g = g_ref[...].astype(jnp.float32)
+    dp = (((2,), (1,)), ((0,), (0,)))
+    a = a_ref[...]
+    r = 0.5 * (jax.lax.dot_general(a, g, dp, preferred_element_type=jnp.float32)
+               - jax.lax.dot_general(b_ref[...], x, dp,
+                                     preferred_element_type=jnp.float32))
+    normal = jax.lax.dot_general(a, x, dp, preferred_element_type=jnp.float32) - x
+    o_ref[...] = (r + lam * normal).astype(o_ref.dtype)
+
+
+def landing_field_tiled(
+    x: Array, g: Array, lam, *, tile_n: int = 512, interpret: bool = False
+) -> Array:
+    """Two-phase tiled landing field for large n. x, g: (B, p, n) with
+    n % tile_n == 0. HBM traffic: 2 reads + 1 write of (p, n) + tiny
+    (p, p) accumulators — same asymptotics as the whole-matrix kernel."""
+    bsz, p, n = x.shape
+    assert n % tile_n == 0, (n, tile_n)
+    nt = n // tile_n
+    # _phase1_kernel reads scal[0]? no — it ignores scalars; reuse layout.
+    scal = jnp.asarray([lam], jnp.float32)
+    mat_spec = pl.BlockSpec((1, p, tile_n), lambda i, t, s: (i, 0, t))
+    acc_spec = pl.BlockSpec((1, p, p), lambda i, t, s: (i, 0, 0))
+    a, b = pl.pallas_call(
+        _phase1_kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=(bsz, nt),
+            in_specs=[mat_spec, mat_spec],
+            out_specs=[acc_spec, acc_spec],
+        ),
+        out_shape=[jax.ShapeDtypeStruct((bsz, p, p), jnp.float32)] * 2,
+        compiler_params=_CompilerParams(
+            dimension_semantics=("parallel", "arbitrary")
+        ),
+        interpret=interpret,
+    )(scal, x, g)
+    return pl.pallas_call(
+        _field_tile_kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=(bsz, nt),
+            in_specs=[mat_spec, mat_spec, acc_spec, acc_spec],
+            out_specs=mat_spec,
+        ),
+        out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype),
+        compiler_params=_CompilerParams(
+            dimension_semantics=("parallel", "arbitrary")
+        ),
+        interpret=interpret,
+    )(scal, x, g, a, b)

@@ -5,10 +5,16 @@ Responsibilities:
   * pad ``p`` to a multiple of 8 (fp32 sublanes) and ``n`` to a multiple of
     128 (lanes) — exact for these updates (zero rows/cols are invariant);
   * pick a kernel variant from the VMEM budget: whole-matrix when the
-    working set fits, tiled three-phase otherwise, pure-jnp oracle for
+    working set fits, tiled multi-phase otherwise, pure-jnp oracle for
     unsupported cases (complex dtype, find_root mode);
+  * when several (block_b / tile_n) configs fit, the **autotuning
+    planner** (``autotune.py``) times each once per
+    ``(p, n, B, dtype, stage-set)`` key and caches the winner in-process
+    and in a JSON file, so trainer restarts and benchmarks reuse tuned
+    plans;
   * run ``interpret=True`` automatically off-TPU (this container is
-    CPU-only; the kernels are TPU-targeted and validated in interpret mode).
+    CPU-only; the kernels are TPU-targeted and validated in interpret
+    mode) and route the fused group step to its jnp oracle off-TPU.
 """
 
 from __future__ import annotations
@@ -17,8 +23,11 @@ import functools
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
+from . import autotune
 from . import flash_attention as _fa
+from . import fused_step as _fs
 from . import landing_field as _lf
 from . import newton_schulz as _ns
 from . import pogo_update as _pu
@@ -27,8 +36,47 @@ from . import ref
 # Conservative VMEM plan: ~16 MiB/core on v5e, keep the working set under
 # ~12 MiB to leave room for semaphores/double-buffering.
 VMEM_BUDGET_BYTES = 12 * 1024 * 1024
-# whole-kernel resident arrays: x, g, m (implicit), out + (p,p) accums
-_WHOLE_ARRAYS = 4
+
+# Per-matrix simultaneously-live fp32 intermediates of each whole-matrix
+# kernel, counted from the actual kernel dataflow — conservatively
+# assuming Mosaic reuses no buffers. (The old ``_WHOLE_ARRAYS = 4``
+# undercounted the POGO kernel, whose live set is x, g, ag, bx, m, cm,
+# out plus the (p, p) a, b, c — large (p, n) shapes could pick a block_b
+# whose true working set blew the budget.) Keys: ``<method>`` for the
+# single-purpose kernels, ``fused_<method>`` for the fused group step
+# (adds the telemetry (p, p) chain), ``+<base>`` suffix adds the
+# in-kernel base-stage buffers.
+_WHOLE_COUNTS = {
+    # method: (count of (p, n) fp32 buffers, count of (p, p) fp32 buffers)
+    "pogo": (7, 3),        # x g ag bx m cm out | a b c
+    "landing": (8, 2),     # x g ag bx r ax normal out | a b
+    "ns": (4, 1),          # x y yyy out | yy
+    "fused_pogo": (8, 6),  # + geff | + cc ccc w
+    "fused_landing": (9, 3),
+}
+_BASE_EXTRA_PN = {"none": 0, "trace": 3, "vadam": 3}  # mu_in, mu', comb/scale
+
+
+def _split_stages(stages: str) -> tuple[str, str]:
+    method, _, base = stages.partition("+")
+    return method, (base or "none")
+
+
+def whole_vmem_bytes(p_pad: int, n_pad: int, stages: str = "pogo") -> int:
+    """Per-matrix VMEM working set of a whole-matrix kernel variant."""
+    method, base = _split_stages(stages)
+    pn, pp = _WHOLE_COUNTS[method]
+    pn += _BASE_EXTRA_PN[base]
+    return (pn * p_pad * n_pad + pp * p_pad * p_pad) * 4
+
+
+def tiled_vmem_bytes(p_pad: int, tile_n: int, stages: str = "pogo") -> int:
+    """Per-matrix VMEM working set of the worst tiled phase (phase 2:
+    x, src[, g] and the m/out tile + a, bp, c/w accumulators)."""
+    _, base = _split_stages(stages)
+    pn = 4 + (2 if base != "none" else 0)
+    pp = 3
+    return (pn * p_pad * tile_n + pp * p_pad * p_pad) * 4
 
 
 def _interpret_default() -> bool:
@@ -47,19 +95,67 @@ def _pad_pn(x, p_pad, n_pad):
     return jnp.pad(x, cfg)
 
 
-def _plan(p: int, n: int):
-    """Returns ("whole", block_b) | ("tiled", tile_n)."""
+def _pad_b(x, b_pad):
+    if x.shape[0] == b_pad:
+        return x
+    return jnp.pad(x, [(0, b_pad - x.shape[0])] + [(0, 0)] * (x.ndim - 1))
+
+
+def plan_candidates(p: int, n: int, bsz: int, stages: str) -> list[dict]:
+    """VMEM-feasible kernel configs, heuristic default first."""
     p_pad = _round_up(p, 8)
     n_pad = _round_up(n, 128)
-    per_matrix = p_pad * n_pad * 4 * _WHOLE_ARRAYS + p_pad * p_pad * 4 * 3
+    per_matrix = whole_vmem_bytes(p_pad, n_pad, stages)
     if per_matrix <= VMEM_BUDGET_BYTES:
-        block_b = max(1, min(1024, VMEM_BUDGET_BYTES // per_matrix))
-        return ("whole", block_b, p_pad, n_pad)
-    # tiled: resident = 2 tiles (x, g) + m tile + out tile + 3 (p,p) accums
-    tile_n = 512
-    while tile_n > 128 and (4 * p_pad * tile_n * 4 + 3 * p_pad * p_pad * 4) > VMEM_BUDGET_BYTES:
-        tile_n //= 2
-    return ("tiled", tile_n, p_pad, n_pad)
+        bmax = max(1, min(1024, VMEM_BUDGET_BYTES // per_matrix, bsz))
+        blocks = sorted({bmax, max(1, bmax // 4), max(1, bmax // 16)},
+                        reverse=True)
+        return [{"kind": "whole", "block_b": int(b), "tile_n": 0}
+                for b in blocks]
+    cands = [
+        {"kind": "tiled", "block_b": 0, "tile_n": tn}
+        for tn in (1024, 512, 256, 128)
+        if tn <= n_pad and tiled_vmem_bytes(p_pad, tn, stages) <= VMEM_BUDGET_BYTES
+    ]
+    if not cands:  # degenerate huge-p shapes: smallest tile, best effort
+        cands = [{"kind": "tiled", "block_b": 0, "tile_n": 128}]
+    return cands
+
+
+def _plan(p: int, n: int, bsz: int = 1, dtype=jnp.float32,
+          stages: str = "pogo", interpret: bool = True,
+          time_candidate=None):
+    """Returns ("whole", block_b, p_pad, n_pad) | ("tiled", tile_n, ...).
+
+    Consults the autotune cache; with several feasible candidates and
+    autotuning enabled (TPU backend, or ``REPRO_AUTOTUNE=1``), times each
+    candidate once per key and persists the winner (see autotune.py).
+    """
+    p_pad = _round_up(p, 8)
+    n_pad = _round_up(n, 128)
+    candidates = plan_candidates(p, n, bsz, stages)
+    key = autotune.plan_key(
+        p, n, bsz, str(jnp.dtype(dtype)), stages,
+        backend=jax.default_backend(), interpret=interpret,
+    )
+    enabled = time_candidate is not None and autotune.autotune_enabled(interpret)
+    chosen = autotune.choose(
+        key, candidates, time_candidate or (lambda c: 0.0), enabled=enabled
+    )
+    if chosen["kind"] == "whole":
+        return ("whole", int(chosen["block_b"]), p_pad, n_pad)
+    return ("tiled", int(chosen["tile_n"]), p_pad, n_pad)
+
+
+def _make_timer(build):
+    """Adapt a ``build(cand) -> (jitted_fn, operands, n_matrices)`` factory
+    into the per-matrix-seconds timer the autotuner expects."""
+
+    def timer(cand):
+        fn, args, n_mats = build(cand)
+        return autotune._bench(fn, *args) / max(n_mats, 1)
+
+    return timer
 
 
 def _flatten(x):
@@ -68,6 +164,29 @@ def _flatten(x):
     for d in lead:
         bsz *= d
     return x.reshape(bsz, p, n), tuple(lead)
+
+
+# --------------------------------------------------------------- pogo update
+
+
+def _pogo_timer(p_pad, n_pad, dtype, interpret):
+    # Timing operands are NUMPY: _plan runs at trace time, and a jnp array
+    # created inside the outer trace would be a tracer — the candidate
+    # would be staged, not executed (autotune._bench guards this).
+    def build(cand):
+        if cand["kind"] == "whole":
+            bb = cand["block_b"]
+            x = np.zeros((bb, p_pad, n_pad), dtype)
+            fn = jax.jit(lambda x, g: _pu.pogo_update_whole(
+                x, g, 0.1, 0.5, block_b=bb, interpret=interpret))
+            return fn, (x, x), bb
+        tn = cand["tile_n"]
+        x = np.zeros((1, p_pad, _round_up(n_pad, tn)), dtype)
+        fn = jax.jit(lambda x, g: _pu.pogo_update_tiled(
+            x, g, 0.1, 0.5, tile_n=tn, interpret=interpret))
+        return fn, (x, x), 1
+
+    return _make_timer(build)
 
 
 @functools.partial(jax.jit, static_argnames=("find_root", "interpret"))
@@ -88,9 +207,10 @@ def _pogo_dispatch(x, g, eta, lam, *, find_root, interpret):
     xb, lead = _flatten(x)
     gb, _ = _flatten(g)
     bsz, p, n = xb.shape
-    kind, arg, p_pad, n_pad = _plan(p, n)
-    xp = _pad_pn(xb, p_pad, n_pad)
-    gp = _pad_pn(gb, p_pad, n_pad)
+    kind, arg, p_pad, n_pad = _plan(
+        p, n, bsz, x.dtype, "pogo", interpret,
+        _pogo_timer(_round_up(p, 8), _round_up(n, 128), x.dtype, interpret),
+    )
     if kind == "whole":
         # Never let the block exceed the real batch: grouped driver calls
         # arrive as one (B, p, n) stack per constraint group, and a B
@@ -98,9 +218,8 @@ def _pogo_dispatch(x, g, eta, lam, *, find_root, interpret):
         # to it (a single matrix paying for a full block of wasted rows).
         block_b = max(1, min(arg, bsz))
         b_pad = _round_up(bsz, block_b)
-        if b_pad != bsz:
-            xp = jnp.pad(xp, [(0, b_pad - bsz), (0, 0), (0, 0)])
-            gp = jnp.pad(gp, [(0, b_pad - bsz), (0, 0), (0, 0)])
+        xp = _pad_b(_pad_pn(xb, p_pad, n_pad), b_pad)
+        gp = _pad_b(_pad_pn(gb, p_pad, n_pad), b_pad)
         out = _pu.pogo_update_whole(xp, gp, eta, lam, block_b=block_b, interpret=interpret)
         out = out[:bsz]
     else:
@@ -122,22 +241,51 @@ def pogo_update(x, g, eta, lam=0.5, find_root: bool = False, interpret: bool | N
     return _pogo_dispatch(x, g, eta, lam_arr, find_root=find_root, interpret=interpret)
 
 
+# ------------------------------------------------------------- landing field
+
+
+def _landing_timer(p_pad, n_pad, dtype, interpret):
+    def build(cand):  # numpy operands: see _pogo_timer
+        if cand["kind"] == "whole":
+            bb = cand["block_b"]
+            x = np.zeros((bb, p_pad, n_pad), dtype)
+            fn = jax.jit(lambda x, g: _lf.landing_field(
+                x, g, 1.0, block_b=bb, interpret=interpret))
+            return fn, (x, x), bb
+        tn = cand["tile_n"]
+        x = np.zeros((1, p_pad, _round_up(n_pad, tn)), dtype)
+        fn = jax.jit(lambda x, g: _lf.landing_field_tiled(
+            x, g, 1.0, tile_n=tn, interpret=interpret))
+        return fn, (x, x), 1
+
+    return _make_timer(build)
+
+
 @functools.partial(jax.jit, static_argnames=("interpret",))
 def _landing_dispatch(x, g, lam, *, interpret):
     xb, lead = _flatten(x)
     gb, _ = _flatten(g)
     bsz, p, n = xb.shape
-    kind, arg, p_pad, n_pad = _plan(p, n)
-    if kind != "whole":
-        return ref.landing_field_ref(x, g, lam)
-    block_b = max(1, min(arg, bsz))
-    xp = _pad_pn(xb, p_pad, n_pad)
-    gp = _pad_pn(gb, p_pad, n_pad)
-    b_pad = _round_up(bsz, block_b)
-    if b_pad != bsz:
-        xp = jnp.pad(xp, [(0, b_pad - bsz), (0, 0), (0, 0)])
-        gp = jnp.pad(gp, [(0, b_pad - bsz), (0, 0), (0, 0)])
-    out = _lf.landing_field(xp, gp, lam, block_b=block_b, interpret=interpret)
+    kind, arg, p_pad, n_pad = _plan(
+        p, n, bsz, x.dtype, "landing", interpret,
+        _landing_timer(_round_up(p, 8), _round_up(n, 128), x.dtype, interpret),
+    )
+    if kind == "whole":
+        block_b = max(1, min(arg, bsz))
+        xp = _pad_pn(xb, p_pad, n_pad)
+        gp = _pad_pn(gb, p_pad, n_pad)
+        b_pad = _round_up(bsz, block_b)
+        xp = _pad_b(xp, b_pad)
+        gp = _pad_b(gp, b_pad)
+        out = _lf.landing_field(xp, gp, lam, block_b=block_b, interpret=interpret)
+    else:
+        # Large-n Landing groups stay on the kernel fast path: tiled
+        # two-phase field reusing the POGO phase-1 accumulation pipeline.
+        tile_n = arg
+        n_pad = _round_up(n_pad, tile_n)
+        xp = _pad_pn(xb, p_pad, n_pad)
+        gp = _pad_pn(gb, p_pad, n_pad)
+        out = _lf.landing_field_tiled(xp, gp, lam, tile_n=tile_n, interpret=interpret)
     return out[:bsz, :p, :n].reshape(*lead, p, n)
 
 
@@ -150,18 +298,178 @@ def landing_field(x, g, lam=1.0, interpret: bool | None = None):
     return _landing_dispatch(x, g, jnp.asarray(lam, jnp.float32), interpret=interpret)
 
 
+# ----------------------------------------------------------- fused group step
+
+
+def _fused_timer(p_pad, n_pad, dtype, method, base_kind, nesterov, interpret):
+    # Representative scalars for the timing run (b2/eps/c1/c2 nonzero so
+    # the VAdam stage divides by sane values, not denormals). Numpy, like
+    # every timing operand: see _pogo_timer.
+    scal = np.asarray(
+        [0.1, 0.5, 1.0, 0.9, 0.999, 1e-8, 0.5, 0.5], np.float32
+    )
+
+    def build(cand):
+        def ops_for(bsz, n_eff):
+            x = np.zeros((bsz, p_pad, n_eff), dtype)
+            mu = x if base_kind != "none" else None
+            nu = np.zeros((bsz, 1), np.float32) if base_kind == "vadam" else None
+            return x, x, mu, nu
+
+        if cand["kind"] == "whole":
+            bb = cand["block_b"]
+            x, g, mu, nu = ops_for(bb, n_pad)
+            fn = jax.jit(lambda *a: _fs.fused_step_whole(
+                *a, scal, method=method, base_kind=base_kind,
+                nesterov=nesterov, block_b=bb, interpret=interpret))
+            return fn, (x, g, mu, nu), bb
+        tn = cand["tile_n"]
+        x, g, mu, nu = ops_for(1, _round_up(n_pad, tn))
+        fn = jax.jit(lambda *a: _fs.fused_step_tiled(
+            *a, scal, method=method, base_kind=base_kind,
+            nesterov=nesterov, tile_n=tn, interpret=interpret))
+        return fn, (x, g, mu, nu), 1
+
+    return _make_timer(build)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("method", "base_kind", "hyper", "post_scale", "interpret"),
+)
+def _fused_dispatch(x, g, mu, nu, eta, lam, count, *, method, base_kind,
+                    hyper, post_scale, interpret):
+    nesterov = False
+    h = [jnp.zeros((), jnp.float32)] * 5
+    if base_kind == "trace":
+        decay, nesterov = hyper
+        h[0] = jnp.asarray(decay, jnp.float32)
+    elif base_kind == "vadam":
+        b1, b2, eps = hyper
+        t = (count + 1).astype(jnp.float32)
+        h = [jnp.asarray(b1, jnp.float32), jnp.asarray(b2, jnp.float32),
+             jnp.asarray(eps, jnp.float32), 1.0 - b1**t, 1.0 - b2**t]
+    scal = jnp.stack([eta, lam, jnp.asarray(post_scale, jnp.float32), *h])
+
+    bsz, p, n = x.shape
+    stages = f"fused_{method}+{base_kind}"
+    kind, arg, p_pad, n_pad = _plan(
+        p, n, bsz, x.dtype, stages, interpret,
+        _fused_timer(_round_up(p, 8), _round_up(n, 128), x.dtype, method,
+                     base_kind, nesterov, interpret),
+    )
+    nu2d = nu.reshape(bsz, 1) if nu is not None else None
+    if kind == "tiled":
+        n_pad = _round_up(n_pad, arg)
+    xp = _pad_pn(x, p_pad, n_pad)
+    gp = _pad_pn(g, p_pad, n_pad)
+    mup = _pad_pn(mu, p_pad, n_pad) if mu is not None else None
+    if kind == "whole":
+        block_b = max(1, min(arg, bsz))
+        b_pad = _round_up(bsz, block_b)
+        xp, gp = _pad_b(xp, b_pad), _pad_b(gp, b_pad)
+        mup = _pad_b(mup, b_pad) if mup is not None else None
+        nup = _pad_b(nu2d, b_pad) if nu2d is not None else None
+        x2, mu2, nu2, dist = _fs.fused_step_whole(
+            xp, gp, mup, nup, scal, method=method, base_kind=base_kind,
+            nesterov=nesterov, block_b=block_b, interpret=interpret,
+            p_valid=p,
+        )
+    else:
+        x2, mu2, nu2, dist = _fs.fused_step_tiled(
+            xp, gp, mup, nu2d, scal, method=method, base_kind=base_kind,
+            nesterov=nesterov, tile_n=arg, interpret=interpret,
+            p_valid=p,
+        )
+    x2 = x2[:bsz, :p, :n]
+    mu2 = mu2[:bsz, :p, :n] if mu2 is not None else None
+    nu2 = nu2[:bsz, 0].astype(nu.dtype) if nu2 is not None else None
+    dist = dist[:bsz, 0]
+    return x2, mu2, nu2, dist
+
+
+def fused_group_step(
+    x, g, eta, *,
+    method: str,
+    lam,
+    base_kind: str = "none",
+    hyper: tuple = (),
+    post_scale: float = 1.0,
+    mu=None,
+    nu=None,
+    count=None,
+    interpret: bool | None = None,
+    use_pallas: bool | None = None,
+):
+    """Single-pass fused group step on one stacked group ``(B, p, n)``.
+
+    One HBM round trip: in-kernel linear base optimizer (``none`` |
+    ``trace`` | ``vadam`` — layout contract in ``optim/fused.py``), the
+    ``method`` (``"pogo"`` | ``"landing"``) direction + leap + land, and
+    per-matrix feasibility telemetry derived from the VMEM-resident
+    (p, p) accumulators. Returns ``(x_next, mu', nu', dist)`` — moments
+    ``None`` where the base has no such slot, ``dist`` a ``(B,)`` fp32
+    array of post-update ``||X' X'^H - I||_F``.
+
+    Off-TPU (``use_pallas=None`` default) this routes to the jnp oracle
+    (one XLA-fused computation with the same algebraic telemetry); pass
+    ``use_pallas=True`` (+ ``interpret=True``) to exercise the kernels
+    anywhere. Real dtypes only — the caller gates complex groups to the
+    unfused path.
+    """
+    if jnp.issubdtype(x.dtype, jnp.complexfloating):
+        raise ValueError("fused_group_step is real-only (caller must gate)")
+    if interpret is None:
+        interpret = _interpret_default()
+    if use_pallas is None:
+        use_pallas = jax.default_backend() == "tpu"
+    eta = jnp.asarray(eta, jnp.float32)
+    lam = jnp.asarray(lam, jnp.float32)
+    if not use_pallas:
+        return ref.fused_group_step_ref(
+            x, g, eta, method=method, lam=lam, base_kind=base_kind,
+            hyper=hyper, post_scale=post_scale, mu=mu, nu=nu, count=count,
+        )
+    return _fused_dispatch(
+        x, g, mu, nu, eta, lam, count, method=method, base_kind=base_kind,
+        hyper=tuple(hyper), post_scale=float(post_scale), interpret=interpret,
+    )
+
+
+# -------------------------------------------------------------- newton-schulz
+
+
+def _ns_timer(p_pad, n_pad, dtype, iters, interpret):
+    def build(cand):  # numpy operands: see _pogo_timer
+        if cand["kind"] != "whole":
+            # Newton-Schulz has no tiled kernel — the dispatcher falls back
+            # to the jnp reference for non-whole plans, so time that.
+            x = np.zeros((1, p_pad, n_pad), dtype)
+            fn = jax.jit(lambda x: ref.newton_schulz_ref(x, iters))
+            return fn, (x,), 1
+        bb = cand["block_b"]
+        x = np.zeros((bb, p_pad, n_pad), dtype)
+        fn = jax.jit(lambda x: _ns.newton_schulz(
+            x, iters=iters, block_b=bb, interpret=interpret))
+        return fn, (x,), bb
+
+    return _make_timer(build)
+
+
 @functools.partial(jax.jit, static_argnames=("iters", "interpret"))
 def _ns_dispatch(x, *, iters, interpret):
     xb, lead = _flatten(x)
     bsz, p, n = xb.shape
-    kind, arg, p_pad, n_pad = _plan(p, n)
+    kind, arg, p_pad, n_pad = _plan(
+        p, n, bsz, x.dtype, "ns", interpret,
+        _ns_timer(_round_up(p, 8), _round_up(n, 128), x.dtype, iters, interpret),
+    )
     if kind != "whole":
         return ref.newton_schulz_ref(x, iters)
     block_b = max(1, min(arg, bsz))
     xp = _pad_pn(xb, p_pad, n_pad)
     b_pad = _round_up(bsz, block_b)
-    if b_pad != bsz:
-        xp = jnp.pad(xp, [(0, b_pad - bsz), (0, 0), (0, 0)])
+    xp = _pad_b(xp, b_pad)
     out = _ns.newton_schulz(xp, iters=iters, block_b=block_b, interpret=interpret)
     return out[:bsz, :p, :n].reshape(*lead, p, n)
 
@@ -173,6 +481,9 @@ def newton_schulz(x, iters: int = 12, interpret: bool | None = None):
     if jnp.issubdtype(x.dtype, jnp.complexfloating):
         return ref.newton_schulz_ref(x, iters)
     return _ns_dispatch(x, iters=iters, interpret=interpret)
+
+
+# ------------------------------------------------------------ flash attention
 
 
 def flash_attention(

@@ -60,6 +60,97 @@ def newton_schulz_ref(x: Array, iters: int = 12) -> Array:
     return y.astype(x.dtype)
 
 
+def pogo_gram_identity_ref(c: Array, lam) -> Array:
+    """``X' X'^H`` from the land-stage gram ``C = M M^H`` — no re-read of X'.
+
+    ``X' = ((1+lam) I - lam C) M`` gives
+    ``X' X'^H = (1+lam)^2 C - 2 lam (1+lam) C^2 + lam^2 C^3``:
+    three tiny (p, p) products instead of a full (p, n) gram pass. This is
+    the in-VMEM telemetry identity of the fused group step.
+    """
+    lam = jnp.asarray(lam, c.dtype)
+    c2 = c @ c
+    c3 = c2 @ c
+    return (1.0 + lam) ** 2 * c - 2.0 * lam * (1.0 + lam) * c2 + lam**2 * c3
+
+
+def _residual_norm(w: Array) -> Array:
+    p = w.shape[-1]
+    r = w - jnp.eye(p, dtype=w.dtype)
+    return jnp.sqrt(jnp.sum(jnp.abs(r) ** 2, axis=(-2, -1)))
+
+
+def fused_group_step_ref(
+    x: Array,
+    g: Array,
+    eta,
+    *,
+    method: str,
+    lam,
+    base_kind: str = "none",
+    hyper: tuple = (),
+    post_scale: float = 1.0,
+    mu: Array | None = None,
+    nu: Array | None = None,
+    count: Array | None = None,
+):
+    """Oracle for the single-pass fused group step (fp32 accumulation).
+
+    One logical pass over the ``(B, p, n)`` group: linear base optimizer
+    (``none`` | ``trace`` | ``vadam``) applied to the raw gradient, the
+    POGO / Landing direction + leap + land, and the per-matrix feasibility
+    distance ``||X' X'^H - I||_F`` — for POGO derived algebraically from
+    the land-stage gram (:func:`pogo_gram_identity_ref`), never from a
+    re-read of X'. Returns ``(x_next_f32, mu', nu', dist)`` with the
+    moment buffers in their storage dtypes (``None`` where the base has
+    no such slot).
+    """
+    xf = x.astype(jnp.float32)
+    gf = g.astype(jnp.float32)
+    mu_out = nu_out = None
+    if base_kind == "none":
+        geff = gf
+    elif base_kind == "trace":
+        decay, nesterov = hyper
+        mu2 = decay * mu.astype(jnp.float32) + gf
+        geff = decay * mu2 + gf if nesterov else mu2
+        mu_out = mu2.astype(mu.dtype)
+    elif base_kind == "vadam":
+        b1, b2, eps = hyper
+        t = (count + 1).astype(jnp.float32)
+        mu2 = b1 * mu.astype(jnp.float32) + (1.0 - b1) * gf
+        sq = jnp.sum(gf * gf, axis=(-2, -1))
+        nu2 = b2 * nu.astype(jnp.float32) + (1.0 - b2) * sq
+        c1 = 1.0 - b1**t
+        c2 = 1.0 - b2**t
+        denom = jnp.sqrt(nu2 / c2) + eps
+        geff = (mu2 / c1) / denom[..., None, None]
+        mu_out = mu2.astype(mu.dtype)
+        nu_out = nu2.astype(nu.dtype)
+    else:
+        raise ValueError(f"unknown base kind {base_kind!r}")
+    if post_scale != 1.0:
+        geff = post_scale * geff
+
+    eta = jnp.asarray(eta, jnp.float32)
+    lam = jnp.asarray(lam, jnp.float32)
+    a = xf @ _bt(xf)
+    b = xf @ _bt(geff)
+    r = 0.5 * (a @ geff - b @ xf)
+    if method == "pogo":
+        m = xf - eta * r
+        c = m @ _bt(m)
+        x2 = (1.0 + lam) * m - lam * (c @ m)
+        dist = _residual_norm(pogo_gram_identity_ref(c, lam))
+    elif method == "landing":
+        normal = a @ xf - xf  # (A - I) X
+        x2 = xf - eta * (r + lam * normal)
+        dist = _residual_norm(x2 @ _bt(x2))
+    else:
+        raise ValueError(f"unknown fused method {method!r}")
+    return x2, mu_out, nu_out, dist.astype(jnp.float32)
+
+
 def manifold_distance_ref(x: Array) -> Array:
     """||X X^T - I||_F per matrix (telemetry kernel oracle)."""
     xf = x.astype(jnp.float32)

@@ -2,6 +2,7 @@
 
 from .alias import (adafactor, adam, adamw, muon, scale_by_adafactor, scale_by_adam, scale_by_vadam, sgd, trace, vadam)
 from .clip import clip_by_global_norm, clip_per_matrix
+from .fused import FusedBase, resolve_fused_base
 from .partition import partition
 from .schedule import constant, linear, warmup_cosine
 from .transform import (
@@ -34,6 +35,8 @@ __all__ = [
     "scale_by_vadam",
     "clip_by_global_norm",
     "clip_per_matrix",
+    "FusedBase",
+    "resolve_fused_base",
     "partition",
     "constant",
     "linear",

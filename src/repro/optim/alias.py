@@ -45,7 +45,7 @@ def trace(decay: float, nesterov: bool = False) -> GradientTransformation:
             out = new_m
         return out, TraceState(momentum=new_m)
 
-    return GradientTransformation(init, update)
+    return GradientTransformation(init, update, tag=("trace", decay, nesterov))
 
 
 class ScaleByAdamState(NamedTuple):
@@ -131,7 +131,7 @@ def scale_by_vadam(b1=0.9, b2=0.999, eps=1e-8) -> GradientTransformation:
         out = jax.tree.map(norm, mu, nu)
         return out, ScaleByVAdamState(count=count, mu=mu, nu=nu)
 
-    return GradientTransformation(init, update)
+    return GradientTransformation(init, update, tag=("vadam", b1, b2, eps))
 
 
 class ScaleByAdafactorState(NamedTuple):

@@ -22,6 +22,11 @@ PyTree = Any
 class GradientTransformation:
     init: Callable[[PyTree], PyTree]
     update: Callable[[PyTree, PyTree, Optional[PyTree]], tuple[PyTree, PyTree]]
+    # Structural tag for transforms whose update rule the fused group-step
+    # kernel can replay in-kernel (see optim/fused.py for the contract).
+    # None means "opaque": the transform still works everywhere, it just
+    # cannot ride the fused path.
+    tag: Any = None
 
 
 class EmptyState(NamedTuple):
@@ -35,7 +40,7 @@ def identity() -> GradientTransformation:
     def update(updates, state, params=None):
         return updates, state
 
-    return GradientTransformation(init, update)
+    return GradientTransformation(init, update, tag=("identity",))
 
 
 def chain(*transforms: GradientTransformation) -> GradientTransformation:
@@ -49,7 +54,7 @@ def chain(*transforms: GradientTransformation) -> GradientTransformation:
             new_state.append(s)
         return updates, tuple(new_state)
 
-    return GradientTransformation(init, update)
+    return GradientTransformation(init, update, tag=("chain", tuple(transforms)))
 
 
 def apply_updates(params: PyTree, updates: PyTree) -> PyTree:
@@ -63,7 +68,7 @@ def scale(factor: float) -> GradientTransformation:
     def update(updates, state, params=None):
         return jax.tree.map(lambda u: factor * u, updates), state
 
-    return GradientTransformation(init, update)
+    return GradientTransformation(init, update, tag=("scale", factor))
 
 
 class ScaleByScheduleState(NamedTuple):

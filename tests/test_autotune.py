@@ -1,0 +1,203 @@
+"""Autotuned kernel planner: VMEM accounting, candidate choice, cache.
+
+Satellite coverage for ISSUE 3: the corrected whole-kernel VMEM
+accounting (the old ``_WHOLE_ARRAYS = 4`` undercounted the live fp32
+intermediates), plan-fits assertions, and the autotune cache contract —
+a second planner invocation for the same key performs no timing runs,
+and the JSON cache file round-trips across processes (simulated with
+fresh ``PlanCache`` instances on the same path).
+"""
+
+import json
+
+import jax.numpy as jnp
+import pytest
+
+from repro.kernels import autotune, ops
+
+
+@pytest.fixture
+def tmp_cache(tmp_path):
+    cache = autotune.PlanCache(path=str(tmp_path / "autotune.json"))
+    old = autotune._CACHE
+    autotune.set_cache(cache)
+    yield cache
+    autotune.set_cache(old)
+
+
+# ------------------------------------------------------- VMEM accounting fix
+
+
+@pytest.mark.parametrize("stages", [
+    "pogo", "landing", "ns",
+    "fused_pogo+none", "fused_pogo+trace", "fused_pogo+vadam",
+    "fused_landing+none", "fused_landing+vadam",
+])
+@pytest.mark.parametrize("p,n,bsz", [
+    (3, 3, 1), (16, 256, 2048), (64, 1024, 16), (256, 2048, 4),
+    (128, 4096, 8), (8, 65536, 2),
+])
+def test_chosen_plan_fits_vmem_budget(stages, p, n, bsz, tmp_cache):
+    """Whatever the planner picks, the per-matrix working set computed from
+    the actual kernel dataflow times the block size must fit the budget."""
+    kind, arg, p_pad, n_pad = ops._plan(p, n, bsz, jnp.float32, stages, True)
+    if kind == "whole":
+        need = ops.whole_vmem_bytes(p_pad, n_pad, stages) * arg
+        assert need <= ops.VMEM_BUDGET_BYTES, (stages, p, n, arg, need)
+    else:
+        need = ops.tiled_vmem_bytes(p_pad, arg, stages)
+        # degenerate huge-p shapes keep a best-effort 128 tile
+        assert need <= ops.VMEM_BUDGET_BYTES or arg == 128
+
+
+def test_old_accounting_bug_shape_now_tiles(tmp_cache):
+    """(256, 2048) fp32: the old ``_WHOLE_ARRAYS = 4`` estimate (~9.2 MiB)
+    fit the 12 MiB budget, but the kernel's true live set (x, g, ag, bx,
+    m, cm, out + 3x(p,p)) is ~15.5 MiB — the planner must tile now."""
+    p, n = 256, 2048
+    p_pad, n_pad = p, n
+    old_estimate = p_pad * n_pad * 4 * 4 + p_pad * p_pad * 4 * 3
+    assert old_estimate <= ops.VMEM_BUDGET_BYTES  # the bug's premise
+    assert ops.whole_vmem_bytes(p_pad, n_pad, "pogo") > ops.VMEM_BUDGET_BYTES
+    kind, *_ = ops._plan(p, n, 4, jnp.float32, "pogo", True)
+    assert kind == "tiled"
+
+
+def test_ns_timer_handles_tiled_candidates():
+    """Newton-Schulz has no tiled kernel; its autotune timer must time the
+    jnp-reference fallback instead of crashing on block_b=0 candidates
+    (p=256, n=8192 makes every whole NS plan blow the VMEM budget)."""
+    assert ops.whole_vmem_bytes(256, 8192, "ns") > ops.VMEM_BUDGET_BYTES
+    timer = ops._ns_timer(8, 128, jnp.float32, 2, True)
+    t = timer({"kind": "tiled", "block_b": 0, "tile_n": 512})
+    assert t > 0.0
+
+
+def test_candidates_heuristic_default_first():
+    cands = ops.plan_candidates(16, 256, 2048, "pogo")
+    assert cands[0]["kind"] == "whole"
+    assert cands[0]["block_b"] == max(c["block_b"] for c in cands)
+    # block never exceeds the real batch
+    assert ops.plan_candidates(16, 256, 3, "pogo")[0]["block_b"] <= 3
+
+
+# ------------------------------------------------------------ autotune cache
+
+
+def _cands():
+    return [
+        {"kind": "whole", "block_b": 8, "tile_n": 0},
+        {"kind": "whole", "block_b": 2, "tile_n": 0},
+    ]
+
+
+def test_second_invocation_performs_no_timing_runs(tmp_cache):
+    calls = []
+
+    def timer(cand):
+        calls.append(cand["block_b"])
+        return 0.1 if cand["block_b"] == 8 else 0.01
+
+    plan1 = autotune.choose("k1", _cands(), timer, enabled=True)
+    assert plan1["block_b"] == 2 and plan1["source"] == "autotune"
+    n_first = len(calls)
+    assert n_first > 0
+    plan2 = autotune.choose("k1", _cands(), timer, enabled=True)
+    assert len(calls) == n_first, "second invocation must not re-time"
+    assert plan2["block_b"] == 2
+
+
+def test_cache_file_round_trips_across_processes(tmp_cache):
+    def timer(cand):
+        return 0.01 if cand["block_b"] == 2 else 0.1
+
+    autotune.choose("k2", _cands(), timer, enabled=True)
+    # fresh cache object on the same path = a new process
+    fresh = autotune.PlanCache(path=tmp_cache.path)
+    hit = fresh.lookup("k2")
+    assert hit is not None and hit["block_b"] == 2
+    # and choose() on the fresh instance performs no timing
+    plan = autotune.choose(
+        "k2", _cands(),
+        lambda c: pytest.fail("timed despite disk cache"),
+        cache=fresh, enabled=True,
+    )
+    assert plan["block_b"] == 2
+    payload = json.load(open(tmp_cache.path))
+    assert payload["version"] == autotune.PlanCache.VERSION
+    assert "k2" in payload["plans"]
+
+
+def test_stale_cached_plan_is_discarded(tmp_cache):
+    tmp_cache.store("k3", {"kind": "whole", "block_b": 999, "tile_n": 0})
+    plan = autotune.choose("k3", _cands(), lambda c: 0.01, enabled=True)
+    assert plan["block_b"] in (8, 2)
+
+
+def test_disabled_autotune_takes_heuristic_without_timing(tmp_cache):
+    plan = autotune.choose(
+        "k4", _cands(), lambda c: pytest.fail("should not time"),
+        enabled=False,
+    )
+    assert plan["block_b"] == 8 and plan["source"] == "heuristic"
+    # heuristic choices are NOT persisted to disk
+    fresh = autotune.PlanCache(path=tmp_cache.path)
+    assert fresh.lookup("k4") is None
+
+
+def test_heuristic_hit_is_retimed_once_enabled(tmp_cache):
+    """A heuristic (untimed) cached plan must not block later autotuning
+    in the same process."""
+    plan = autotune.choose("k5", _cands(), lambda c: 0.0, enabled=False)
+    assert plan["source"] == "heuristic" and plan["block_b"] == 8
+    plan = autotune.choose(
+        "k5", _cands(),
+        lambda c: 0.01 if c["block_b"] == 2 else 0.1,
+        enabled=True,
+    )
+    assert plan["source"] == "autotune" and plan["block_b"] == 2
+
+
+def test_failing_candidates_are_skipped(tmp_cache):
+    """Timing is best-effort: an uncompilable candidate must not abort the
+    step trace; if every candidate fails, the heuristic default wins."""
+
+    def flaky(cand):
+        if cand["block_b"] == 8:
+            raise RuntimeError("mosaic lowering failed")
+        return 0.01
+
+    plan = autotune.choose("k6", _cands(), flaky, enabled=True)
+    assert plan["block_b"] == 2 and plan["source"] == "autotune"
+
+    def always_fails(cand):
+        raise RuntimeError("no candidate works")
+
+    plan = autotune.choose("k7", _cands(), always_fails, enabled=True)
+    assert plan["block_b"] == 8 and plan["source"] == "heuristic"
+
+
+def test_corrupt_cache_file_is_tolerated(tmp_path):
+    path = tmp_path / "autotune.json"
+    path.write_text("{not json")
+    cache = autotune.PlanCache(path=str(path))
+    assert cache.lookup("anything") is None
+    cache.store("k", {"kind": "whole", "block_b": 1, "tile_n": 0})
+    assert autotune.PlanCache(path=str(path)).lookup("k") is not None
+
+
+def test_plan_end_to_end_uses_cache(tmp_cache, monkeypatch):
+    """ops._plan with a timer + forced autotune: times once, then reuses."""
+    monkeypatch.setenv("REPRO_AUTOTUNE", "1")
+    calls = []
+
+    def timer(cand):
+        calls.append(cand)
+        return 0.001
+
+    plan_a = ops._plan(16, 256, 64, jnp.float32, "pogo", True, timer)
+    n_first = len(calls)
+    assert n_first > 0
+    plan_b = ops._plan(16, 256, 64, jnp.float32, "pogo", True, timer)
+    assert len(calls) == n_first
+    assert plan_a == plan_b

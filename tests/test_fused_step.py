@@ -1,0 +1,302 @@
+"""Single-pass fused group step: kernel/oracle/driver parity + telemetry.
+
+Covers the ISSUE-3 acceptance matrix: POGO and Landing stages, the three
+in-kernel base-optimizer kinds (none / trace / VAdam), whole and tiled
+kernel variants, tall leaves, and non-aligned shapes (p % 8 != 0,
+n % 128 != 0, B % block_b != 0) where zero padding must be bit-exact and
+the in-VMEM telemetry identity must mask the padded diagonal.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import optim
+from repro.core import api, stiefel
+from repro.kernels import fused_step as fs
+from repro.kernels import ops, ref
+
+KEY = jax.random.PRNGKey(0)
+
+# p % 8 != 0, n % 128 != 0, B not a power of two: every padding axis hit.
+SHAPES = [
+    (1, 3, 3),
+    (3, 5, 40),      # non-aligned p and n
+    (7, 16, 256),    # aligned p/n, odd B
+    (2, 10, 250),    # non-aligned everything
+    (5, 8, 128),
+]
+
+BASES = [
+    ("none", (), False, False),
+    ("trace", (0.3, False), True, False),
+    ("trace", (0.5, True), True, False),   # nesterov
+    ("vadam", (0.9, 0.999, 1e-8), True, True),
+]
+
+
+def _operands(shape, dtype=jnp.float32, with_mu=False, with_nu=False):
+    b, p, n = shape
+    k1, k2, k3, k4 = jax.random.split(KEY, 4)
+    x = stiefel.random_stiefel(k1, shape).astype(dtype)
+    g = (0.2 * jax.random.normal(k2, shape)).astype(dtype)
+    mu = (0.1 * jax.random.normal(k3, shape)).astype(dtype) if with_mu else None
+    nu = jnp.abs(jax.random.normal(k4, (b,))) if with_nu else None
+    return x, g, mu, nu
+
+
+@pytest.mark.parametrize("shape", SHAPES)
+@pytest.mark.parametrize("method", ["pogo", "landing"])
+@pytest.mark.parametrize("base_kind,hyper,with_mu,with_nu", BASES)
+def test_fused_whole_matches_oracle(shape, method, base_kind, hyper,
+                                    with_mu, with_nu):
+    x, g, mu, nu = _operands(shape, with_mu=with_mu, with_nu=with_nu)
+    count = jnp.asarray(3, jnp.int32) if base_kind == "vadam" else None
+    kwargs = dict(method=method, lam=0.5, base_kind=base_kind, hyper=hyper,
+                  mu=mu, nu=nu, count=count)
+    r = ref.fused_group_step_ref(x, g, 0.1, **kwargs)
+    k = ops.fused_group_step(x, g, 0.1, use_pallas=True, interpret=True,
+                             **kwargs)
+    for a, b, name in zip(r, k, ("x", "mu", "nu", "dist")):
+        if a is None:
+            assert b is None
+            continue
+        np.testing.assert_allclose(
+            np.asarray(a, np.float32), np.asarray(b, np.float32),
+            atol=2e-5, rtol=1e-4, err_msg=f"{method}/{base_kind}/{name}",
+        )
+
+
+@pytest.mark.parametrize("shape", SHAPES)
+@pytest.mark.parametrize("method", ["pogo", "landing"])
+def test_fused_tiled_matches_oracle(shape, method, monkeypatch):
+    """Force the tiled variant through the full dispatcher (padding and
+    telemetry masking included) by shrinking the VMEM budget. The decay
+    0.35 is deliberately unique: ``hyper`` is a static jit arg, so it
+    busts the dispatch cache that the whole-variant tests populated with
+    the same shapes (plan selection happens at trace time)."""
+    monkeypatch.setattr(ops, "VMEM_BUDGET_BYTES", 64 * 1024)
+    x, g, mu, nu = _operands(shape, with_mu=True)
+    r = ref.fused_group_step_ref(
+        x, g, 0.1, method=method, lam=0.5, base_kind="trace",
+        hyper=(0.35, False), mu=mu,
+    )
+    k = ops.fused_group_step(
+        x, g, 0.1, method=method, lam=0.5, base_kind="trace",
+        hyper=(0.35, False), mu=mu, use_pallas=True, interpret=True,
+    )
+    for a, b, name in zip(r, k, ("x", "mu", "nu", "dist")):
+        if a is None:
+            assert b is None
+            continue
+        np.testing.assert_allclose(
+            np.asarray(a, np.float32), np.asarray(b, np.float32),
+            atol=3e-5, rtol=1e-4, err_msg=f"tiled/{method}/{name}",
+        )
+
+
+@pytest.mark.parametrize("method", ["pogo", "landing"])
+def test_fused_telemetry_matches_true_distance(method):
+    """The algebraic (POGO) / accumulated (Landing) telemetry equals the
+    measured ||X' X'^H - I||_F of the returned iterate to fp32 tolerance."""
+    x, g, _, _ = _operands((3, 5, 40))
+    x2, _, _, dist = ops.fused_group_step(
+        x, g, 0.1, method=method, lam=0.5, use_pallas=True, interpret=True,
+    )
+    d_true = stiefel.manifold_distance(x2.astype(jnp.float32))
+    np.testing.assert_allclose(
+        np.asarray(dist), np.asarray(d_true), atol=1e-5, rtol=1e-3
+    )
+
+
+def test_fused_rejects_complex():
+    x = stiefel.random_stiefel(KEY, (2, 4, 12), jnp.complex64)
+    with pytest.raises(ValueError):
+        ops.fused_group_step(x, x, 0.1, method="pogo", lam=0.5)
+
+
+def test_tiled_vadam_scalar_commutes():
+    """Phase-1 accumulates with the unscaled momentum; the per-matrix VAdam
+    scalar applied in phase 2 must reproduce the whole-kernel result."""
+    b1, b2, eps = 0.9, 0.999, 1e-8
+    t = 4.0
+    scal = jnp.asarray(
+        [0.1, 0.5, 1.0, b1, b2, eps, 1 - b1**t, 1 - b2**t], jnp.float32
+    )
+    x, g, mu, nu = _operands((2, 16, 1024), with_mu=True, with_nu=True)
+    nu2d = nu.reshape(-1, 1)
+    out_t = fs.fused_step_tiled(
+        x, g, mu, nu2d, scal, method="pogo", base_kind="vadam",
+        tile_n=256, interpret=True,
+    )
+    out_w = fs.fused_step_whole(
+        x, g, mu, nu2d, scal, method="pogo", base_kind="vadam",
+        block_b=1, interpret=True,
+    )
+    for a, b in zip(out_t, out_w):
+        np.testing.assert_allclose(
+            np.asarray(a, np.float32), np.asarray(b, np.float32),
+            atol=3e-5, rtol=1e-4,
+        )
+
+
+# ------------------------------------------------------------ driver parity
+
+
+PARAMS = {
+    "a": stiefel.random_stiefel(jax.random.PRNGKey(1), (4, 8, 24)),
+    # tall leaf: constrained along its transpose
+    "b": jnp.swapaxes(stiefel.random_stiefel(jax.random.PRNGKey(2), (5, 16)), -1, -2),
+    "c": stiefel.random_stiefel(jax.random.PRNGKey(3), (2, 3, 8, 24)),
+    "d": stiefel.random_stiefel(jax.random.PRNGKey(4), (3, 40)),  # p%8, n%128
+}
+GRADS = jax.tree.map(
+    lambda p: 0.1 * jax.random.normal(jax.random.PRNGKey(9), p.shape), PARAMS
+)
+
+
+def _run(opt, steps=3, params=PARAMS, grads=GRADS):
+    state = opt.init(params)
+    ps = params
+    for _ in range(steps):
+        u, state = opt.update(grads, state, ps)
+        ps = optim.apply_updates(ps, u)
+    return ps, state
+
+
+DRIVER_BASES = [
+    ("none", lambda: None),
+    ("trace", lambda: optim.chain(optim.trace(0.3))),
+    ("nesterov", lambda: optim.trace(0.5, nesterov=True)),
+    ("vadam", lambda: optim.chain(optim.scale_by_vadam())),
+    ("trace+scale", lambda: optim.chain(optim.trace(0.3), optim.scale(0.7))),
+]
+
+
+@pytest.mark.parametrize("bname,base_fn", DRIVER_BASES)
+@pytest.mark.parametrize("mname,mkw", [
+    ("pogo", {}),
+    ("landing", {"safe_step": False}),
+])
+@pytest.mark.parametrize("grouping", ["auto", "per_leaf"])
+def test_driver_fused_parity(bname, base_fn, mname, mkw, grouping):
+    """use_kernel=True routes through the fused group step and must match
+    the unfused two-phase driver: params, base-optimizer state, telemetry."""
+    o_ref = api.orthogonal(mname, learning_rate=0.1, base_optimizer=base_fn(),
+                           grouping=grouping, **mkw)
+    o_fus = api.orthogonal(mname, learning_rate=0.1, base_optimizer=base_fn(),
+                           grouping=grouping, use_kernel=True, **mkw)
+    p1, s1 = _run(o_ref)
+    p2, s2 = _run(o_fus)
+    for k in PARAMS:
+        np.testing.assert_allclose(
+            np.asarray(p1[k]), np.asarray(p2[k]), atol=3e-6, rtol=1e-5,
+            err_msg=f"{mname}/{bname}/{k}",
+        )
+    np.testing.assert_allclose(
+        np.asarray(api.max_distance(s1)), np.asarray(api.max_distance(s2)),
+        atol=1e-5, rtol=1e-3,
+    )
+    for l1, l2 in zip(jax.tree.leaves(s1.base_state),
+                      jax.tree.leaves(s2.base_state)):
+        np.testing.assert_allclose(
+            np.asarray(l1, np.float32), np.asarray(l2, np.float32),
+            atol=3e-6, rtol=1e-5, err_msg=f"{mname}/{bname}/base_state",
+        )
+
+
+def test_driver_fused_bf16_parity():
+    params = jax.tree.map(lambda p: p.astype(jnp.bfloat16), PARAMS)
+    grads = jax.tree.map(lambda g: g.astype(jnp.bfloat16), GRADS)
+    base = optim.chain(optim.trace(0.3))
+    o_ref = api.orthogonal("pogo", learning_rate=0.1, base_optimizer=base)
+    o_fus = api.orthogonal("pogo", learning_rate=0.1,
+                           base_optimizer=optim.chain(optim.trace(0.3)),
+                           use_kernel=True)
+    p1, s1 = _run(o_ref, params=params, grads=grads)
+    p2, s2 = _run(o_fus, params=params, grads=grads)
+    for k in params:
+        np.testing.assert_allclose(
+            np.asarray(p1[k], np.float32), np.asarray(p2[k], np.float32),
+            atol=3e-2, rtol=3e-2,
+        )
+    # Telemetry semantics: both paths must measure the *stored* (bf16)
+    # iterate — the fused path re-measures post-cast, so the bf16 rounding
+    # floor (~1e-2, far above the f32 kernel distance) must agree.
+    d1 = float(api.max_distance(s1))
+    d2 = float(api.max_distance(s2))
+    assert d1 > 1e-4 and d2 > 1e-4, (d1, d2)
+    np.testing.assert_allclose(d1, d2, rtol=0.3)
+
+
+def test_driver_fused_falls_back_when_unfusable():
+    """find_root / safe_step / opaque bases / complex groups keep the
+    two-phase path (and still produce a valid state)."""
+    # opaque base: adam is not linear and has no fused tag
+    o1 = api.orthogonal("pogo", learning_rate=0.1,
+                        base_optimizer=optim.scale_by_adam(), use_kernel=True)
+    # instance veto
+    o2 = api.orthogonal("pogo", learning_rate=0.1, find_root=True,
+                        use_kernel=True)
+    o3 = api.orthogonal("landing", learning_rate=0.1, use_kernel=True)  # safe
+    for opt in (o1, o2, o3):
+        ps, state = _run(opt, steps=2)
+        assert float(api.max_distance(state)) < 0.5
+    # complex group: fused path is real-only, must still work end to end
+    cx = {"w": stiefel.random_stiefel(KEY, (4, 12), jnp.complex64)}
+    cg = {"w": (0.1 * jax.random.normal(KEY, (4, 12))).astype(jnp.complex64)}
+    opt = api.orthogonal("pogo", learning_rate=0.1, use_kernel=True)
+    _, state = _run(opt, steps=2, params=cx, grads=cg)
+    assert float(api.max_distance(state)) < 0.5
+
+
+def test_driver_fused_safety_projection():
+    opt = api.orthogonal("pogo", learning_rate=0.1, use_kernel=True,
+                         safety_project_every=2)
+    ps, state = _run(opt, steps=4)
+    assert float(api.max_distance(state)) < 1e-2
+
+
+def test_driver_fused_constraint_set():
+    """ConstraintSet stacked storage rides the fused path unchanged."""
+    cs_p = api.ConstraintSet.from_tree(PARAMS)
+    cs_g = api.ConstraintSet.from_tree(GRADS)
+    o_ref = api.orthogonal("pogo", learning_rate=0.1)
+    o_fus = api.orthogonal("pogo", learning_rate=0.1, use_kernel=True)
+    u1, _ = o_ref.update(cs_g, o_ref.init(cs_p), cs_p)
+    u2, _ = o_fus.update(cs_g, o_fus.init(cs_p), cs_p)
+    for a, b in zip(u1.stacks, u2.stacks):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   atol=3e-6, rtol=1e-5)
+
+
+def test_resolve_fused_base_contract():
+    from repro.optim import fused as of
+
+    assert of.resolve_fused_base(None).kind == "none"
+    assert of.resolve_fused_base(optim.identity()).kind == "none"
+    fb = of.resolve_fused_base(optim.chain(optim.trace(0.3)))
+    assert fb.kind == "trace" and fb.hyper == (0.3, False)
+    fb = of.resolve_fused_base(optim.chain(optim.scale_by_vadam()))
+    assert fb.kind == "vadam"
+    fb = of.resolve_fused_base(optim.chain(optim.trace(0.3), optim.scale(0.5)))
+    assert fb.kind == "trace" and fb.post_scale == 0.5
+    # scale BEFORE the stateful link would change the stored moments
+    assert of.resolve_fused_base(
+        optim.chain(optim.scale(0.5), optim.trace(0.3))) is None
+    # opaque transforms don't fuse
+    assert of.resolve_fused_base(optim.scale_by_adam()) is None
+    assert of.resolve_fused_base(
+        optim.chain(optim.trace(0.3), optim.trace(0.2))) is None
+    # slot round trip
+    base = optim.chain(optim.trace(0.3))
+    fb = of.resolve_fused_base(base)
+    state = base.init(PARAMS)
+    mu, nu, cnt = fb.get_slots(state)
+    assert nu is None and cnt is None
+    state2 = fb.set_slots(state, jax.tree.map(lambda m: m + 1.0, mu), None)
+    np.testing.assert_allclose(
+        np.asarray(state2[0].momentum["a"]),
+        np.asarray(state[0].momentum["a"] + 1.0),
+    )

@@ -61,6 +61,36 @@ def test_newton_schulz_matches_ref(shape):
     assert float(jnp.max(stiefel.manifold_distance(out_k))) < 1e-2
 
 
+@pytest.mark.parametrize("shape", [(2, 16, 1024), (1, 8, 512), (3, 5, 768)])
+def test_landing_field_tiled_matches_ref(shape):
+    """Tiled two-phase landing field vs the jnp oracle (direct kernel call
+    at tile-aligned n; the dispatcher-level padding path is covered by
+    test_landing_dispatch_tiled_no_ref_fallback)."""
+    from repro.kernels.landing_field import landing_field_tiled
+
+    x, g = _xg(shape)
+    out_t = landing_field_tiled(x, g, 1.0, tile_n=256, interpret=True)
+    np.testing.assert_allclose(
+        np.asarray(out_t), np.asarray(ref.landing_field_ref(x, g, 1.0)),
+        atol=2e-5, rtol=1e-4,
+    )
+
+
+def test_landing_dispatch_tiled_no_ref_fallback(monkeypatch):
+    """Large-n Landing groups must stay on the kernel fast path: with the
+    whole variant infeasible, the dispatcher takes the tiled kernel (shape
+    unique to this test so the jit cache can't have a whole-plan trace)."""
+    monkeypatch.setattr(ops, "VMEM_BUDGET_BYTES", 48 * 1024)
+    plan = ops._plan(6, 272, 2, jnp.float32, "landing", True)
+    assert plan[0] == "tiled"
+    x, g = _xg((2, 6, 272))
+    out_k = ops.landing_field(x, g, 1.0)
+    np.testing.assert_allclose(
+        np.asarray(out_k), np.asarray(ref.landing_field_ref(x, g, 1.0)),
+        atol=2e-5, rtol=1e-4,
+    )
+
+
 def test_tiled_path_matches_whole():
     """Force the 3-phase tiled kernel (large n) and cross-check."""
     shape = (2, 64, 4096)
