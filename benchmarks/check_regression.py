@@ -7,11 +7,22 @@ any matched record regresses by more than ``--max-regress`` (default
 25%). Speedup/derived rows (whose ``us_per_call`` mirrors another row)
 are compared too — they carry the same timing.
 
+Baseline keys must not disappear silently (a renamed bench mode would
+otherwise turn the guard vacuous while looking green):
+
+  * every baseline-only record is listed explicitly; ``--on-missing
+    fail`` escalates them to failures (default ``warn`` — reduced smoke
+    grids legitimately skip full-grid sizes);
+  * a whole baseline *mode family* (``suite/mode`` name prefix) losing
+    every match — while its suite did run — always fails: that is a
+    renamed or dropped mode, not a grid reduction;
+  * zero overlap overall always fails: the guard would be vacuous.
+
 Escape hatches, in order:
   * env ``BENCH_REGRESSION_OK=1`` (CI sets it from a ``bench-regression-ok``
-    PR label) downgrades failures to warnings;
-  * records present in only one file are reported but never fail the run
-    (grids may legitimately change);
+    PR label) downgrades every failure to a warning;
+  * records present only in the current run never fail (new modes need a
+    baseline refresh, not a green gate);
   * timing-free rows (us_per_call == 0) are skipped.
 
 Usage:
@@ -27,34 +38,63 @@ import os
 import sys
 
 
-def load_records(path: str) -> dict[str, float]:
+def load_records(path: str) -> dict[str, dict]:
+    """name -> {"us": float, "suite": str} for every timed record."""
     with open(path) as f:
         payload = json.load(f)
-    out: dict[str, float] = {}
+    out: dict[str, dict] = {}
     for rec in payload.get("records", []):
         us = float(rec.get("us_per_call") or 0.0)
         if us > 0:
-            out[rec["name"]] = us
+            out[rec["name"]] = {"us": us, "suite": rec.get("suite")}
     return out
 
 
-def compare(baseline: dict[str, float], current: dict[str, float],
-            max_regress: float) -> tuple[list[str], list[str]]:
+def _family(name: str) -> str:
+    """Mode-identity prefix of a record name: the components before the
+    first size/variant token (one containing a digit, e.g. ``N2048_p16``
+    or ``dev8``); if no component carries a digit, everything but the
+    leaf. Handles both ``many_matrices/<mode>/<size>[/<dev>]`` and
+    ``roofline/group_step/<mode>/<size>`` shapes."""
+    parts = name.split("/")
+    for i, part in enumerate(parts):
+        if any(ch.isdigit() for ch in part):
+            return "/".join(parts[:i]) or name
+    return "/".join(parts[:-1]) or name
+
+
+def compare(baseline: dict[str, dict], current: dict[str, dict],
+            max_regress: float) -> tuple[list[str], list[str], list[str], list[str]]:
+    """Returns (regressions, missing, lost_families, report)."""
     regressions, report = [], []
-    for name in sorted(set(baseline) & set(current)):
-        base, cur = baseline[name], current[name]
+    matched = sorted(set(baseline) & set(current))
+    for name in matched:
+        base, cur = baseline[name]["us"], current[name]["us"]
         ratio = cur / base
         line = f"{name}: {base:.1f} -> {cur:.1f} us ({ratio:.2f}x)"
         report.append(line)
         if ratio > 1.0 + max_regress:
             regressions.append(line)
-    only_base = sorted(set(baseline) - set(current))
+
+    # Baseline keys that disappeared. Only considered when the record's
+    # suite ran at all in the current set — a suite that was not invoked
+    # (--only filtering) says nothing about renamed modes.
+    current_suites = {v["suite"] for v in current.values()}
+    missing = sorted(
+        name for name, v in baseline.items()
+        if name not in current and v["suite"] in current_suites
+    )
+    # A family is "lost" only when the current run produced NOTHING under
+    # that name prefix (renamed/dropped mode). Producing the family at
+    # different grid sizes is a grid change, reported key-by-key above.
+    current_families = {_family(n) for n in current}
+    lost_families = sorted({
+        _family(n) for n in missing if _family(n) not in current_families
+    })
     only_cur = sorted(set(current) - set(baseline))
-    if only_base:
-        report.append(f"# baseline-only records (ignored): {len(only_base)}")
     if only_cur:
         report.append(f"# new records (no baseline yet): {len(only_cur)}")
-    return regressions, report
+    return regressions, missing, lost_families, report
 
 
 def main(argv=None) -> int:
@@ -63,22 +103,60 @@ def main(argv=None) -> int:
     ap.add_argument("--current", required=True)
     ap.add_argument("--max-regress", type=float, default=0.25,
                     help="allowed fractional slowdown (0.25 = +25%%)")
+    ap.add_argument("--on-missing", choices=["ignore", "warn", "fail"],
+                    default="warn",
+                    help="how to treat individual baseline records absent "
+                         "from the current run (whole lost mode families "
+                         "and zero overlap always fail)")
+    ap.add_argument("--names-only", action="store_true",
+                    help="skip the timing comparison; enforce only the "
+                         "name contracts (missing keys, lost families, "
+                         "vacuous overlap). For suites whose absolute "
+                         "times are too noisy to gate cross-machine "
+                         "(e.g. tiny sharded smoke cells) but whose "
+                         "correctness invariants fail inside the suite "
+                         "itself.")
     args = ap.parse_args(argv)
 
     baseline = load_records(args.baseline)
     current = load_records(args.current)
-    regressions, report = compare(baseline, current, args.max_regress)
+    regressions, missing, lost_families, report = compare(
+        baseline, current, args.max_regress
+    )
+    if args.names_only:
+        regressions = []
     for line in report:
         print(line)
+
+    ok = os.environ.get("BENCH_REGRESSION_OK")
+    failures = []
     if not set(baseline) & set(current):
-        print("WARNING: no overlapping records — guard is vacuous")
-        return 0
+        failures.append(
+            "no overlapping records — the guard is vacuous (renamed bench "
+            "modes? refresh the committed baseline alongside the rename)"
+        )
+    if missing and args.on_missing != "ignore":
+        for name in missing:
+            print(f"MISSING baseline key: {name} (in "
+                  f"{args.baseline}, absent from {args.current})")
+        if args.on_missing == "fail":
+            failures.append(f"{len(missing)} baseline key(s) disappeared")
+    for fam in lost_families:
+        failures.append(
+            f"bench mode family '{fam}' lost every baseline match — "
+            "renamed or dropped mode (refresh the baseline if intended)"
+        )
     if regressions:
         print(f"\n{len(regressions)} record(s) regressed more than "
               f"{args.max_regress:.0%}:")
         for line in regressions:
             print(f"  REGRESSION {line}")
-        if os.environ.get("BENCH_REGRESSION_OK"):
+        failures.append(f"{len(regressions)} perf regression(s)")
+
+    if failures:
+        for f in failures:
+            print(f"FAIL: {f}")
+        if ok:
             print("BENCH_REGRESSION_OK set: downgrading to warning")
             return 0
         return 1

@@ -41,10 +41,22 @@ the end-to-end and trace columns carry the scaling story, and on
 TPU/GPU the launch-count gap widens the steady-state column too.
 Speedup rows (``many_matrices/speedup/...``) compare auto vs per_leaf
 at identical problems; the acceptance gate is 2048 x (16, 256).
+
+``run_sharded`` (suite ``many_matrices_sharded``) is the multi-device
+mode: the sharded fused step (DESIGN.md §Sharded execution) on forced
+1- and 8-device host meshes, one subprocess per cell, reporting
+per-device bytes/s, 8-vs-1 aggregate speedup / scaling efficiency,
+donation aliasing, and a bit-identity digest across device counts.
 """
 
 from __future__ import annotations
 
+import functools
+import hashlib
+import json
+import os
+import subprocess
+import sys
 import time
 
 import jax
@@ -56,6 +68,10 @@ from .common import emit, min_window_us
 
 N_DIM = 256
 STEPS = 20
+
+# HBM passes over the (B, p, n) operands per fused step with a trace
+# base (DESIGN.md §2 cost table): read X, g, mu; write X', mu'.
+FUSED_TRACE_PASSES = 5
 
 
 def _problem(n_mat: int, p: int, n: int, mode: str):
@@ -84,7 +100,9 @@ def _time_step(n_mat: int, p: int, n: int, mode: str, steps: int = STEPS):
     )
     state = opt.init(params)
 
-    @jax.jit
+    # params/state donated: the stacked buffers are rewritten in place
+    # (input/output aliasing), matching the trainer's jit contract.
+    @functools.partial(jax.jit, donate_argnums=(0, 1))
     def step(params, state, grads):
         u, s = opt.update(grads, state, params)
         return jax.tree.map(jnp.add, params, u), s
@@ -103,6 +121,195 @@ def _time_step(n_mat: int, p: int, n: int, mode: str, steps: int = STEPS):
     us = min_window_us(run_steps, steps)
     e2e_us = (1e6 * trace_s + us * steps) / steps
     return trace_s, us, e2e_us
+
+
+# ----------------------------------------------------- sharded (multi-device)
+
+
+def _sharded_worker(n_mat: int, p: int, n: int, steps: int) -> None:
+    """One measurement process: the sharded fused step on however many
+    (fake host) devices this process was started with.
+
+    ConstraintSet resting storage is device_put batch-sharded over a
+    1-axis data mesh, the step is ``api.constraint_step`` (param stacks
+    and moments DONATED end to end), and the grouped driver executes it
+    under the shard_map schedule — the fused kernel runs per shard on its
+    local ``B/n_dev`` slice. Prints one JSON line: timings, an md5 of the
+    params after 2 deterministic steps (the parent asserts the 8-device
+    run is bit-identical to 1-device), and whether the lowered step
+    aliased (donated) its param/moment buffers.
+    """
+    import numpy as np
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    from repro import optim
+    from repro.distributed import shard_hints
+    from repro.launch.mesh import make_mesh
+
+    n_dev = len(jax.devices())
+    mesh = make_mesh((n_dev,), ("data",))
+    shard_hints.set_mesh(mesh)
+
+    base = stiefel.random_stiefel(jax.random.PRNGKey(0), (n_mat, p, n))
+    gbase = 0.1 * jax.random.normal(jax.random.PRNGKey(1), (n_mat, p, n))
+
+    def put(tree):
+        def assign(x):
+            if (getattr(x, "ndim", 0) >= 1 and x.shape[0] == n_mat
+                    and n_mat % n_dev == 0):
+                spec = P("data", *([None] * (x.ndim - 1)))
+                return jax.device_put(x, NamedSharding(mesh, spec))
+            return x
+        return jax.tree.map(assign, tree)
+
+    opt = api.orthogonal(
+        "pogo", learning_rate=0.1, grouping="auto", use_kernel=True,
+        base_optimizer=optim.chain(optim.trace(0.3)),
+    )
+    grads = put(api.ConstraintSet.from_tree({"w": gbase}))
+    step = api.constraint_step(opt)
+
+    def fresh():
+        # jnp.copy: from_tree on an already-stacked leaf is a no-op
+        # reshape, and the donated step would otherwise eat `base` itself.
+        params = put(api.ConstraintSet.from_tree({"w": jnp.copy(base)}))
+        return params, put(opt.init(params))
+
+    # Donation check on the lowered step: the param stack and moment
+    # buffers must be aliased input->output (no param-sized copy).
+    params, state = fresh()
+    compiled = step.lower(params, state, grads).compile()
+    aliased = "input_output_alias" in compiled.as_text()
+
+    # Timing run (first call is the real trace+compile: .lower() above
+    # does not populate the jit dispatch cache).
+    t0 = time.perf_counter()
+    params, state = step(params, state, grads)
+    jax.block_until_ready(params.stacks[0])
+    trace_s = time.perf_counter() - t0
+
+    def run_steps(k):
+        nonlocal params, state
+        for _ in range(k):
+            params, state = step(params, state, grads)
+        jax.block_until_ready(params.stacks[0])
+
+    us = min_window_us(run_steps, steps)
+    e2e_us = (1e6 * trace_s + us * steps) / steps
+
+    # Determinism probe: 2 fresh steps, then hash the param bytes — the
+    # parent asserts every device count lands on the same digest.
+    params, state = fresh()
+    for _ in range(2):
+        params, state = step(params, state, grads)
+    digest = hashlib.md5(
+        np.asarray(params.stacks[0]).tobytes()
+    ).hexdigest()
+    print(json.dumps({
+        "n_dev": n_dev, "n_mat": n_mat, "p": p, "n": n, "steps": steps,
+        "trace_s": trace_s, "us": us, "e2e_us": e2e_us,
+        "digest": digest, "aliased": bool(aliased),
+    }))
+
+
+def _spawn_sharded(n_dev: int, n_mat: int, p: int, n: int, steps: int) -> dict:
+    env = dict(os.environ)
+    # Forced HOST mesh: the device-count flag only affects the CPU
+    # platform, so pin the worker to it — on a GPU/TPU host the dev1 and
+    # dev8 cells would otherwise silently measure the same accelerators.
+    env["JAX_PLATFORMS"] = "cpu"
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={n_dev}"
+    src = os.path.join(os.path.dirname(__file__), "..", "src")
+    env["PYTHONPATH"] = (
+        os.path.abspath(src) + os.pathsep + env.get("PYTHONPATH", "")
+    )
+    res = subprocess.run(
+        [sys.executable, "-m", "benchmarks.many_matrices",
+         "--sharded-worker", str(n_mat), str(p), str(n), str(steps)],
+        env=env, cwd=os.path.join(os.path.dirname(__file__), ".."),
+        capture_output=True, text=True, timeout=1800,
+    )
+    if res.returncode != 0:
+        raise RuntimeError(
+            f"sharded worker (dev={n_dev}) failed:\n{res.stderr[-2000:]}"
+        )
+    out = json.loads(res.stdout.strip().splitlines()[-1])
+    if out["n_dev"] != n_dev:
+        raise RuntimeError(
+            f"sharded worker saw {out['n_dev']} devices, wanted {n_dev}"
+        )
+    return out
+
+
+def run_sharded(full: bool = False, smoke: bool = False):
+    """Multi-device scaling of the sharded fused group step.
+
+    Each (problem, device-count) cell runs in its own subprocess (the
+    host-platform device count is process-global) on a forced n-device
+    host mesh. Reported per cell: steady step time, per-device achieved
+    HBM bytes/s (5 fused passes over the (B, p, n) fp32 operands, local
+    share); the scaling row compares 8 devices vs 1 (aggregate speedup,
+    scaling efficiency = speedup / devices) and asserts the sharded step
+    stayed bit-identical to the single-device path. On a real pod the
+    per-device bandwidth is flat in device count (linear aggregate
+    scaling); on a CPU host mesh the devices share one socket, so the
+    efficiency column mostly validates the schedule rather than the
+    bandwidth claim.
+    """
+    # The CI smoke cell (16, 16) stays in every grid so bench-smoke
+    # artifacts find matching baseline names (see check_regression.py).
+    if smoke:
+        grid, steps = [(16, 16)], 5
+    elif full:
+        grid, steps = [(16, 16), (2048, 16), (2048, 4), (4096, 16)], STEPS
+    else:
+        grid, steps = [(16, 16), (2048, 16)], STEPS
+    dev_counts = [1, 8]
+    for n_mat, p in grid:
+        cells = {}
+        for n_dev in dev_counts:
+            r = _spawn_sharded(n_dev, n_mat, p, N_DIM, steps)
+            cells[n_dev] = r
+            bytes_per_step = FUSED_TRACE_PASSES * n_mat * p * N_DIM * 4
+            per_dev_bs = bytes_per_step / n_dev / (r["us"] * 1e-6)
+            emit(
+                f"many_matrices/sharded_fused/N{n_mat}_p{p}/dev{n_dev}",
+                r["us"],
+                f"trace_s={r['trace_s']:.3f},per_dev_gbs={per_dev_bs / 1e9:.2f},"
+                f"aliased={int(r['aliased'])}",
+                mode="sharded_fused", n_matrices=n_mat, p=p, n=N_DIM,
+                n_devices=n_dev, steps=steps, trace_s=r["trace_s"],
+                e2e_us_per_step=r["e2e_us"],
+                per_device_bytes_per_s=per_dev_bs,
+                donation_aliased=r["aliased"],
+            )
+        lo, hi = cells[dev_counts[0]], cells[dev_counts[-1]]
+        agg_x = lo["us"] / hi["us"]
+        eff = agg_x / (dev_counts[-1] / dev_counts[0])
+        bit_identical = lo["digest"] == hi["digest"]
+        emit(
+            f"many_matrices/sharded_scaling/N{n_mat}_p{p}",
+            hi["us"],
+            f"agg_x={agg_x:.2f},eff={eff:.2f},bit_identical={int(bit_identical)}",
+            mode="sharded_scaling", n_matrices=n_mat, p=p, n=N_DIM,
+            n_devices=dev_counts[-1], steps=steps,
+            aggregate_speedup_x=agg_x, scaling_efficiency=eff,
+            bit_identical=bit_identical,
+            donation_aliased=hi["aliased"],
+        )
+        # Hard invariants, not just telemetry: a sharded step that is not
+        # bit-identical to the 1-device path, or that lost its donated
+        # buffer aliasing, must fail the suite (and the CI job running it).
+        if not bit_identical:
+            raise RuntimeError(
+                f"sharded fused step at N{n_mat}_p{p} is not bit-identical "
+                f"across device counts: {lo['digest']} != {hi['digest']}"
+            )
+        if not (lo["aliased"] and hi["aliased"]):
+            raise RuntimeError(
+                f"sharded fused step at N{n_mat}_p{p} lost donation "
+                "aliasing in the lowered HLO"
+            )
 
 
 def _emit_mode(mode, n_mat, p, trace_s, us, e2e_us, steps):
@@ -180,5 +387,9 @@ def run(full: bool = False, smoke: bool = False):
 
 
 if __name__ == "__main__":
-    print("name,us_per_call,derived", flush=True)
-    run()
+    if len(sys.argv) > 1 and sys.argv[1] == "--sharded-worker":
+        _sharded_worker(*(int(a) for a in sys.argv[2:6]))
+    else:
+        print("name,us_per_call,derived", flush=True)
+        run()
+        run_sharded()

@@ -55,6 +55,8 @@ def main(argv=None):
         "kernels": lambda: kernel_bench.run(full=args.full),          # Pallas
         "many_matrices": lambda: many_matrices.run(                   # §Groups
             full=args.full, smoke=args.smoke),
+        "many_matrices_sharded": lambda: many_matrices.run_sharded(   # §Sharded
+            full=args.full, smoke=args.smoke),
         "group_roofline": lambda: roofline.run_group_step(            # §Fusion
             full=args.full, smoke=args.smoke),
     }

@@ -12,6 +12,7 @@ from . import api, landing, pogo, quartic, rgd, rsdm, slpg, stiefel
 from .api import (
     METHODS,
     ConstraintSet,
+    constraint_step,
     GroupedDistances,
     GroupPlan,
     GroupSpec,
@@ -58,6 +59,7 @@ __all__ = [
     "RsdmConfig",
     "METHODS",
     "ConstraintSet",
+    "constraint_step",
     "GroupSpec",
     "GroupPlan",
     "GroupedDistances",

@@ -39,6 +39,7 @@ the O(p^2 n) cost table.
 from __future__ import annotations
 
 import dataclasses
+import functools
 import math
 import warnings
 from typing import Any, Callable, NamedTuple, Optional
@@ -94,9 +95,10 @@ class GroupSpec:
     def sharding_hint(self):
         """(axis, size) hint for distributing the group: shard the batch
         axis (dim 0 of the stacked tensor / the ``(B,)`` distance array)
-        across the data-parallel mesh axes. Consumed by
-        ``distributed.sharding.opt_state_specs`` and
-        ``distributed.shard_hints.group_batch``."""
+        across the data-parallel mesh axes. Made concrete by
+        ``distributed.sharding.opt_state_specs`` (resting storage) and by
+        the driver's ``shard_map`` execution schedule
+        (``distributed.shard_hints.shard_group_step``)."""
         return ("batch", self.batch)
 
 
@@ -253,6 +255,31 @@ class ConstraintSet:
     def __repr__(self):
         shapes = ", ".join(str(tuple(s.shape)) for s in self.stacks)
         return f"ConstraintSet({self.plan.n_matrices} matrices: {shapes})"
+
+
+def constraint_step(opt):
+    """Donated, jitted resting-state step over :class:`ConstraintSet`s.
+
+        step = constraint_step(orthogonal("pogo", use_kernel=True, ...))
+        params, state = step(params, state, grads)   # all ConstraintSet/IO
+
+    The param stacks and the optimizer state (base moments, grouped
+    distances) are **donated** into the step: XLA aliases each input
+    buffer to the matching output, so the update rewrites the stacks in
+    place — no param-sized copy, no spare param-sized HBM high-water
+    mark. Under a mesh (``distributed.shard_hints.set_mesh``) the
+    donation composes with the sharded group schedule: batch-sharded
+    stacks stay batch-sharded through the step without ever visiting a
+    replicated layout. Gradients are NOT donated (callers typically
+    reuse grad buffers for accumulation).
+    """
+
+    @functools.partial(jax.jit, donate_argnums=(0, 1))
+    def step(params: "ConstraintSet", state, grads: "ConstraintSet"):
+        updates, state = opt.update(grads, state, params)
+        return params.apply(updates), state
+
+    return step
 
 
 # --------------------------------------------------------------------- state
@@ -800,17 +827,48 @@ def orthogonal_from_config(cfg: OrthoConfig) -> GradientTransformation:
     return _build(spec.factory(**_method_kwargs(cfg)), cfg)
 
 
-def _group_batch_hint(x: Array) -> Array:
-    """Pin a stacked group tensor's batch axis onto the DP mesh axes.
+def _run_group_step(fn, group: GroupSpec, ops: tuple, out_ndims: tuple):
+    """Run one group step, sharded over the DP mesh axes when possible.
 
-    Lazy import: ``distributed`` is optional at this layer, and the hint is
-    a no-op when no mesh is set (unit tests, single-device runs).
+    When a mesh is set (``distributed.shard_hints.set_mesh``) and the
+    group batch divides a DP-axis subset, the step executes under
+    ``shard_map``: every batch-leading operand is partitioned, the PR-3
+    fused kernel (or the two-stage jnp path) runs per shard on its local
+    ``B_local`` slice, and the ``(B_local,)`` feasibility partials
+    concatenate into the group's global telemetry array — matrices are
+    independent, so no collective touches the update. Otherwise the step
+    runs exactly as before, unsharded.
+
+    A single plain stack (ConstraintSet resting storage) enters shard_map
+    as-is — already batch-sharded storage moves zero bytes. Gathered
+    stacks (concatenated / reshaped / transposed member leaves) are
+    pinned replicated first off-TPU, where the host-platform partitioner
+    miscompiles a concatenate consumed batch-sharded (see
+    ``shard_hints.shard_group_step``).
+
+    Lazy import: ``distributed`` is optional at this layer, and the
+    schedule degrades to the unsharded call when no mesh is set (unit
+    tests, single-device runs).
     """
     try:
         from ..distributed import shard_hints
     except ImportError:  # pragma: no cover - distributed always ships
-        return x
-    return shard_hints.group_batch(x)
+        return fn(*ops)
+    m0 = group.members[0]
+    simple = (
+        len(group.members) == 1 and not m0.transpose and len(m0.lead) == 1
+    )
+    # The wrong-values bug lives in the CPU host-platform partitioner
+    # (see shard_hints.shard_group_step); TPU/GPU reshard gathered stacks
+    # directly — pinning them replicated there would be exactly the
+    # round-trip the sharded schedule exists to avoid.
+    pin = (not simple) and jax.default_backend() == "cpu"
+    wrapped = shard_hints.shard_group_step(
+        fn, group.batch, out_ndims, pin_inputs=pin
+    )
+    if wrapped is None:
+        return fn(*ops)
+    return wrapped(*ops)
 
 
 def _build(method: Method, cfg: OrthoConfig) -> GradientTransformation:
@@ -901,18 +959,17 @@ def _build(method: Method, cfg: OrthoConfig) -> GradientTransformation:
         else:
             rng, all_keys = state.rng, None
 
-        def group_step(group: GroupSpec, xg: Array, gg: Array):
-            """One batched two-stage update for a whole constraint group."""
-            keys = None
-            if all_keys is not None:
-                kparts = [
-                    all_keys[m.key_base:m.key_base + m.count]
-                    for m in group.members
-                ]
-                keys = kparts[0] if len(kparts) == 1 else jnp.concatenate(kparts)
+        def group_step(group: GroupSpec, xg: Array, gg: Array, keys, eta,
+                       count):
+            """One batched two-stage update for a whole constraint group.
+
+            Batch-parallel by construction (every operand and output is
+            batch-leading or replicated), so it runs unchanged per shard
+            under the :func:`_run_group_step` shard_map schedule.
+            """
             x32 = xg.astype(_accum_dtype(xg.dtype))
             g32 = gg.astype(x32.dtype)
-            eta = jnp.asarray(eta0, jnp.float32).astype(_scalar_dtype(x32.dtype))
+            eta = eta.astype(_scalar_dtype(x32.dtype))
             ctx = StepCtx(
                 x=x32,
                 g=g32,
@@ -944,14 +1001,15 @@ def _build(method: Method, cfg: OrthoConfig) -> GradientTransformation:
             return ug, dist
 
         def group_step_fused(group: GroupSpec, xg: Array, gg: Array,
-                             mug, nug):
+                             mug, nug, eta, count, bcount):
             """One single-pass fused group step: the base-optimizer moment
             update, direction + leap + land and the feasibility telemetry
             come back from one kernel (or its jnp oracle off-TPU) — no
-            separate base pass, no telemetry gram over X'."""
+            separate base pass, no telemetry gram over X'. Batch-parallel:
+            under the shard_map schedule the PR-3 kernel runs per shard on
+            its local slice (planner keyed on the per-shard batch)."""
             x32 = xg.astype(_accum_dtype(xg.dtype))
             g32 = gg.astype(x32.dtype)
-            eta = jnp.asarray(eta0, jnp.float32)
             ctx = StepCtx(
                 x=x32, g=g32, eta=eta, count=count, key=None,
                 use_kernel=cfg.use_kernel, scratch={},
@@ -959,7 +1017,7 @@ def _build(method: Method, cfg: OrthoConfig) -> GradientTransformation:
             slots = FusedSlots(
                 kind=fused_base.kind, hyper=fused_base.hyper,
                 post_scale=fused_base.post_scale,
-                mu=mug, nu=nug, count=base_count,
+                mu=mug, nu=nug, count=bcount,
             )
             x_next, mu2, nu2, dist = method.fused_step(x32, g32, ctx, slots)
             if cfg.safety_project_every:
@@ -989,25 +1047,47 @@ def _build(method: Method, cfg: OrthoConfig) -> GradientTransformation:
         mu_out: list = [None] * len(leaves)
         nu_out: list = [None] * len(leaves)
         dists = []
+        # Every traced value a group step consumes rides as an explicit
+        # operand (never a closure) so the shard_map schedule can declare
+        # its replication: batch-leading operands shard, scalars replicate.
+        eta32 = jnp.asarray(eta0, jnp.float32)
         for group in plan.groups:
-            xg = _group_batch_hint(_gather_group(group, leaves))
-            gg = _group_batch_hint(_gather_group(group, gleaves))
+            xg = _gather_group(group, leaves)
+            gg = _gather_group(group, gleaves)
             if fused_now:
                 mug = (
-                    _group_batch_hint(_gather_group(group, mu_leaves))
+                    _gather_group(group, mu_leaves)
                     if mu_leaves is not None else None
                 )
                 nug = (
                     _gather_group_scalars(group, nu_leaves)
                     if nu_leaves is not None else None
                 )
-                ug, dist, mu2, nu2 = group_step_fused(group, xg, gg, mug, nug)
+                ug, dist, mu2, nu2 = _run_group_step(
+                    functools.partial(group_step_fused, group), group,
+                    (xg, gg, mug, nug, eta32, count, base_count),
+                    (3, 1, None if mug is None else 3,
+                     None if nug is None else 1),
+                )
                 if mu2 is not None:
                     _scatter_group(group, mu2, mu_out)
                 if nu2 is not None:
                     _scatter_group_scalars(group, nu2, nu_out)
             else:
-                ug, dist = group_step(group, xg, gg)
+                keys = None
+                if all_keys is not None:
+                    kparts = [
+                        all_keys[m.key_base:m.key_base + m.count]
+                        for m in group.members
+                    ]
+                    keys = (
+                        kparts[0] if len(kparts) == 1
+                        else jnp.concatenate(kparts)
+                    )
+                ug, dist = _run_group_step(
+                    functools.partial(group_step, group), group,
+                    (xg, gg, keys, eta32, count), (3, 1),
+                )
             dists.append(dist)
             _scatter_group(group, ug, out)
         if fused_now:

@@ -1,4 +1,4 @@
-"""Activation sharding hints (``with_sharding_constraint`` shims).
+"""Activation sharding hints and the group-step ``shard_map`` schedule.
 
 Model code calls ``activation(x)`` at block boundaries to pin the residual
 stream to ``P((pod, data), None, ...)``. Without these pins GSPMD is free to
@@ -6,6 +6,13 @@ flip the activation layout between the FSDP-sharded weights' ``data`` dim
 and the batch dim — on the 16x16 mesh that produced multi-GiB all-to-all
 resharding storms. With the pin, weight all-gathers (FSDP) are the only
 activation-adjacent collectives, which is the intended ZeRO-3 schedule.
+
+The grouped orthoptimizer driver uses :func:`shard_group_step` instead of
+a hint: a constraint group's stacked ``(B, p, n)`` update is explicitly
+partitioned over the DP axes with ``shard_map`` (the primary execution
+schedule for the hot path, not an advisory constraint), so the per-shard
+kernel sees its local batch and effective HBM bandwidth scales with
+device count.
 
 The mesh is process-global state set by launchers (dryrun/train/serve);
 when unset (unit tests, single-device smoke runs) the hints are no-ops.
@@ -53,30 +60,73 @@ def _batch_axes(mesh: Mesh, batch: int):
     return tuple(best) if len(best) > 1 else best[0]
 
 
-def group_batch(x: jax.Array) -> jax.Array:
-    """Pin a constraint group's stacked batch axis (dim 0) to the DP axes.
+def shard_group_step(fn, batch: int, out_ndims, *, pin_inputs: bool = False):
+    """Wrap a batch-parallel group step in ``shard_map`` over the DP axes.
 
-    The grouped orthoptimizer driver (``core.api``, DESIGN.md §Constraint
-    groups) stacks thousands of constrained matrices into one ``(B, p, n)``
-    tensor per group; B is embarrassingly parallel (every matrix updates
-    independently), so it shards over the same ``(pod, data)`` axes as the
-    activation batch. No-op without a mesh or when B doesn't divide any DP
-    axis subset.
+    This is the execution schedule for a constraint group's stacked
+    ``(B, p, n)`` update (DESIGN.md §Sharded execution): every operand of
+    ``fn`` whose leading dim equals ``batch`` is partitioned over the
+    largest DP-axis subset dividing B, everything else (step count, eta)
+    is replicated, and ``fn`` runs once per shard on its local
+    ``B_local = B / axis_size`` slice. Matrices are independent, so no
+    collective touches the update; the per-shard ``(B_local,)`` telemetry
+    partials concatenate into the global ``(B,)`` array by construction.
 
-    TPU-only: the CPU host-platform partitioner miscompiles batch-axis
-    resharding of concatenated param stacks (observed on the (4, 2) test
-    mesh: a bare with_sharding_constraint + matmul returns wrong values),
-    so off-TPU the hint is a no-op and groups inherit their members'
-    layouts. The (B,) distance arrays still take the group spec through
-    ``sharding.opt_state_specs``.
+    ``out_ndims`` is a pytree of ints (the rank of each ``fn`` output,
+    all batch-leading; ``None`` marks outputs ``fn`` returns as ``None``).
+    Returns ``None`` when no mesh is set or B divides no DP-axis subset —
+    the caller keeps the unsharded dispatch.
+
+    ``pin_inputs=True`` (the driver sets it on the CPU backend for
+    multi-member groups) pins every array operand to a replicated layout
+    before the ``shard_map``: the CPU host-platform partitioner
+    miscompiles ``concatenate`` whose output is consumed batch-sharded
+    (WRONG VALUES, not a layout pessimization — even shard-aligned
+    concats; see the regression repro in tests/test_distributed.py).
+    Replicated-in, slice-per-shard is the layout that partitioner gets
+    right. TPU/GPU reshard gathered stacks directly and never pay the
+    replicated round-trip.
+    Single-stack groups (ConstraintSet resting storage) involve no concat
+    and skip the pin, so the at-scale path never round-trips X through a
+    replicated layout.
+
+    This replaces the old ``group_batch`` with_sharding_constraint hint,
+    which was a silent off-TPU no-op for the same partitioner bug and
+    left even TPU runs with an advisory-only layout.
     """
-    if _MESH is None or x.ndim < 3 or jax.default_backend() != "tpu":
-        return x
-    axes = _batch_axes(_MESH, x.shape[0])
+    if _MESH is None or batch < 2:
+        return None
+    axes = _batch_axes(_MESH, batch)
     if axes is None:
-        return x
-    spec = P(axes, *([None] * (x.ndim - 1)))
-    return jax.lax.with_sharding_constraint(x, NamedSharding(_MESH, spec))
+        return None
+    from .compat import shard_map
+
+    mesh = _MESH
+
+    def bspec(nd):
+        return P(axes, *([None] * (nd - 1)))
+
+    out_specs = jax.tree.map(bspec, out_ndims)
+    replicated = NamedSharding(mesh, P())
+
+    def wrapped(*args):
+        if pin_inputs:
+            args = tuple(
+                jax.lax.with_sharding_constraint(a, replicated)
+                if getattr(a, "ndim", 0) >= 1 else a
+                for a in args
+            )
+        in_specs = jax.tree.map(
+            lambda a: bspec(a.ndim)
+            if a.ndim >= 1 and a.shape[0] == batch else P(),
+            tuple(args),
+        )
+        return shard_map(
+            fn, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+            check_vma=False,
+        )(*args)
+
+    return wrapped
 
 
 def activation(x: jax.Array, model_dim: Optional[int] = None) -> jax.Array:

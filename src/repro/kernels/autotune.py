@@ -14,13 +14,22 @@ the planner times each once and keeps the fastest. Results are cached
 Cache file format (versioned; unknown versions are ignored, corrupt
 files are treated as empty):
 
-    {"version": 1,
+    {"version": 2,
      "plans": {"<key>": {"kind": "whole", "block_b": 64, "tile_n": 0,
                           "us_per_matrix": 12.3, "source": "autotune"}}}
 
-Keys are ``p=16,n=256,b=2048,dtype=float32,stages=pogo+trace,
-backend=tpu,interp=0`` — shape, dtype AND the fused-stage set, since the
-in-kernel base stage changes the working set and the arithmetic.
+Keys are ``p=16,n=256,b=256,dtype=float32,stages=pogo+trace,
+backend=tpu,device=TPU_v5e,interp=0`` — shape, dtype AND the fused-stage
+set (the in-kernel base stage changes the working set and the
+arithmetic). ``b`` is the batch the kernel actually dispatches on: under
+the sharded group schedule (DESIGN.md §Sharded execution) that is the
+per-shard **local** batch ``B / shard_count``, so a run resharded onto a
+different mesh times and caches its own plans instead of replaying
+winners tuned at another batch. ``device`` is the device kind
+(``jax.devices()[0].device_kind``) — a v5e winner is not a v4 winner.
+Version-1 entries (keyed on the pre-shard_map global B, no device kind)
+are invalidated wholesale by the version bump: the loader ignores them
+and the next store rewrites the file at version 2.
 
 Timing happens at *trace* time (plan selection is static): candidates run
 on concrete numpy operands inside ``jax.core.eval_context()``, the
@@ -52,20 +61,48 @@ def default_cache_path() -> str:
     )
 
 
+_DEVICE_KIND: Optional[str] = None
+
+
+def device_kind() -> str:
+    """Sanitized ``device_kind`` of device 0 (part of every plan key: a
+    plan tuned on one chip generation must not be replayed on another)."""
+    global _DEVICE_KIND
+    if _DEVICE_KIND is None:
+        import jax
+
+        try:
+            kind = jax.devices()[0].device_kind
+        except (IndexError, RuntimeError):  # pragma: no cover - no devices
+            kind = "unknown"
+        _DEVICE_KIND = str(kind).strip().replace(" ", "_").replace(",", "_")
+    return _DEVICE_KIND
+
+
 def plan_key(p: int, n: int, bsz: int, dtype, stages: str, *,
-             backend: str, interpret: bool) -> str:
+             backend: str, interpret: bool,
+             device: Optional[str] = None) -> str:
+    """Cache key for one kernel-plan decision. ``bsz`` is the batch the
+    kernel dispatch actually sees — the per-shard local batch under the
+    sharded group schedule, the global batch otherwise."""
+    dev = device_kind() if device is None else device
     return (
         f"p={p},n={n},b={bsz},dtype={dtype},stages={stages},"
-        f"backend={backend},interp={int(interpret)}"
+        f"backend={backend},device={dev},interp={int(interpret)}"
     )
 
 
 class PlanCache:
     """Two-level (memory + JSON file) plan cache, multi-process tolerant:
     writes re-read the file and replace it atomically, so concurrent
-    trainers merge rather than clobber."""
+    trainers merge rather than clobber.
 
-    VERSION = 1
+    VERSION 2: keys gained the device kind and ``b`` became the per-shard
+    local batch. Version-1 files (keyed on the global B, blind to the
+    device) are treated as empty — a resharded run must never replay a
+    winner tuned for a different batch or chip."""
+
+    VERSION = 2
 
     def __init__(self, path: Optional[str] = None):
         self.path = default_cache_path() if path is None else path

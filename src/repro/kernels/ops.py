@@ -9,9 +9,12 @@ Responsibilities:
     unsupported cases (complex dtype, find_root mode);
   * when several (block_b / tile_n) configs fit, the **autotuning
     planner** (``autotune.py``) times each once per
-    ``(p, n, B, dtype, stage-set)`` key and caches the winner in-process
-    and in a JSON file, so trainer restarts and benchmarks reuse tuned
-    plans;
+    ``(p, n, B, dtype, stage-set, backend, device kind)`` key and caches
+    the winner in-process and in a JSON file, so trainer restarts and
+    benchmarks reuse tuned plans. B is whatever batch this dispatch
+    sees: under the sharded group schedule that is the per-shard local
+    batch (the planner and autotuner key on the shard, not the global
+    stack);
   * run ``interpret=True`` automatically off-TPU (this container is
     CPU-only; the kernels are TPU-targeted and validated in interpret
     mode) and route the fused group step to its jnp oracle off-TPU.

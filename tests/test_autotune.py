@@ -201,3 +201,42 @@ def test_plan_end_to_end_uses_cache(tmp_cache, monkeypatch):
     plan_b = ops._plan(16, 256, 64, jnp.float32, "pogo", True, timer)
     assert len(calls) == n_first
     assert plan_a == plan_b
+
+
+# ------------------------------------------- cache-key staleness (ISSUE 4)
+
+
+def test_plan_key_includes_batch_and_device_kind():
+    """Resharded runs must not replay winners tuned at another batch or on
+    another chip: the key carries the (local) batch AND the device kind."""
+    k = autotune.plan_key(16, 256, 64, "float32", "fused_pogo+trace",
+                         backend="cpu", interpret=True)
+    assert "b=64," in k
+    assert f"device={autotune.device_kind()}" in k
+    k_local = autotune.plan_key(16, 256, 8, "float32", "fused_pogo+trace",
+                                backend="cpu", interpret=True)
+    assert k != k_local  # per-shard local batch is its own key
+    k_dev = autotune.plan_key(16, 256, 64, "float32", "fused_pogo+trace",
+                              backend="tpu", interpret=False,
+                              device="TPU_v4")
+    assert "device=TPU_v4" in k_dev
+
+
+def test_version1_cache_entries_are_invalidated(tmp_path):
+    """Pre-ISSUE-4 cache files (version 1: keys on the global B, no device
+    kind) must read as empty, not replay wrong winners after a reshard."""
+    path = tmp_path / "autotune.json"
+    key = "p=16,n=256,b=2048,dtype=float32,stages=pogo,backend=tpu,interp=0"
+    path.write_text(json.dumps({
+        "version": 1,
+        "plans": {key: {"kind": "whole", "block_b": 512, "tile_n": 0,
+                        "source": "autotune"}},
+    }))
+    cache = autotune.PlanCache(path=str(path))
+    assert cache.lookup(key) is None
+    # the next store rewrites the file at the current version, dropping v1
+    cache.store("k_new", {"kind": "whole", "block_b": 2, "tile_n": 0})
+    payload = json.load(open(path))
+    assert payload["version"] == autotune.PlanCache.VERSION == 2
+    assert key not in payload["plans"]
+    assert "k_new" in payload["plans"]

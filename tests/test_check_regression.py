@@ -1,0 +1,141 @@
+"""Perf-guard behavior: a disappeared baseline key must never pass silently.
+
+Satellite coverage for ISSUE 4: the guard previously reported
+baseline-only records as an aggregate count and returned 0 even with
+zero overlapping records — a renamed bench mode made the whole guard
+vacuous while CI stayed green.
+"""
+
+import json
+
+import pytest
+
+from benchmarks import check_regression as cr
+
+
+def _write(path, records):
+    payload = {"records": [
+        {"suite": name.split("/")[0], "name": name, "us_per_call": us,
+         "derived": ""}
+        for name, us in records.items()
+    ]}
+    path.write_text(json.dumps(payload))
+    return str(path)
+
+
+@pytest.fixture
+def files(tmp_path):
+    def make(baseline, current):
+        return (
+            _write(tmp_path / "baseline.json", baseline),
+            _write(tmp_path / "current.json", current),
+        )
+    return make
+
+
+def test_clean_pass(files, capsys):
+    b, c = files({"s/m/a": 100.0, "s/m/b": 50.0},
+                 {"s/m/a": 101.0, "s/m/b": 49.0})
+    assert cr.main(["--baseline", b, "--current", c]) == 0
+    assert "perf guard: OK" in capsys.readouterr().out
+
+
+def test_regression_fails(files):
+    b, c = files({"s/m/a": 100.0}, {"s/m/a": 140.0})
+    assert cr.main(["--baseline", b, "--current", c]) == 1
+
+
+def test_missing_key_warns_explicitly_by_default(files, capsys):
+    """Reduced grids may skip sizes, but every missing key is named."""
+    b, c = files({"s/m/a": 100.0, "s/m/gone": 50.0}, {"s/m/a": 100.0})
+    assert cr.main(["--baseline", b, "--current", c]) == 0
+    out = capsys.readouterr().out
+    assert "MISSING baseline key: s/m/gone" in out
+
+
+def test_missing_key_fails_when_requested(files):
+    b, c = files({"s/m/a": 100.0, "s/m/gone": 50.0}, {"s/m/a": 100.0})
+    assert cr.main(["--baseline", b, "--current", c,
+                    "--on-missing", "fail"]) == 1
+
+
+def test_lost_mode_family_always_fails(files, capsys):
+    """A whole baseline mode family with zero matches — while its suite
+    ran — is a renamed/dropped mode, not a grid reduction: hard fail."""
+    b, c = files(
+        {"s/old_mode/a": 100.0, "s/old_mode/b": 50.0, "s/keep/a": 10.0},
+        {"s/new_mode/a": 90.0, "s/keep/a": 10.0},
+    )
+    assert cr.main(["--baseline", b, "--current", c]) == 1
+    assert "old_mode" in capsys.readouterr().out
+
+
+def test_family_handles_deep_and_sized_names():
+    """The mode identity must survive both naming shapes in the repo:
+    size tokens anywhere (`N2048_p16`, `dev8`) and deeper mode paths
+    (`roofline/group_step/<mode>/<size>`)."""
+    assert cr._family("many_matrices/auto/N8_p4") == "many_matrices/auto"
+    assert cr._family("many_matrices/sharded_fused/N2048_p16/dev8") == \
+        "many_matrices/sharded_fused"
+    assert cr._family("roofline/group_step/fused/N16_p16") == \
+        "roofline/group_step/fused"
+    assert cr._family("s/m/gone") == "s/m"
+
+
+def test_lost_deep_mode_family_fails(files):
+    """Renaming a roofline mode (4-component names) must hard-fail even
+    though its 2-component prefix survives via the sibling mode."""
+    b, c = files(
+        {"roofline/group_step/fused/N16_p16": 5.0,
+         "roofline/group_step/unfused/N16_p16": 8.0},
+        {"roofline/group_step/fused_v2/N16_p16": 5.0,
+         "roofline/group_step/unfused/N16_p16": 8.0},
+    )
+    assert cr.main(["--baseline", b, "--current", c]) == 1
+
+
+def test_unrun_suite_is_not_a_missing_key(files, capsys):
+    """Baseline records from suites the current run never invoked
+    (--only filtering) say nothing about renames: ignored entirely."""
+    b, c = files({"other_suite/m/a": 100.0, "s/m/a": 10.0},
+                 {"s/m/a": 10.0})
+    assert cr.main(["--baseline", b, "--current", c]) == 0
+    assert "MISSING" not in capsys.readouterr().out
+
+
+def test_zero_overlap_fails(files):
+    """No matched records = vacuous guard: fail instead of green."""
+    b, c = files({"s/m/a": 100.0}, {"s/other/x": 10.0})
+    assert cr.main(["--baseline", b, "--current", c]) == 1
+
+
+def test_names_only_skips_timing_but_keeps_name_contracts(files):
+    """--names-only (the CI sharded guard): regressions pass, but a lost
+    family / vacuous overlap still fails."""
+    b, c = files({"s/m/a": 100.0}, {"s/m/a": 900.0})
+    assert cr.main(["--baseline", b, "--current", c, "--names-only"]) == 0
+    b, c = files({"s/m/a": 100.0}, {"s/other/x": 10.0})
+    assert cr.main(["--baseline", b, "--current", c, "--names-only"]) == 1
+
+
+def test_escape_hatch_downgrades_all_failures(files, monkeypatch):
+    monkeypatch.setenv("BENCH_REGRESSION_OK", "1")
+    b, c = files({"s/m/a": 100.0}, {"s/m/a": 140.0})
+    assert cr.main(["--baseline", b, "--current", c]) == 0
+    b, c = files({"s/m/a": 100.0}, {"s/other/x": 10.0})
+    assert cr.main(["--baseline", b, "--current", c]) == 0
+
+
+def test_committed_baseline_matches_smoke_subset():
+    """The committed baseline must keep records for every CI smoke size,
+    or the bench-smoke guard loses its overlap (the failure mode this
+    satellite exists to catch)."""
+    import os
+    path = os.path.join(
+        os.path.dirname(__file__), "..", "BENCH_many_matrices.json"
+    )
+    baseline = cr.load_records(path)
+    for mode in ("auto", "stacked", "auto_fused", "stacked_fused"):
+        for n_mat in (8, 16):
+            for p in (4, 16):
+                assert f"many_matrices/{mode}/N{n_mat}_p{p}" in baseline

@@ -210,6 +210,277 @@ def test_pipeline_parallel_matches_sequential():
     )
 
 
+def test_group_shard_map_replaces_cpu_miscompile():
+    """ISSUE-4 regression pin. The old ``shard_hints.group_batch`` hint was
+    a silent off-TPU no-op because the CPU host-platform partitioner
+    miscompiles a concatenate whose output is consumed batch-sharded
+    (WRONG VALUES — even shard-aligned concats). The shard_map schedule
+    with the replicated input pin must return exact values on that exact
+    repro shape (misaligned 3+5 member concat on the (4, 2) test mesh),
+    and the grouped driver must stay fp32-bit-identical to the unsharded
+    reference through it."""
+    _run(
+        """
+        from repro import optim
+        from repro.core import api, stiefel
+        from repro.distributed import shard_hints
+        from repro.launch.mesh import make_test_mesh
+
+        mesh = make_test_mesh(8)  # (data=4, model=2)
+
+        # --- the raw repro, routed through the new shard_map path
+        a = np.asarray(jax.random.normal(jax.random.PRNGKey(2), (3, 16, 256)))
+        b = np.asarray(jax.random.normal(jax.random.PRNGKey(3), (5, 16, 256)))
+        shard_hints.set_mesh(mesh)
+
+        def local(x):
+            return x @ jnp.swapaxes(x, -1, -2)
+
+        wrapped = shard_hints.shard_group_step(local, 8, 3, pin_inputs=True)
+        assert wrapped is not None
+        out = jax.jit(lambda a, b: wrapped(jnp.concatenate([a, b], 0)))(a, b)
+        x_np = np.concatenate([a, b], 0)
+        assert np.array_equal(np.asarray(out), x_np @ np.swapaxes(x_np, -1, -2)), \\
+            "shard_map group path returned wrong values on the concat repro"
+        shard_hints.set_mesh(None)
+
+        # --- the driver end to end: misaligned multi-member group
+        x = stiefel.random_stiefel(jax.random.PRNGKey(0), (8, 16, 256))
+        g = 0.1 * jax.random.normal(jax.random.PRNGKey(1), (8, 16, 256))
+        params = {"a": np.asarray(x[:3]), "b": np.asarray(x[3:])}
+        grads = {"a": np.asarray(g[:3]), "b": np.asarray(g[3:])}
+
+        def run(mesh, method, **kw):
+            shard_hints.set_mesh(mesh)
+            try:
+                opt = api.orthogonal(
+                    method, learning_rate=0.1,
+                    base_optimizer=optim.chain(optim.trace(0.3)), **kw)
+                s = opt.init(params)
+                u, s2 = jax.jit(opt.update)(grads, s, params)
+                return (jax.tree.map(np.asarray, u),
+                        np.asarray(s2.last_distance.per_group[0]))
+            finally:
+                shard_hints.set_mesh(None)
+
+        for method, kw in (("pogo", {}), ("pogo", {"use_kernel": True}),
+                           ("landing", {"safe_step": False}),
+                           ("rsdm", {})):
+            u_ref, d_ref = run(None, method, **kw)
+            u_sh, d_sh = run(mesh, method, **kw)
+            for lr, ls in zip(jax.tree.leaves(u_ref), jax.tree.leaves(u_sh)):
+                assert np.array_equal(lr, ls), (method, kw)
+            assert np.array_equal(d_ref, d_sh), (method, kw)
+            print(method, kw, "bit-identical")
+        print("OK")
+        """
+    )
+
+
+def test_sharded_fused_step_bit_identical_and_planner_local():
+    """The sharded fused group step on an 8-device data mesh is fp32
+    bit-identical per matrix to the single-device path (matrices are
+    independent; shard_map only changes which device holds which slice),
+    and the kernel planner keys on the PER-SHARD local batch."""
+    _run(
+        """
+        import tempfile
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        from repro import optim
+        from repro.core import api, stiefel
+        from repro.distributed import shard_hints
+        from repro.kernels import autotune
+        from repro.launch.mesh import make_mesh
+
+        # Isolate the plan cache: the negative "no b=64 key" assertion
+        # below must not see keys merged from the developer's real
+        # ~/.cache autotune file.
+        autotune.set_cache(autotune.PlanCache(
+            path=os.path.join(tempfile.mkdtemp(), "autotune.json")))
+
+        B, p, n = 64, 16, 256
+        x = stiefel.random_stiefel(jax.random.PRNGKey(0), (B, p, n))
+        g = 0.1 * jax.random.normal(jax.random.PRNGKey(1), (B, p, n))
+        cs = api.ConstraintSet.from_tree({"w": np.asarray(x)})
+        gs = api.ConstraintSet.from_tree({"w": np.asarray(g)})
+
+        def run(mesh, use_kernel=True):
+            shard_hints.set_mesh(mesh)
+            try:
+                opt = api.orthogonal(
+                    "pogo", learning_rate=0.1, use_kernel=use_kernel,
+                    base_optimizer=optim.chain(optim.trace(0.3)))
+                if mesh is not None:
+                    sh = NamedSharding(mesh, P("data", None, None))
+                    ps = api.ConstraintSet(
+                        cs.plan, tuple(jax.device_put(s, sh) for s in cs.stacks))
+                    gg = api.ConstraintSet(
+                        gs.plan, tuple(jax.device_put(s, sh) for s in gs.stacks))
+                else:
+                    ps, gg = cs, gs
+                s = opt.init(ps)
+                u, s2 = jax.jit(opt.update)(gg, s, ps)
+                return np.asarray(u.stacks[0]), np.asarray(
+                    s2.last_distance.per_group[0])
+            finally:
+                shard_hints.set_mesh(None)
+
+        mesh = make_mesh((8,), ("data",))
+        u_ref, d_ref = run(None)
+        u_sh, d_sh = run(mesh)
+        assert np.array_equal(u_ref, u_sh), "fused sharded step diverged"
+        assert np.array_equal(d_ref, d_sh), "sharded telemetry diverged"
+
+        # Per-shard planning: the landing kernel path consults the planner
+        # inside shard_map, so the cache key must carry B_local = 64/8.
+        shard_hints.set_mesh(mesh)
+        sh = NamedSharding(mesh, P("data", None, None))
+        ps = api.ConstraintSet(
+            cs.plan, tuple(jax.device_put(s, sh) for s in cs.stacks))
+        gg = api.ConstraintSet(
+            gs.plan, tuple(jax.device_put(s, sh) for s in gs.stacks))
+        opt2 = api.orthogonal("landing", learning_rate=0.1, use_kernel=True)
+        s = opt2.init(ps)
+        jax.jit(opt2.update)(gg, s, ps)
+        keys = list(autotune.get_cache()._mem)
+        assert any("b=8," in k and "stages=landing" in k for k in keys), keys
+        assert not any("b=64," in k for k in keys), keys
+        shard_hints.set_mesh(None)
+        print("OK")
+        """
+    )
+
+
+def test_constraint_step_donates_buffers_no_param_copy():
+    """The lowered resting-state step aliases (donates) the param stacks
+    and moment buffers input->output, and the optimized HLO contains no
+    param-stack-sized copy — the sharded step rewrites X in place."""
+    _run(
+        """
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        from repro import optim
+        from repro.core import api, stiefel
+        from repro.distributed import shard_hints
+        from repro.launch.mesh import make_mesh
+
+        B, p, n = 64, 16, 256
+        mesh = make_mesh((8,), ("data",))
+        shard_hints.set_mesh(mesh)
+        x = stiefel.random_stiefel(jax.random.PRNGKey(0), (B, p, n))
+        g = 0.1 * jax.random.normal(jax.random.PRNGKey(1), (B, p, n))
+        sh = NamedSharding(mesh, P("data", None, None))
+        cs0 = api.ConstraintSet.from_tree({"w": np.asarray(x)})
+        gs0 = api.ConstraintSet.from_tree({"w": np.asarray(g)})
+        params = api.ConstraintSet(
+            cs0.plan, tuple(jax.device_put(s, sh) for s in cs0.stacks))
+        grads = api.ConstraintSet(
+            gs0.plan, tuple(jax.device_put(s, sh) for s in gs0.stacks))
+        opt = api.orthogonal(
+            "pogo", learning_rate=0.1, use_kernel=True,
+            base_optimizer=optim.chain(optim.trace(0.3)))
+        state = opt.init(params)
+        step = api.constraint_step(opt)
+        txt = step.lower(params, state, grads).compile().as_text()
+        assert "input_output_alias" in txt, "no donation in lowered step"
+        # No copy of the param stack, neither global (64,...) nor the
+        # per-device local shard (8,...): donation means in-place rewrite.
+        bad = [ln for ln in txt.splitlines()
+               if "copy(" in ln and ("f32[64,16,256]" in ln
+                                     or "f32[8,16,256]" in ln)]
+        assert not bad, bad
+        # and the step actually runs with donated inputs
+        p2, s2 = step(params, state, grads)
+        assert p2.stacks[0].sharding.spec == P("data", None, None)
+        shard_hints.set_mesh(None)
+        print("OK")
+        """
+    )
+
+
+def test_checkpoint_sharded_restore_smaller_mesh(tmp_path):
+    """Sharded OrthoState/GroupedDistances written on an 8-device mesh
+    restore bit-exactly onto a 4-device mesh (elastic resharding), with
+    the restored leaves placed batch-sharded on the new mesh."""
+    ckpt_dir = str(tmp_path / "ckpt")
+    save_body = f"""
+        import hashlib, json, os
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        from repro import optim
+        from repro.checkpoint import checkpoint as ckpt
+        from repro.core import api, stiefel
+        from repro.distributed import shard_hints
+        from repro.launch.mesh import make_mesh
+
+        DIR = {ckpt_dir!r}
+        B, p, n = 64, 16, 256
+        mesh = make_mesh((8,), ("data",))
+        shard_hints.set_mesh(mesh)
+        x = stiefel.random_stiefel(jax.random.PRNGKey(0), (B, p, n))
+        g = 0.1 * jax.random.normal(jax.random.PRNGKey(1), (B, p, n))
+        sh = NamedSharding(mesh, P("data", None, None))
+        cs0 = api.ConstraintSet.from_tree({{"w": np.asarray(x)}})
+        gs0 = api.ConstraintSet.from_tree({{"w": np.asarray(g)}})
+        params = api.ConstraintSet(
+            cs0.plan, tuple(jax.device_put(s, sh) for s in cs0.stacks))
+        grads = api.ConstraintSet(
+            gs0.plan, tuple(jax.device_put(s, sh) for s in gs0.stacks))
+        opt = api.orthogonal(
+            "pogo", learning_rate=0.1, use_kernel=True,
+            base_optimizer=optim.chain(optim.trace(0.3)))
+        state = opt.init(params)
+        step = api.constraint_step(opt)
+        params, state = step(params, state, grads)  # sharded dists + moments
+        assert state.last_distance.per_group[0].sharding.spec == P("data")
+        ckpt.save(DIR, 7, (params, state))
+        digests = [hashlib.md5(np.asarray(l).tobytes()).hexdigest()
+                   for l in jax.tree.leaves((params, state))]
+        with open(os.path.join(DIR, "digests.json"), "w") as f:
+            json.dump(digests, f)
+        print("OK")
+    """
+    restore_body = f"""
+        import hashlib, json, os
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        from repro import optim
+        from repro.checkpoint import checkpoint as ckpt
+        from repro.core import api, stiefel
+        from repro.launch.mesh import make_mesh
+
+        DIR = {ckpt_dir!r}
+        B, p, n = 64, 16, 256
+        mesh = make_mesh((4,), ("data",))
+        cs_like = api.ConstraintSet.from_tree(
+            {{"w": np.zeros((B, p, n), np.float32)}})
+        opt = api.orthogonal(
+            "pogo", learning_rate=0.1, use_kernel=True,
+            base_optimizer=optim.chain(optim.trace(0.3)))
+        like = (cs_like, opt.init(cs_like))
+
+        def shard_for(leaf):
+            if leaf.ndim >= 1 and leaf.shape[0] == B:
+                return NamedSharding(
+                    mesh, P("data", *([None] * (leaf.ndim - 1))))
+            return NamedSharding(mesh, P())
+
+        shardings = jax.tree.map(shard_for, like)
+        step, restored = ckpt.restore_latest(DIR, like, shardings=shardings)
+        assert step == 7
+        with open(os.path.join(DIR, "digests.json")) as f:
+            digests = json.load(f)
+        leaves = jax.tree.leaves(restored)
+        assert len(leaves) == len(digests)
+        for leaf, d in zip(leaves, digests):
+            assert hashlib.md5(np.asarray(leaf).tobytes()).hexdigest() == d
+        rp, rs = restored
+        assert rp.stacks[0].sharding.spec == P("data", None, None)
+        assert len(rp.stacks[0].sharding.mesh.devices) == 4
+        assert rs.last_distance.per_group[0].sharding.spec == P("data")
+        print("OK")
+    """
+    _run(save_body, n_devices=8)
+    _run(restore_body, n_devices=4)
+
+
 def test_batch_spec_divisibility_fallback():
     _run(
         """
