@@ -8,7 +8,7 @@ as modules and keep thin back-compat constructors (``core.pogo.pogo`` is
 ``orthogonal("pogo", ...)``).
 """
 
-from . import api, landing, pogo, quartic, rgd, rsdm, slpg, stiefel
+from . import api, landing, pogo, quartic, rgd, rsdm, schedule, slpg, stiefel
 from .api import (
     METHODS,
     ConstraintSet,
@@ -39,6 +39,7 @@ from .pogo import PogoState
 
 __all__ = [
     "api",
+    "schedule",
     "stiefel",
     "quartic",
     "pogo",

@@ -40,8 +40,6 @@ from __future__ import annotations
 
 import dataclasses
 import functools
-import math
-import warnings
 from typing import Any, Callable, NamedTuple, Optional
 
 import jax
@@ -49,140 +47,54 @@ import jax.numpy as jnp
 
 from ..optim.transform import GradientTransformation
 from . import quartic, stiefel
+from .schedule import (  # noqa: F401  (re-exported public API)
+    GROUPINGS,
+    GroupMember,
+    GroupPlan,
+    GroupSpec,
+    plan_groups,
+)
 
 Array = jax.Array
 
 
 # ---------------------------------------------------------- constraint groups
-
-
-@dataclasses.dataclass(frozen=True)
-class GroupMember:
-    """One param leaf's slot inside a :class:`GroupSpec` batch.
-
-    ``leaf`` is the flat index in the param tree, ``lead`` the leaf's
-    leading stack dims (flattened into the group's batch axis), ``offset``
-    the leaf's first row in the stacked ``(B, p, n)`` tensor, and
-    ``key_base`` the leaf's first slot in the step's stacked RNG key array
-    (global matrix id, counted in flat-leaf order so the key a matrix sees
-    is independent of how leaves were bucketed).
-    """
-
-    leaf: int
-    lead: tuple[int, ...]
-    transpose: bool
-    offset: int
-    key_base: int
-
-    @property
-    def count(self) -> int:
-        return math.prod(self.lead)
-
-
-@dataclasses.dataclass(frozen=True)
-class GroupSpec:
-    """One constraint group: every member shares the manifold-orientation
-    shape ``(p, n)`` (p <= n; tall leaves enter transposed) and dtype, so
-    the whole group runs the two-stage update as ONE batched ``(B, p, n)``
-    dispatch. ``batch`` is B = sum of member matrix counts."""
-
-    p: int
-    n: int
-    dtype: Any  # np.dtype (hashable)
-    members: tuple[GroupMember, ...]
-    batch: int
-
-    def sharding_hint(self):
-        """(axis, size) hint for distributing the group: shard the batch
-        axis (dim 0 of the stacked tensor / the ``(B,)`` distance array)
-        across the data-parallel mesh axes. Made concrete by
-        ``distributed.sharding.opt_state_specs`` (resting storage) and by
-        the driver's ``shard_map`` execution schedule
-        (``distributed.shard_hints.shard_group_step``)."""
-        return ("batch", self.batch)
-
-
-@jax.tree_util.register_static
-@dataclasses.dataclass(frozen=True)
-class GroupPlan:
-    """Static bucketing of a param tree into constraint groups.
-
-    Derived from (static) leaf shapes/dtypes at trace time; hashable, so it
-    rides inside :class:`OrthoState` as a zero-leaf pytree node and inside
-    jit caches for free. ``grouping="auto"`` buckets by (manifold shape,
-    dtype); ``grouping="per_leaf"`` makes one group per leaf (the unrolled
-    back-compat reference path)."""
-
-    groups: tuple[GroupSpec, ...]
-    treedef: Any  # the param treedef (for leaf-wise telemetry views)
-    n_leaves: int
-    n_matrices: int
-
-
-def plan_groups(leaves, treedef, grouping: str = "auto") -> GroupPlan:
-    """Bucket flat param ``leaves`` into :class:`GroupSpec` batches.
-
-    Rules (DESIGN.md §Constraint groups): each leaf ``(..., p0, n0)`` is a
-    stack of ``prod(lead)`` constrained matrices; tall leaves (p0 > n0) are
-    constrained along their transpose, so the bucket key is the manifold
-    orientation ``(min, max)`` plus dtype. Groups keep first-appearance
-    order; members keep flat-leaf order within a group.
-    """
-    if grouping not in ("auto", "per_leaf"):
-        raise ValueError(
-            f"grouping must be 'auto' or 'per_leaf', got {grouping!r}"
-        )
-    buckets: dict = {}
-    order: list = []
-    key_base = 0
-    for i, x in enumerate(leaves):
-        if x.ndim < 2:
-            raise ValueError(
-                f"orthoptimizer leaves must be matrices (..., p, n); leaf {i} "
-                f"has shape {x.shape}"
-            )
-        p0, n0 = x.shape[-2], x.shape[-1]
-        transpose = p0 > n0
-        p, n = (n0, p0) if transpose else (p0, n0)
-        lead = tuple(x.shape[:-2])
-        count = math.prod(lead)
-        key = (p, n, jnp.dtype(x.dtype)) if grouping == "auto" else ("leaf", i)
-        if key not in buckets:
-            buckets[key] = {"p": p, "n": n, "dtype": jnp.dtype(x.dtype),
-                            "members": [], "batch": 0}
-            order.append(key)
-        b = buckets[key]
-        b["members"].append(GroupMember(
-            leaf=i, lead=lead, transpose=transpose,
-            offset=b["batch"], key_base=key_base,
-        ))
-        b["batch"] += count
-        key_base += count
-    groups = tuple(
-        GroupSpec(p=b["p"], n=b["n"], dtype=b["dtype"],
-                  members=tuple(b["members"]), batch=b["batch"])
-        for b in (buckets[k] for k in order)
-    )
-    return GroupPlan(groups=groups, treedef=treedef,
-                     n_leaves=len(leaves), n_matrices=key_base)
+#
+# The bucketing rules and the ragged megagroup cost model live in
+# core/schedule.py (GroupMember / GroupSpec / GroupPlan / plan_groups are
+# re-exported here unchanged). This module owns the runtime side: gather/
+# scatter between leaves and stacked group tensors, and the driver.
 
 
 def _gather_group(group: GroupSpec, leaves) -> Array:
-    """Stack a group's member leaves into one ``(B, p, n)`` tensor."""
+    """Stack a group's member leaves into one ``(B, p, n)`` tensor.
+
+    Padded megagroup members with a smaller true shape are zero-padded to
+    the group's dispatch shape — exactly inert through every stage (the
+    mask contract in DESIGN.md §Ragged scheduling); :func:`_scatter_group`
+    crops the padding back off."""
     parts = []
     for m in group.members:
         x = leaves[m.leaf]
         if m.transpose:
             x = jnp.swapaxes(x, -1, -2)
-        parts.append(jnp.reshape(x, (m.count, group.p, group.n)))
+        mp, mn = m.shape_in(group)
+        x = jnp.reshape(x, (m.count, mp, mn))
+        if (mp, mn) != (group.p, group.n):
+            x = jnp.pad(
+                x, ((0, 0), (0, group.p - mp), (0, group.n - mn))
+            )
+        parts.append(x)
     return parts[0] if len(parts) == 1 else jnp.concatenate(parts, axis=0)
 
 
 def _scatter_group(group: GroupSpec, stacked: Array, out: list) -> None:
-    """Split a group's ``(B, p, n)`` result back into member-leaf layout."""
+    """Split a group's ``(B, p, n)`` result back into member-leaf layout
+    (cropping each padded megagroup member to its true shape)."""
     for m in group.members:
-        u = stacked[m.offset:m.offset + m.count]
-        u = jnp.reshape(u, (*m.lead, group.p, group.n))
+        mp, mn = m.shape_in(group)
+        u = stacked[m.offset:m.offset + m.count, :mp, :mn]
+        u = jnp.reshape(u, (*m.lead, mp, mn))
         if m.transpose:
             u = jnp.swapaxes(u, -1, -2)
         out[m.leaf] = u
@@ -216,7 +128,12 @@ class ConstraintSet:
         params = cs.apply(u).to_tree()                # unstack at the end
 
     ``from_tree``/``to_tree`` round-trip exactly (tall leaves transpose in
-    and back out).
+    and back out). ``from_tree(tree, grouping="padded")`` stores PADDED
+    stacks: heterogeneous shapes merge into few megagroup stacks
+    (zero-padded, true shapes in ``GroupSpec.valid``) and ``to_tree``
+    crops them back. The driver consumes a ConstraintSet through
+    :meth:`stacked_plan`, so the set's own grouping — including its
+    ragged metadata — wins over the optimizer's ``grouping`` config.
     """
 
     def __init__(self, plan: GroupPlan, stacks: tuple):
@@ -243,6 +160,30 @@ class ConstraintSet:
         return ConstraintSet(
             self.plan,
             tuple(s + u for s, u in zip(self.stacks, updates.stacks)),
+        )
+
+    def stacked_plan(self) -> GroupPlan:
+        """The :class:`GroupPlan` of this set's OWN stack leaves: one
+        single-member group per stack (each stack IS its group's batch),
+        preserving the source plan's per-matrix true shapes
+        (``GroupSpec.valid``). This is what the driver plans with when it
+        consumes a ConstraintSet directly — a fresh re-bucketing of the
+        stacks would see only the padded dispatch shapes and lose the
+        ragged mask contract."""
+        groups = []
+        key_base = 0
+        for i, g in enumerate(self.plan.groups):
+            groups.append(GroupSpec(
+                p=g.p, n=g.n, dtype=g.dtype, batch=g.batch, valid=g.valid,
+                members=(GroupMember(
+                    leaf=i, lead=(g.batch,), transpose=False, offset=0,
+                    key_base=key_base, p=g.p, n=g.n,
+                ),),
+            ))
+            key_base += g.batch
+        return GroupPlan(
+            groups=tuple(groups), treedef=jax.tree.structure(self),
+            n_leaves=len(self.stacks), n_matrices=key_base,
         )
 
     def tree_flatten(self):
@@ -307,18 +248,20 @@ class OrthoState(NamedTuple):
     groups): a
     :class:`GroupedDistances` of per-group ``(B,)`` fp32 arrays holding
     ``||X_b X_b^H - I||_F`` of the *post-update* iterate, measured in the
-    manifold orientation (tall leaves are transposed first). Consume it
+    manifold orientation (tall leaves are transposed first; ragged
+    megagroup members on their true ``p_i`` rows only). Consume it
     through :func:`max_distance` (global max) or :func:`leaf_distances`
-    (old per-leaf scalar view); the pre-group leaf-wise scalar pytree
-    layout is still readable through both for one release. ``rng`` advances
-    only for methods with ``needs_rng``; ``extras`` holds method-specific
-    state (empty for all built-ins).
+    (old per-leaf scalar view). The PR-2 leaf-wise scalar-pytree layout
+    is no longer readable in memory (its one-release window has passed);
+    ``checkpoint.restore`` still adapts pre-group checkpoints. ``rng``
+    advances only for methods with ``needs_rng``; ``extras`` holds
+    method-specific state (empty for all built-ins).
     """
 
     count: jax.Array
     base_state: tuple  # state of the wrapped (linear) base optimizer
     rng: jax.Array
-    last_distance: Any  # GroupedDistances (legacy: per-leaf scalar pytree)
+    last_distance: Any  # GroupedDistances
     extras: Any = ()
 
 
@@ -333,7 +276,12 @@ class StepCtx:
     ``(B, 2)`` for methods with ``needs_rng`` — one independent key per
     constrained matrix, so grouped and per-leaf dispatch draw identical
     streams. ``scratch`` carries whatever stage 1 wants stage 2 to see
-    (e.g. the Cayley generator).
+    (e.g. the Cayley generator). For ragged (padded megagroup) batches
+    ``pv``/``nv`` are per-matrix ``(B,)`` int32 true-shape arrays (valid
+    rows / cols); ``None`` for uniform groups. Zero padding is inert
+    through the polynomial stages, so a stage only consults ``pv`` where
+    an identity enters its algebra (telemetry residuals, the safe-step
+    quartic, the find_root polynomial).
     """
 
     x: Array
@@ -343,6 +291,8 @@ class StepCtx:
     key: Optional[jax.Array]
     use_kernel: bool
     scratch: dict
+    pv: Optional[jax.Array] = None
+    nv: Optional[jax.Array] = None
 
 
 # ------------------------------------------------------------------- methods
@@ -381,6 +331,18 @@ class Method:
     safe step have no fused form). The driver routes through
     ``fused_step`` when the stage, the instance, the base optimizer
     (``optim.fused.resolve_fused_base``) and every group dtype allow it.
+
+    ``ragged_ready()`` gates the padded megagroup schedule
+    (``grouping="padded"``, DESIGN.md §Ragged scheduling): it must return
+    True only when the method's stages are exactly inert on zero-padded
+    rows/cols — true for the polynomial family (POGO, Landing, SLPG,
+    Cayley / Newton-Schulz retractions), false for factorization-based
+    retractions (QR/polar: the orthogonal completion of a rank-deficient
+    padded matrix is arbitrary) and for shape-dependent sampling (RSDM
+    draws Haar St(r, p_i) — a padded draw is a different distribution).
+    The default is False: a registered method must opt in explicitly.
+    The driver degrades ``grouping="padded"`` to ``"auto"`` for methods
+    that are not ragged-ready (parity preserved, fewer merged dispatches).
     """
 
     name: str = "?"
@@ -400,6 +362,10 @@ class Method:
         """Instance-level gate for the fused group step."""
         return self.fused_stage is not None
 
+    def ragged_ready(self) -> bool:
+        """Instance-level gate for padded (ragged megagroup) batches."""
+        return False
+
     def fused_step(self, x: Array, g: Array, ctx: StepCtx, slots: FusedSlots):
         """One fused group step: ``(x_next, mu', nu', dist)``."""
         from ..kernels import ops as kops
@@ -414,6 +380,7 @@ class Method:
             mu=slots.mu,
             nu=slots.nu,
             count=slots.count,
+            pv=ctx.pv,
         )
 
 
@@ -448,12 +415,16 @@ class Pogo(Method):
     def fused_ready(self) -> bool:
         return not self.find_root  # the quartic root has no fused form
 
+    def ragged_ready(self) -> bool:
+        # Pure polynomial stages; find_root masks the quartic's identity.
+        return True
+
     def direction(self, x, g, ctx):
         return stiefel.riemannian_gradient(x, g)
 
     def land(self, m, ctx):
         if self.find_root:
-            lam = quartic.optimal_lambda(m, fallback=self.lam)
+            lam = quartic.optimal_lambda(m, fallback=self.lam, pv=ctx.pv)
             lam = lam[..., None, None].astype(_scalar_dtype(m.dtype))
         else:
             lam = jnp.asarray(self.lam, _scalar_dtype(m.dtype))
@@ -463,12 +434,17 @@ class Pogo(Method):
     def kernel_update(self, x, g, ctx):
         from ..kernels import ops as kops
 
+        if self.find_root and ctx.pv is not None:
+            # The fused find_root dispatch has no mask operand; the ragged
+            # quartic needs the masked identity, so run the stages inline
+            # (still one batched XLA program per group).
+            return self.land(x - ctx.eta * self.direction(x, g, ctx), ctx)
         return kops.pogo_update(
             x, g, ctx.eta, lam=self.lam, find_root=self.find_root
         )
 
 
-def _safe_eta(x, direction, eta0, eps):
+def _safe_eta(x, direction, eta0, eps, pv=None):
     """Exact safe step: largest eta in (0, eta0] with dist(X - eta*D) <= eps.
 
     dist^2(eta) is the quartic ``||C + eta Dm + eta^2 Em||^2`` with
@@ -476,11 +452,20 @@ def _safe_eta(x, direction, eta0, eps):
     dist^2(eta) = eps^2 and take the smallest positive real root; if none
     is below eta0, eta0 itself is safe. Strictly tighter than the paper's
     conservative bound, same O(p^2 n) cost (Lemma 3.1 machinery).
+
+    ``pv`` masks the identity for ragged (zero-padded) batches: a padded
+    diagonal entry would otherwise read as a distance-1 violation and
+    poison ``a0`` (the `already violating` branch would fire for every
+    padded member).
     """
     xh = jnp.conj(jnp.swapaxes(x, -1, -2))
     dh = jnp.conj(jnp.swapaxes(direction, -1, -2))
     p = x.shape[-2]
-    c = x @ xh - jnp.eye(p, dtype=x.dtype)
+    eye = (
+        jnp.eye(p, dtype=x.dtype) if pv is None
+        else stiefel.masked_eye(p, pv, x.dtype)
+    )
+    c = x @ xh - eye
     dm = -(x @ dh + direction @ xh)
     em = direction @ dh
 
@@ -525,6 +510,11 @@ class Landing(Method):
         # it has no in-kernel form, so only the fixed-step variant fuses.
         return not self.safe_step
 
+    def ragged_ready(self) -> bool:
+        # Field and penalty are polynomial ((A - I)X has zero padded rows);
+        # the safe-step quartic masks its identity via ctx.pv.
+        return True
+
     def _field(self, x, g, ctx):
         if ctx.use_kernel and not jnp.issubdtype(x.dtype, jnp.complexfloating):
             from ..kernels import ops as kops
@@ -535,9 +525,9 @@ class Landing(Method):
     def direction(self, x, g, ctx):
         d = self._field(x, g, ctx)
         if self.safe_step:
-            ctx.eta = _safe_eta(x, d, ctx.eta, self.eps)[..., None, None].astype(
-                jnp.float32
-            )
+            ctx.eta = _safe_eta(
+                x, d, ctx.eta, self.eps, pv=ctx.pv
+            )[..., None, None].astype(jnp.float32)
         return d
 
 
@@ -565,9 +555,9 @@ class LandingPC(Landing):
         nn = jnp.sqrt(jnp.sum(jnp.abs(n) ** 2, axis=(-2, -1), keepdims=True))
         lam_eff = self.lam * (1.0 + rn / (nn + 1e-12))
         d = r + lam_eff.astype(r.dtype) * n
-        ctx.eta = _safe_eta(x, d, ctx.eta, self.eps)[..., None, None].astype(
-            jnp.float32
-        )
+        ctx.eta = _safe_eta(
+            x, d, ctx.eta, self.eps, pv=ctx.pv
+        )[..., None, None].astype(jnp.float32)
         return d
 
 
@@ -588,6 +578,13 @@ class Rgd(Method):
             raise ValueError(f"unknown retraction {retraction!r}")
         self.retraction = retraction
         self.multiplicative = retraction == "cayley"
+
+    def ragged_ready(self) -> bool:
+        # Cayley (block-diagonal solve) and Newton-Schulz (polynomial) are
+        # pad-inert; QR/polar factor a rank-deficient padded matrix whose
+        # orthogonal completion is arbitrary — the driver keeps exact
+        # (auto) buckets for those.
+        return self.retraction in ("cayley", "newton_schulz")
 
     def direction(self, x, g, ctx):
         if self.retraction == "cayley":
@@ -619,6 +616,9 @@ class Slpg(Method):
     """
 
     name = "slpg"
+
+    def ragged_ready(self) -> bool:
+        return True  # direction and land are pure polynomials
 
     def direction(self, x, g, ctx):
         return g - stiefel.sym(x @ jnp.conj(jnp.swapaxes(g, -1, -2))) @ x
@@ -681,7 +681,10 @@ class OrthoConfig:
     safety_project_every: int = 0  # Newton-Schulz re-projection cadence
     seed: int = 0  # PRNG seed for stochastic methods (RSDM)
     grouping: str = "auto"  # "auto": batch same-(shape,dtype) leaves into
-    # one (B, p, n) dispatch per group; "per_leaf": unrolled reference path
+    # one (B, p, n) dispatch per group; "per_leaf": unrolled reference
+    # path; "padded": merge heterogeneous shapes into few padded
+    # megagroups (cost model in core/schedule.py; degrades to "auto" for
+    # methods without ragged support)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -797,6 +800,11 @@ def orthogonal(
     shape, dtype) bucket — so thousands of constrained matrices cost a
     handful of kernel launches instead of an unrolled per-leaf loop.
     ``grouping="per_leaf"`` keeps the one-dispatch-per-leaf reference path.
+    ``grouping="padded"`` additionally merges heterogeneous-shape buckets
+    into a few zero-padded megagroups (DESIGN.md §Ragged scheduling) —
+    the mixed-shape layer zoo of a real model collapses toward one
+    dispatch, with per-matrix true shapes riding as masked ``(B,)``
+    operands.
     """
     if method not in METHODS:
         raise ValueError(f"unknown orthoptimizer {method!r} (have {sorted(METHODS)})")
@@ -886,15 +894,37 @@ def _build(method: Method, cfg: OrthoConfig) -> GradientTransformation:
         and method.fused_stage is not None
         and method.fused_ready()
     )
-    if cfg.grouping not in ("auto", "per_leaf"):
+    if cfg.grouping not in GROUPINGS:
         raise ValueError(
-            f"grouping must be 'auto' or 'per_leaf', got {cfg.grouping!r}"
+            f"grouping must be one of {GROUPINGS}, got {cfg.grouping!r}"
         )
+    # Ragged megagroups require every stage to be exactly inert on
+    # zero-padded rows/cols; methods that are not (QR/polar retractions,
+    # RSDM's shape-dependent sampling) keep the exact auto buckets.
+    grouping = cfg.grouping
+    if grouping == "padded" and not method.ragged_ready():
+        grouping = "auto"
+
+    def make_plan(params, leaves, treedef) -> GroupPlan:
+        """The step's GroupPlan (static, trace-time). A ConstraintSet
+        carries its own plan — including padded-stack ragged metadata a
+        re-bucketing of the stacks could not see — so the set's grouping
+        wins over the optimizer config."""
+        if isinstance(params, ConstraintSet):
+            plan = params.stacked_plan()
+            if any(g.ragged for g in plan.groups) and not method.ragged_ready():
+                raise ValueError(
+                    f"{method.name} has no ragged (padded megagroup) "
+                    "support; rebuild the ConstraintSet with "
+                    "grouping='auto' or 'per_leaf'"
+                )
+            return plan
+        return plan_groups(leaves, treedef, grouping)
 
     def init(params):
         base_state = base.init(params) if base else ()
         leaves, treedef = jax.tree.flatten(params)
-        plan = plan_groups(leaves, treedef, cfg.grouping)
+        plan = make_plan(params, leaves, treedef)
         dist = GroupedDistances(
             plan=plan,
             per_group=tuple(
@@ -918,7 +948,7 @@ def _build(method: Method, cfg: OrthoConfig) -> GradientTransformation:
         # Bucketing is trace-time work on static shapes: under jit it runs
         # once per compilation, and the whole update below is one batched
         # dispatch per group instead of one per leaf.
-        plan = plan_groups(leaves, treedef, cfg.grouping)
+        plan = make_plan(params, leaves, treedef)
         # Fused routing is a static (trace-time) decision: complex groups
         # have no fused kernel, and mixing fused/unfused groups would split
         # the base-optimizer state update, so any complex group falls the
@@ -959,13 +989,21 @@ def _build(method: Method, cfg: OrthoConfig) -> GradientTransformation:
         else:
             rng, all_keys = state.rng, None
 
+        def _measure(y, pv):
+            """Post-update feasibility of the stored iterate; ragged
+            groups mask the padded diagonal per matrix."""
+            if pv is None:
+                return stiefel.manifold_distance(y)
+            return stiefel.manifold_distance_masked(y, pv)
+
         def group_step(group: GroupSpec, xg: Array, gg: Array, keys, eta,
-                       count):
+                       count, pv, nv):
             """One batched two-stage update for a whole constraint group.
 
             Batch-parallel by construction (every operand and output is
-            batch-leading or replicated), so it runs unchanged per shard
-            under the :func:`_run_group_step` shard_map schedule.
+            batch-leading or replicated — including the ragged ``(B,)``
+            true-shape arrays), so it runs unchanged per shard under the
+            :func:`_run_group_step` shard_map schedule.
             """
             x32 = xg.astype(_accum_dtype(xg.dtype))
             g32 = gg.astype(x32.dtype)
@@ -978,6 +1016,8 @@ def _build(method: Method, cfg: OrthoConfig) -> GradientTransformation:
                 key=keys,
                 use_kernel=cfg.use_kernel,
                 scratch={},
+                pv=pv,
+                nv=nv,
             )
             if has_kernel:
                 x_next = method.kernel_update(x32, g32, ctx)
@@ -997,22 +1037,23 @@ def _build(method: Method, cfg: OrthoConfig) -> GradientTransformation:
             # Telemetry rides the batch: one (B,) distance array per group
             # instead of thousands of per-leaf scalars.
             y = (xg + ug).astype(jnp.promote_types(xg.dtype, jnp.float32))
-            dist = stiefel.manifold_distance(y).astype(jnp.float32)
+            dist = _measure(y, pv).astype(jnp.float32)
             return ug, dist
 
         def group_step_fused(group: GroupSpec, xg: Array, gg: Array,
-                             mug, nug, eta, count, bcount):
+                             mug, nug, eta, count, bcount, pv, nv):
             """One single-pass fused group step: the base-optimizer moment
             update, direction + leap + land and the feasibility telemetry
             come back from one kernel (or its jnp oracle off-TPU) — no
             separate base pass, no telemetry gram over X'. Batch-parallel:
             under the shard_map schedule the PR-3 kernel runs per shard on
-            its local slice (planner keyed on the per-shard batch)."""
+            its local slice (planner keyed on the per-shard batch; the
+            ragged mask arrays shard with the stack)."""
             x32 = xg.astype(_accum_dtype(xg.dtype))
             g32 = gg.astype(x32.dtype)
             ctx = StepCtx(
                 x=x32, g=g32, eta=eta, count=count, key=None,
-                use_kernel=cfg.use_kernel, scratch={},
+                use_kernel=cfg.use_kernel, scratch={}, pv=pv, nv=nv,
             )
             slots = FusedSlots(
                 kind=fused_base.kind, hyper=fused_base.hyper,
@@ -1026,7 +1067,7 @@ def _build(method: Method, cfg: OrthoConfig) -> GradientTransformation:
                 def _proj(args):
                     v, _ = args
                     w = stiefel.project_newton_schulz(v)
-                    return w, stiefel.manifold_distance(w).astype(jnp.float32)
+                    return w, _measure(w, pv).astype(jnp.float32)
 
                 x_next, dist = jax.lax.cond(
                     do, _proj, lambda args: args, (x_next, dist)
@@ -1040,7 +1081,7 @@ def _build(method: Method, cfg: OrthoConfig) -> GradientTransformation:
             # storage dtype is already the accumulation dtype.
             if xg.dtype != x32.dtype:
                 y = (xg + ug).astype(jnp.promote_types(xg.dtype, jnp.float32))
-                dist = stiefel.manifold_distance(y)
+                dist = _measure(y, pv)
             return ug, dist.astype(jnp.float32), mu2, nu2
 
         out: list = [None] * len(leaves)
@@ -1054,6 +1095,14 @@ def _build(method: Method, cfg: OrthoConfig) -> GradientTransformation:
         for group in plan.groups:
             xg = _gather_group(group, leaves)
             gg = _gather_group(group, gleaves)
+            # Ragged megagroups carry their per-matrix true shapes as
+            # (B,) operands: batch-leading, so the shard_map schedule
+            # partitions them with the stack and each shard masks exactly
+            # its local matrices.
+            pvnv = group.valid_shape_arrays()
+            pv = nv = None
+            if pvnv is not None:
+                pv, nv = jnp.asarray(pvnv[0]), jnp.asarray(pvnv[1])
             if fused_now:
                 mug = (
                     _gather_group(group, mu_leaves)
@@ -1065,7 +1114,7 @@ def _build(method: Method, cfg: OrthoConfig) -> GradientTransformation:
                 )
                 ug, dist, mu2, nu2 = _run_group_step(
                     functools.partial(group_step_fused, group), group,
-                    (xg, gg, mug, nug, eta32, count, base_count),
+                    (xg, gg, mug, nug, eta32, count, base_count, pv, nv),
                     (3, 1, None if mug is None else 3,
                      None if nug is None else 1),
                 )
@@ -1086,7 +1135,7 @@ def _build(method: Method, cfg: OrthoConfig) -> GradientTransformation:
                     )
                 ug, dist = _run_group_step(
                     functools.partial(group_step, group), group,
-                    (xg, gg, keys, eta32, count), (3, 1),
+                    (xg, gg, keys, eta32, count, pv, nv), (3, 1),
                 )
             dists.append(dist)
             _scatter_group(group, ug, out)
@@ -1115,22 +1164,18 @@ def _build(method: Method, cfg: OrthoConfig) -> GradientTransformation:
 # ----------------------------------------------------------------- telemetry
 
 
-_LEGACY_DISTANCE_WARNED = False
-
-
-def _warn_legacy_distance() -> None:
-    global _LEGACY_DISTANCE_WARNED
-    if not _LEGACY_DISTANCE_WARNED:
-        _LEGACY_DISTANCE_WARNED = True
-        warnings.warn(
-            "leaf-wise OrthoState.last_distance (per-leaf scalar pytree) is "
-            "deprecated: states written by the grouped driver carry "
-            "GroupedDistances (per-group stacked (B,) arrays). The legacy "
-            "layout stays readable through ortho_states()/max_distance() "
-            "for one release.",
-            DeprecationWarning,
-            stacklevel=3,
-        )
+def _reject_legacy_distance(ld) -> None:
+    """The PR-2 leaf-wise ``last_distance`` layout (per-leaf scalar
+    pytree) had a one-release read shim; that window has passed. In-memory
+    states must carry :class:`GroupedDistances`; on-disk pre-group
+    checkpoints are still adapted by ``checkpoint.restore`` (telemetry
+    reset to zeros, recomputed on the next step)."""
+    raise TypeError(
+        "OrthoState.last_distance must be a GroupedDistances; the legacy "
+        "leaf-wise scalar-pytree layout is no longer readable in memory "
+        f"(got {type(ld).__name__}). Restore pre-group checkpoints through "
+        "checkpoint.restore, which adapts them."
+    )
 
 
 def ortho_states(opt_state) -> list[OrthoState]:
@@ -1147,19 +1192,16 @@ def max_distance(opt_state) -> jax.Array:
 
     This is the uniform telemetry contract: any state built by
     :func:`orthogonal` reports it, so trainers need no per-method walking.
-    Reads both the grouped layout (:class:`GroupedDistances`) and — with a
-    one-time deprecation warning — the pre-group per-leaf scalar pytree.
+    Reads the grouped layout (:class:`GroupedDistances`) only; the
+    pre-group per-leaf scalar pytree is no longer readable in memory
+    (``checkpoint.restore`` still adapts old checkpoints on disk).
     """
     dists = []
     for s in ortho_states(opt_state):
         ld = s.last_distance
-        if isinstance(ld, GroupedDistances):
-            dists.extend(ld.per_group)
-        else:
-            legacy = jax.tree.leaves(ld)
-            if legacy:
-                _warn_legacy_distance()
-            dists.extend(legacy)
+        if not isinstance(ld, GroupedDistances):
+            _reject_legacy_distance(ld)
+        dists.extend(ld.per_group)
     if not dists:
         return jnp.zeros([], jnp.float32)
     return jnp.max(jnp.stack([jnp.max(d) for d in dists]))
@@ -1171,14 +1213,11 @@ def leaf_distances(state: OrthoState):
     Reconstructs, from the grouped ``(B,)`` arrays and the static
     :class:`GroupPlan`, a pytree with the param structure holding each
     leaf's ``max`` post-update manifold distance — exactly what
-    ``last_distance`` used to store per leaf. Legacy leaf-wise states pass
-    through unchanged (with the one-time deprecation warning).
+    ``last_distance`` stored per leaf before the grouped driver.
     """
     ld = state.last_distance
     if not isinstance(ld, GroupedDistances):
-        if jax.tree.leaves(ld):
-            _warn_legacy_distance()
-        return ld
+        _reject_legacy_distance(ld)
     plan = ld.plan
     out: list = [None] * plan.n_leaves
     for group, arr in zip(plan.groups, ld.per_group):

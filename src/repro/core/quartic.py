@@ -116,7 +116,9 @@ def min_distance_real_root(roots: Array) -> Array:
     return jnp.real(best)
 
 
-def landing_poly_coeffs(m: Array) -> tuple[Array, Array, Array, Array, Array]:
+def landing_poly_coeffs(
+    m: Array, pv: Array | None = None
+) -> tuple[Array, Array, Array, Array, Array]:
     """Coefficients (a4..a0) of the landing polynomial P(lambda) at M.
 
     Lemma 3.1 with ``A = M``, ``B = -(M M^H - I) M``:
@@ -128,9 +130,19 @@ def landing_poly_coeffs(m: Array) -> tuple[Array, Array, Array, Array, Array]:
     ``||C + D l + E l^2||^2`` directly gives ``2<C,E>`` and ``2<C,D>`` — we use
     the exact expansion (their Lemma A.5 derivation) so that P(l) equals the
     true squared distance; validated against brute-force in tests.
+
+    ``pv`` (optional, per-matrix valid-row counts) masks the identity for
+    zero-padded ragged megagroup members: C must be zero on the padded
+    diagonal or its Frobenius terms would count the padding as distance-1
+    violations and every coefficient through a0 would be contaminated.
     """
     p = m.shape[-2]
-    eye = jnp.eye(p, dtype=m.dtype)
+    if pv is None:
+        eye = jnp.eye(p, dtype=m.dtype)
+    else:
+        from . import stiefel  # local import: stiefel imports nothing back
+
+        eye = stiefel.masked_eye(p, pv, m.dtype)
     cmat = m @ jnp.conj(jnp.swapaxes(m, -1, -2)) - eye
     bmat = -(cmat @ m)
     mh = jnp.conj(jnp.swapaxes(m, -1, -2))
@@ -154,8 +166,14 @@ def eval_quartic(coeffs, lam):
     return (((a4 * lam + a3) * lam + a2) * lam + a1) * lam + a0
 
 
-def optimal_lambda(m: Array, fallback: float = 0.5, newton_iters: int = 4) -> Array:
+def optimal_lambda(
+    m: Array, fallback: float = 0.5, newton_iters: int = 4,
+    pv: Array | None = None,
+) -> Array:
     """Solve ``min_lambda P(lambda)`` for the batched intermediate iterate(s) M.
+
+    ``pv`` carries per-matrix valid-row counts for ragged (zero-padded)
+    batches — see :func:`landing_poly_coeffs`.
 
     Ferrari gives closed-form candidates, but near the manifold the quartic
     degenerates (``a4 = ||E||^2 ~ dist^4`` underflows in fp32 and the
@@ -166,7 +184,7 @@ def optimal_lambda(m: Array, fallback: float = 0.5, newton_iters: int = 4) -> Ar
     (iv) pick the candidate with the smallest |P(lambda)| — the paper's
     "closest real value to a root" criterion, made numerically total.
     """
-    coeffs = landing_poly_coeffs(m)
+    coeffs = landing_poly_coeffs(m, pv)
     a4, a3, a2, a1, a0 = coeffs
     scale = jnp.maximum(
         jnp.maximum(jnp.maximum(jnp.abs(a4), jnp.abs(a3)), jnp.maximum(jnp.abs(a2), jnp.abs(a1))),

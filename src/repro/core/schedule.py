@@ -1,0 +1,376 @@
+"""Constraint-group scheduling: bucketing rules and the ragged megagroup
+cost model.
+
+This is the layer behind ``core.plan_groups`` (DESIGN.md §Constraint
+groups, §Ragged scheduling). The driver never loops over param leaves;
+it asks this module for a static :class:`GroupPlan` and runs the
+two-stage update once per :class:`GroupSpec`.
+
+Three grouping modes:
+
+* ``"auto"`` — one group per exact ``(manifold shape, dtype)`` bucket.
+  Optimal when the workload is shape-homogeneous; a real model tree
+  (granite/mixtral/seamless configs) fragments into one group per
+  distinct layer shape.
+* ``"per_leaf"`` — one group per leaf: the unrolled reference path.
+* ``"padded"`` — the exact buckets are **merged into a small number of
+  padded megagroups** chosen by a cost model: members of heterogeneous
+  true shape ``(p_i, n_i)`` are zero-padded into the megagroup's
+  ``(P, N) = (max p_i, max n_i)`` stack and carry their true shapes as
+  run-length-encoded ``GroupSpec.valid`` segments (materialized as
+  per-matrix ``(B,)`` operands by the driver). Zero padding is exactly
+  inert through every polynomial stage (zero rows/cols propagate as
+  zeros); only identity-subtracting telemetry and quartic machinery need
+  the per-matrix row mask (see DESIGN.md §Ragged scheduling for the
+  inertness obligations).
+
+The megagroup cost model charges each dispatch a fixed overhead (launch
++ amortized trace/compile, expressed in HBM-byte equivalents) plus the
+padded HBM traffic of its aligned stack, reusing the autotuner's VMEM
+accounting (``kernels.ops.whole_vmem_bytes``) to penalize merges that
+push the per-matrix working set off the whole-matrix kernel into the
+tiled pipeline. Greedy agglomerative merging (largest saving first,
+deterministic tie-breaking) stops when no merge saves bytes — so near
+shapes (same 8x128 tile after alignment) merge for free, while wildly
+mismatched shapes stay separate once padding waste outweighs the saved
+dispatch.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# Fixed per-dispatch cost in HBM-byte equivalents: kernel launch plus the
+# amortized share of tracing/compiling one more program. Dominates for
+# small groups (merging near-shapes is ~always right); padded traffic
+# dominates for large mismatched groups (they stay separate).
+DISPATCH_OVERHEAD_BYTES = 4 * 1024 * 1024
+
+# Dispatches whose per-matrix working set exceeds the whole-kernel VMEM
+# budget fall to the tiled multi-phase pipeline; charge them a mild
+# bandwidth penalty so a merge does not silently push a whole-kernel
+# group off the fast path. The fit is checked against the LARGEST
+# registered fused stage sets (pogo and landing, vadam base) so a merge
+# sized for one method cannot silently overflow another's working set.
+_TILED_PENALTY = 1.15
+_WORST_STAGE_SETS = ("fused_pogo+vadam", "fused_landing+vadam")
+
+_SUBLANE, _LANE = 8, 128
+
+
+def _round_up(v: int, m: int) -> int:
+    return (v + m - 1) // m * m
+
+
+# ------------------------------------------------------------------- plan IR
+
+
+@dataclasses.dataclass(frozen=True)
+class GroupMember:
+    """One param leaf's slot inside a :class:`GroupSpec` batch.
+
+    ``leaf`` is the flat index in the param tree, ``lead`` the leaf's
+    leading stack dims (flattened into the group's batch axis), ``offset``
+    the leaf's first row in the stacked ``(B, p, n)`` tensor, and
+    ``key_base`` the leaf's first slot in the step's stacked RNG key array
+    (global matrix id, counted in flat-leaf order so the key a matrix sees
+    is independent of how leaves were bucketed). ``p``/``n`` are the
+    member's TRUE manifold-orientation shape — equal to the group's
+    ``(p, n)`` for exact buckets, smaller inside a padded megagroup
+    (gather zero-pads, scatter crops).
+    """
+
+    leaf: int
+    lead: tuple[int, ...]
+    transpose: bool
+    offset: int
+    key_base: int
+    p: int
+    n: int
+
+    @property
+    def count(self) -> int:
+        return math.prod(self.lead)
+
+    def shape_in(self, group: "GroupSpec") -> tuple[int, int]:
+        """True manifold shape of this member's matrices (``group`` kept
+        in the signature so call sites read as group-relative)."""
+        del group
+        return (self.p, self.n)
+
+
+@dataclasses.dataclass(frozen=True)
+class GroupSpec:
+    """One constraint group: a batched ``(B, p, n)`` two-stage dispatch.
+
+    For exact buckets every member shares the manifold-orientation shape
+    ``(p, n)`` (p <= n; tall leaves enter transposed) and dtype. For a
+    padded megagroup ``(p, n)`` is the dispatch (padded) shape —
+    ``max`` over the member true shapes — and ``valid`` holds the
+    per-matrix true shapes as run-length-encoded ``(count, p_i, n_i)``
+    segments in batch order (``None`` means uniform: every matrix is
+    exactly ``(p, n)``). ``batch`` is B = sum of member matrix counts.
+    """
+
+    p: int
+    n: int
+    dtype: Any  # np.dtype (hashable)
+    members: tuple[GroupMember, ...]
+    batch: int
+    valid: Optional[tuple[tuple[int, int, int], ...]] = None
+
+    @property
+    def ragged(self) -> bool:
+        """True when members carry heterogeneous true shapes (zero-padded
+        rows/cols exist and telemetry must mask per matrix)."""
+        return self.valid is not None
+
+    def valid_shape_arrays(self):
+        """Per-matrix true shapes ``(pv, nv)`` as ``(B,)`` int32 numpy
+        arrays (batch order), or ``None`` for uniform groups. The driver
+        materializes these as batch-leading operands so they partition
+        with the stack under the shard_map group schedule. Today only
+        ``pv`` has consumers (every identity in the algebra is a row
+        mask; column padding contributes exact zeros) — ``nv`` rides as
+        part of the group contract and XLA drops it where unused."""
+        if self.valid is None:
+            return None
+        pv = np.concatenate(
+            [np.full(c, p, np.int32) for c, p, _ in self.valid]
+        )
+        nv = np.concatenate(
+            [np.full(c, n, np.int32) for c, _, n in self.valid]
+        )
+        return pv, nv
+
+    def sharding_hint(self):
+        """(axis, size) hint for distributing the group: shard the batch
+        axis (dim 0 of the stacked tensor / the ``(B,)`` distance array)
+        across the data-parallel mesh axes. Made concrete by
+        ``distributed.sharding.opt_state_specs`` (resting storage) and by
+        the driver's ``shard_map`` execution schedule
+        (``distributed.shard_hints.shard_group_step``)."""
+        return ("batch", self.batch)
+
+
+@jax.tree_util.register_static
+@dataclasses.dataclass(frozen=True)
+class GroupPlan:
+    """Static bucketing of a param tree into constraint groups.
+
+    Derived from (static) leaf shapes/dtypes at trace time; hashable, so it
+    rides inside :class:`~repro.core.api.OrthoState` as a zero-leaf pytree
+    node and inside jit caches for free. ``grouping="auto"`` buckets by
+    (manifold shape, dtype); ``grouping="per_leaf"`` makes one group per
+    leaf (the unrolled back-compat reference path); ``grouping="padded"``
+    merges the auto buckets into padded megagroups via the cost model."""
+
+    groups: tuple[GroupSpec, ...]
+    treedef: Any  # the param treedef (for leaf-wise telemetry views)
+    n_leaves: int
+    n_matrices: int
+
+
+GROUPINGS = ("auto", "per_leaf", "padded")
+
+
+# ------------------------------------------------------------ exact buckets
+
+
+def _exact_buckets(leaves, grouping: str):
+    """First-stage bucketing shared by every mode: leaf -> (orientation
+    shape, dtype) buckets with members in flat-leaf order."""
+    buckets: dict = {}
+    order: list = []
+    key_base = 0
+    for i, x in enumerate(leaves):
+        if x.ndim < 2:
+            raise ValueError(
+                f"orthoptimizer leaves must be matrices (..., p, n); leaf {i} "
+                f"has shape {x.shape}"
+            )
+        p0, n0 = x.shape[-2], x.shape[-1]
+        transpose = p0 > n0
+        p, n = (n0, p0) if transpose else (p0, n0)
+        lead = tuple(x.shape[:-2])
+        count = math.prod(lead)
+        key = (
+            (p, n, jnp.dtype(x.dtype)) if grouping != "per_leaf"
+            else ("leaf", i)
+        )
+        if key not in buckets:
+            buckets[key] = {"p": p, "n": n, "dtype": jnp.dtype(x.dtype),
+                            "members": [], "batch": 0}
+            order.append(key)
+        b = buckets[key]
+        b["members"].append(GroupMember(
+            leaf=i, lead=lead, transpose=transpose,
+            offset=b["batch"], key_base=key_base, p=p, n=n,
+        ))
+        b["batch"] += count
+        key_base += count
+    return [buckets[k] for k in order], key_base
+
+
+# ---------------------------------------------------------------- cost model
+
+
+def _tile() -> tuple[int, int]:
+    """Padding granularity the executing backend pays for. On TPU the
+    Pallas dispatch pads every operand to (sublane, lane) = (8, 128)
+    tiles anyway, so raggedness inside one tile is free and the cost
+    model should charge aligned bytes. The jnp two-stage path on CPU/GPU
+    pads for real — every padded element is executed flops — so there the
+    model charges TRUE bytes (tile (1, 1)) and merges only when the
+    dispatch overhead genuinely outweighs the waste."""
+    return (_SUBLANE, _LANE) if jax.default_backend() == "tpu" else (1, 1)
+
+
+def aligned_stack_bytes(p: int, n: int, batch: int, dtype) -> int:
+    """Bytes of one ``(B, p, n)`` stack at the backend's padding
+    granularity (:func:`_tile`): MXU-aligned on TPU (shapes inside one
+    8x128 tile merge for free), true bytes elsewhere."""
+    itemsize = jnp.dtype(dtype).itemsize
+    tp, tn = _tile()
+    return batch * _round_up(p, tp) * _round_up(n, tn) * itemsize
+
+
+def dispatch_cost_bytes(
+    p: int, n: int, batch: int, dtype,
+    overhead_bytes: int = DISPATCH_OVERHEAD_BYTES,
+) -> float:
+    """Modelled cost of dispatching one ``(B, p, n)`` group, in HBM-byte
+    equivalents: fixed per-dispatch overhead + padded traffic over the
+    fused step's HBM passes, with a mild penalty when the per-matrix
+    working set no longer fits the whole-matrix kernel's VMEM budget
+    (reusing the autotuner's accounting — ``kernels.ops`` is the single
+    source of truth for the VMEM model)."""
+    from ..kernels import ops as kops  # lazy: core must import without pallas
+
+    traffic = kops.FUSED_TRACE_HBM_PASSES * aligned_stack_bytes(
+        p, n, batch, dtype
+    )
+    p_pad = _round_up(p, _SUBLANE)
+    n_pad = _round_up(n, _LANE)
+    if not jnp.issubdtype(jnp.dtype(dtype), jnp.complexfloating) and any(
+        kops.whole_vmem_bytes(p_pad, n_pad, s) > kops.VMEM_BUDGET_BYTES
+        for s in _WORST_STAGE_SETS
+    ):
+        traffic = _TILED_PENALTY * traffic
+    return overhead_bytes + traffic
+
+
+def plan_megagroups(
+    shapes: list[tuple[int, int, int, Any]],
+    overhead_bytes: int = DISPATCH_OVERHEAD_BYTES,
+) -> list[list[int]]:
+    """Partition exact buckets into padded megagroups.
+
+    ``shapes`` is one ``(p, n, batch, dtype)`` tuple per exact bucket.
+    Returns the partition as lists of bucket indices (each sorted; the
+    partition ordered by smallest contained index). Only same-dtype
+    buckets merge — complex next to real (or f32 next to bf16) never
+    shares a dispatch. Greedy agglomerative: repeatedly merge the pair
+    with the largest positive cost saving until no merge saves bytes.
+    Deterministic (first-lowest-index tie-breaking), pure Python on
+    static shapes — this runs at trace time.
+    """
+    groups: list[list[int]] = [[i] for i in range(len(shapes))]
+
+    def cost(idxs: list[int]) -> float:
+        pmax = max(shapes[i][0] for i in idxs)
+        nmax = max(shapes[i][1] for i in idxs)
+        bsum = sum(shapes[i][2] for i in idxs)
+        return dispatch_cost_bytes(
+            pmax, nmax, bsum, shapes[idxs[0]][3], overhead_bytes
+        )
+
+    while len(groups) > 1:
+        best, best_save = None, 0.0
+        for a in range(len(groups)):
+            for b in range(a + 1, len(groups)):
+                if shapes[groups[a][0]][3] != shapes[groups[b][0]][3]:
+                    continue
+                save = (
+                    cost(groups[a]) + cost(groups[b])
+                    - cost(groups[a] + groups[b])
+                )
+                if save > best_save:
+                    best, best_save = (a, b), save
+        if best is None:
+            break
+        a, b = best
+        groups[a] = sorted(groups[a] + groups[b])
+        del groups[b]
+    return sorted(groups, key=lambda g: g[0])
+
+
+# ----------------------------------------------------------------- the plan
+
+
+def _finalize_group(p, n, dtype, members) -> GroupSpec:
+    """Re-offset members (flat-leaf order) and derive the valid segments;
+    ``valid=None`` when every member already has the group shape."""
+    members = sorted(members, key=lambda m: m.leaf)
+    out, batch = [], 0
+    segs: list[list[int]] = []
+    for m in members:
+        out.append(dataclasses.replace(m, offset=batch))
+        batch += m.count
+        if segs and (segs[-1][1], segs[-1][2]) == (m.p, m.n):
+            segs[-1][0] += m.count
+        else:
+            segs.append([m.count, m.p, m.n])
+    uniform = len(segs) <= 1 and all(
+        (s[1], s[2]) == (p, n) for s in segs
+    )
+    valid = None if uniform else tuple((c, pp, nn) for c, pp, nn in segs)
+    return GroupSpec(p=p, n=n, dtype=dtype, members=tuple(out),
+                     batch=batch, valid=valid)
+
+
+def plan_groups(
+    leaves, treedef, grouping: str = "auto",
+    pad_overhead_bytes: int = DISPATCH_OVERHEAD_BYTES,
+) -> GroupPlan:
+    """Bucket flat param ``leaves`` into :class:`GroupSpec` batches.
+
+    Rules (DESIGN.md §Constraint groups, §Ragged scheduling): each leaf
+    ``(..., p0, n0)`` is a stack of ``prod(lead)`` constrained matrices;
+    tall leaves (p0 > n0) are constrained along their transpose, so the
+    bucket key is the manifold orientation ``(min, max)`` plus dtype.
+    Groups keep first-appearance order; members keep flat-leaf order
+    within a group. ``grouping="padded"`` merges the exact buckets into
+    megagroups chosen by :func:`plan_megagroups`, padding members to the
+    megagroup shape and recording true shapes in ``GroupSpec.valid``.
+    """
+    if grouping not in GROUPINGS:
+        raise ValueError(
+            f"grouping must be one of {GROUPINGS}, got {grouping!r}"
+        )
+    buckets, n_matrices = _exact_buckets(leaves, grouping)
+    if grouping == "padded" and len(buckets) > 1:
+        shapes = [(b["p"], b["n"], b["batch"], b["dtype"]) for b in buckets]
+        partition = plan_megagroups(shapes, pad_overhead_bytes)
+        groups = []
+        for idxs in partition:
+            p = max(buckets[i]["p"] for i in idxs)
+            n = max(buckets[i]["n"] for i in idxs)
+            members = [m for i in idxs for m in buckets[i]["members"]]
+            groups.append(
+                _finalize_group(p, n, buckets[idxs[0]]["dtype"], members)
+            )
+    else:
+        groups = [
+            GroupSpec(p=b["p"], n=b["n"], dtype=b["dtype"],
+                      members=tuple(b["members"]), batch=b["batch"])
+            for b in buckets
+        ]
+    return GroupPlan(groups=tuple(groups), treedef=treedef,
+                     n_leaves=len(leaves), n_matrices=n_matrices)

@@ -50,6 +50,31 @@ def manifold_distance(x: Array) -> Array:
     return jnp.sqrt(jnp.sum(jnp.abs(r) ** 2, axis=(-2, -1)))
 
 
+def masked_eye(p: int, pv: Array, dtype=jnp.float32) -> Array:
+    """``I_{pv}`` embedded in a padded ``(..., p, p)`` block.
+
+    ``pv`` is a batch of valid-row counts (any leading shape); rows at or
+    beyond ``pv`` hold zero instead of one. This is the identity a ragged
+    megagroup member sees (DESIGN.md §Ragged scheduling): zero-padded rows
+    of the operands produce zero rows in every gram, so residuals must not
+    subtract 1 on the padded diagonal.
+    """
+    eye = jnp.eye(p, dtype=dtype)
+    row = jnp.arange(p)
+    mask = row < jnp.asarray(pv)[..., None]  # (..., p)
+    return eye * mask[..., None].astype(dtype)
+
+
+def manifold_distance_masked(x: Array, pv: Array) -> Array:
+    """``||X X^H - I_{pv}||_F`` per matrix of a zero-padded ragged batch:
+    the feasibility distance of each member measured on its TRUE ``p_i``
+    rows only (padded rows contribute exactly zero). With ``pv`` full the
+    result equals :func:`manifold_distance` bit-for-bit."""
+    g = gram(x)
+    r = g - masked_eye(x.shape[-2], pv, g.dtype)
+    return jnp.sqrt(jnp.sum(jnp.abs(r) ** 2, axis=(-2, -1)))
+
+
 def manifold_penalty(x: Array) -> Array:
     """``N(X) = 1/4 ||X X^H - I||^2`` (the paper's squared manifold distance)."""
     return 0.25 * manifold_distance(x) ** 2

@@ -77,6 +77,12 @@ def shard_group_step(fn, batch: int, out_ndims, *, pin_inputs: bool = False):
     Returns ``None`` when no mesh is set or B divides no DP-axis subset —
     the caller keeps the unsharded dispatch.
 
+    Ragged megagroups fit the same operand contract with no special
+    casing: the per-matrix true-shape mask arrays (``(B,)`` int32
+    pv/nv, DESIGN.md §Ragged scheduling) are batch-leading, so they
+    partition with the stack and each shard masks exactly its own local
+    matrices — raggedness never crosses a shard boundary.
+
     ``pin_inputs=True`` (the driver sets it on the CPU backend for
     multi-member groups) pins every array operand to a replicated layout
     before the ``shard_map``: the CPU host-platform partitioner

@@ -81,15 +81,20 @@ def device_kind() -> str:
 
 def plan_key(p: int, n: int, bsz: int, dtype, stages: str, *,
              backend: str, interpret: bool,
-             device: Optional[str] = None) -> str:
+             device: Optional[str] = None, ragged: bool = False) -> str:
     """Cache key for one kernel-plan decision. ``bsz`` is the batch the
     kernel dispatch actually sees — the per-shard local batch under the
-    sharded group schedule, the global batch otherwise."""
+    sharded group schedule, the global batch otherwise. ``ragged`` is the
+    pad-bucket signature of a padded megagroup dispatch (per-matrix mask
+    operand + masked telemetry change the kernel): ragged and uniform
+    dispatches of the same ``(p, n, b)`` never share a winner. Uniform
+    keys are unchanged, so existing version-2 cache files stay valid."""
     dev = device_kind() if device is None else device
-    return (
+    key = (
         f"p={p},n={n},b={bsz},dtype={dtype},stages={stages},"
         f"backend={backend},device={dev},interp={int(interpret)}"
     )
+    return key + ",ragged=1" if ragged else key
 
 
 class PlanCache:

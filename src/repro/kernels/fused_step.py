@@ -41,6 +41,16 @@ Scalar operands ride a prefetched fp32 vector:
 ``[eta, lam, post_scale, h0..h4]`` with ``h* = (decay,)`` for trace and
 ``(b1, b2, eps, c1, c2)`` for VAdam (c1/c2 the bias corrections,
 computed by the caller from the base step count).
+
+Ragged megagroup batches (DESIGN.md §Ragged scheduling) extend the same
+padding contract per matrix: members of a padded group carry
+heterogeneous true shapes ``(p_i, n_i)`` zero-padded to the dispatch
+shape, and a ``pv`` column operand (``(B, 1)`` int32 valid-row counts)
+generalizes the static ``p_valid`` diagonal mask to a per-matrix
+rectangular mask. Inertness holds stage by stage: the moment update is
+elementwise on zero-padded buffers, the five matrix products propagate
+zero rows/cols, and only the gram-residual telemetry subtracts an
+identity — which is masked to each matrix's true rows.
 """
 
 from __future__ import annotations
@@ -106,7 +116,21 @@ def _residual_dist(w, p_valid: int):
     return jnp.sqrt(jnp.sum(res * res, axis=(1, 2)))
 
 
-def _fused_whole_kernel(scal_ref, *refs, method, base_kind, nesterov, p_valid):
+def _residual_dist_ragged(w, pv_col):
+    """Per-matrix rectangular mask: ``pv_col`` is the (bm, 1) int32
+    valid-row counts of a ragged megagroup block — each matrix subtracts
+    the identity on its OWN true rows only (the static ``p_valid``
+    diagonal mask, generalized per matrix)."""
+    pp = w.shape[-1]
+    eye = jnp.eye(pp, dtype=jnp.float32)
+    row = jax.lax.broadcasted_iota(jnp.int32, (1, pp, pp), 1)
+    mask = (row < pv_col[:, :, None]).astype(jnp.float32)  # (bm, pp, pp)
+    res = w - eye[None] * mask
+    return jnp.sqrt(jnp.sum(res * res, axis=(1, 2)))
+
+
+def _fused_whole_kernel(scal_ref, *refs, method, base_kind, nesterov, p_valid,
+                        ragged):
     eta = scal_ref[0]
     lam = scal_ref[1]
     it = iter(refs)
@@ -114,6 +138,7 @@ def _fused_whole_kernel(scal_ref, *refs, method, base_kind, nesterov, p_valid):
     g_ref = next(it)
     mu_ref = next(it) if base_kind != "none" else None
     nu_ref = next(it) if base_kind == "vadam" else None
+    pv_ref = next(it) if ragged else None
     o_ref = next(it)
     mu_out = next(it) if base_kind != "none" else None
     nu_out = next(it) if base_kind == "vadam" else None
@@ -141,7 +166,10 @@ def _fused_whole_kernel(scal_ref, *refs, method, base_kind, nesterov, p_valid):
         x2 = x - eta * (r + lam * (ax - x))
         o_ref[...] = x2.astype(o_ref.dtype)
         w = _dot(x2, x2, _DN)  # X' still resident: direct gram, zero HBM
-    dist_ref[...] = _residual_dist(w, p_valid)[:, None]
+    if ragged:
+        dist_ref[...] = _residual_dist_ragged(w, pv_ref[...])[:, None]
+    else:
+        dist_ref[...] = _residual_dist(w, p_valid)[:, None]
 
 
 def fused_step_whole(
@@ -157,10 +185,14 @@ def fused_step_whole(
     block_b: int = 1,
     interpret: bool = False,
     p_valid: int | None = None,
+    pv: Array | None = None,
 ):
     """Whole-matrix fused step. x, g (B, p, n) padded/aligned by the caller;
     mu (B, p, n) and nu (B, 1) present per ``base_kind``; scal the
-    N_SCALARS fp32 vector. Returns (x', mu', nu', dist) with dist (B, 1)."""
+    N_SCALARS fp32 vector. Returns (x', mu', nu', dist) with dist (B, 1).
+    ``pv`` (B, 1) int32 valid-row counts makes the batch ragged: the
+    telemetry identity is masked per matrix instead of by the static
+    ``p_valid`` (padded batch rows carry pv=0 and report distance 0)."""
     bsz, p, n = x.shape
     assert bsz % block_b == 0, (bsz, block_b)
     mat_spec = pl.BlockSpec((block_b, p, n), lambda i, s: (i, 0, 0))
@@ -179,12 +211,16 @@ def fused_step_whole(
         operands.append(nu)
         out_specs.append(col_spec)
         out_shape.append(jax.ShapeDtypeStruct(nu.shape, nu.dtype))
+    if pv is not None:
+        in_specs.append(col_spec)
+        operands.append(pv)
     out_specs.append(col_spec)
     out_shape.append(jax.ShapeDtypeStruct((bsz, 1), jnp.float32))
 
     kernel = functools.partial(
         _fused_whole_kernel, method=method, base_kind=base_kind,
         nesterov=nesterov, p_valid=p if p_valid is None else p_valid,
+        ragged=pv is not None,
     )
     outs = pl.pallas_call(
         kernel,
@@ -353,11 +389,13 @@ def fused_step_tiled(
     tile_n: int = 512,
     interpret: bool = False,
     p_valid: int | None = None,
+    pv: Array | None = None,
 ):
     """Tiled fused step for large n (n % tile_n == 0). Same contract as
-    :func:`fused_step_whole`; the POGO distance is derived from the phase-2
-    C accumulator via the algebraic identity (three (p, p) batched matmuls
-    in plain XLA — no kernel pass over X')."""
+    :func:`fused_step_whole` (``pv`` makes the batch ragged); the POGO
+    distance is derived from the phase-2 C accumulator via the algebraic
+    identity (three (p, p) batched matmuls in plain XLA — no kernel pass
+    over X'), with the residual identity masked outside the kernels."""
     bsz, p, n = x.shape
     assert n % tile_n == 0, (n, tile_n)
     nt = n // tile_n
@@ -443,6 +481,12 @@ def fused_step_tiled(
             ],
             scal, operands, interpret,
         )
-    res = w - _masked_eye(p, p if p_valid is None else p_valid)
+    if pv is not None:
+        from ..core import stiefel
+
+        eye = stiefel.masked_eye(p, pv[:, 0], jnp.float32)  # (bsz, p, p)
+    else:
+        eye = _masked_eye(p, p if p_valid is None else p_valid)
+    res = w - eye
     dist = jnp.sqrt(jnp.sum(res * res, axis=(-2, -1)))[:, None]
     return x2, mu2, nu2, dist

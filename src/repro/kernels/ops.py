@@ -40,6 +40,11 @@ from . import ref
 # ~12 MiB to leave room for semaphores/double-buffering.
 VMEM_BUDGET_BYTES = 12 * 1024 * 1024
 
+# HBM passes over the (B, p, n) operands per fused step with a momentum
+# base: read X, g, mu; write X', mu' (DESIGN.md §2 cost table). Single
+# source of truth for the ragged-scheduler cost model and the benches.
+FUSED_TRACE_HBM_PASSES = 5
+
 # Per-matrix simultaneously-live fp32 intermediates of each whole-matrix
 # kernel, counted from the actual kernel dataflow — conservatively
 # assuming Mosaic reuses no buffers. (The old ``_WHOLE_ARRAYS = 4``
@@ -127,19 +132,23 @@ def plan_candidates(p: int, n: int, bsz: int, stages: str) -> list[dict]:
 
 def _plan(p: int, n: int, bsz: int = 1, dtype=jnp.float32,
           stages: str = "pogo", interpret: bool = True,
-          time_candidate=None):
+          time_candidate=None, ragged: bool = False):
     """Returns ("whole", block_b, p_pad, n_pad) | ("tiled", tile_n, ...).
 
     Consults the autotune cache; with several feasible candidates and
     autotuning enabled (TPU backend, or ``REPRO_AUTOTUNE=1``), times each
     candidate once per key and persists the winner (see autotune.py).
+    ``ragged`` marks a padded-megagroup dispatch (extra per-matrix mask
+    operand + masked telemetry): it is part of the pad-bucket signature
+    in the plan/cache key, so ragged and uniform dispatches of the same
+    padded shape never share a timed winner.
     """
     p_pad = _round_up(p, 8)
     n_pad = _round_up(n, 128)
     candidates = plan_candidates(p, n, bsz, stages)
     key = autotune.plan_key(
         p, n, bsz, str(jnp.dtype(dtype)), stages,
-        backend=jax.default_backend(), interpret=interpret,
+        backend=jax.default_backend(), interpret=interpret, ragged=ragged,
     )
     enabled = time_candidate is not None and autotune.autotune_enabled(interpret)
     chosen = autotune.choose(
@@ -304,7 +313,8 @@ def landing_field(x, g, lam=1.0, interpret: bool | None = None):
 # ----------------------------------------------------------- fused group step
 
 
-def _fused_timer(p_pad, n_pad, dtype, method, base_kind, nesterov, interpret):
+def _fused_timer(p_pad, n_pad, dtype, method, base_kind, nesterov, interpret,
+                 ragged=False):
     # Representative scalars for the timing run (b2/eps/c1/c2 nonzero so
     # the VAdam stage divides by sane values, not denormals). Numpy, like
     # every timing operand: see _pogo_timer.
@@ -317,21 +327,23 @@ def _fused_timer(p_pad, n_pad, dtype, method, base_kind, nesterov, interpret):
             x = np.zeros((bsz, p_pad, n_eff), dtype)
             mu = x if base_kind != "none" else None
             nu = np.zeros((bsz, 1), np.float32) if base_kind == "vadam" else None
-            return x, x, mu, nu
+            pv = np.full((bsz, 1), p_pad, np.int32) if ragged else None
+            return x, x, mu, nu, pv
 
         if cand["kind"] == "whole":
             bb = cand["block_b"]
-            x, g, mu, nu = ops_for(bb, n_pad)
+            x, g, mu, nu, pv = ops_for(bb, n_pad)
             fn = jax.jit(lambda *a: _fs.fused_step_whole(
-                *a, scal, method=method, base_kind=base_kind,
-                nesterov=nesterov, block_b=bb, interpret=interpret))
-            return fn, (x, g, mu, nu), bb
+                *a[:4], scal, method=method, base_kind=base_kind,
+                nesterov=nesterov, block_b=bb, interpret=interpret,
+                pv=a[4]))
+            return fn, (x, g, mu, nu, pv), bb
         tn = cand["tile_n"]
-        x, g, mu, nu = ops_for(1, _round_up(n_pad, tn))
+        x, g, mu, nu, pv = ops_for(1, _round_up(n_pad, tn))
         fn = jax.jit(lambda *a: _fs.fused_step_tiled(
-            *a, scal, method=method, base_kind=base_kind,
-            nesterov=nesterov, tile_n=tn, interpret=interpret))
-        return fn, (x, g, mu, nu), 1
+            *a[:4], scal, method=method, base_kind=base_kind,
+            nesterov=nesterov, tile_n=tn, interpret=interpret, pv=a[4]))
+        return fn, (x, g, mu, nu, pv), 1
 
     return _make_timer(build)
 
@@ -340,7 +352,7 @@ def _fused_timer(p_pad, n_pad, dtype, method, base_kind, nesterov, interpret):
     jax.jit,
     static_argnames=("method", "base_kind", "hyper", "post_scale", "interpret"),
 )
-def _fused_dispatch(x, g, mu, nu, eta, lam, count, *, method, base_kind,
+def _fused_dispatch(x, g, mu, nu, pv, eta, lam, count, *, method, base_kind,
                     hyper, post_scale, interpret):
     nesterov = False
     h = [jnp.zeros((), jnp.float32)] * 5
@@ -355,13 +367,18 @@ def _fused_dispatch(x, g, mu, nu, eta, lam, count, *, method, base_kind,
     scal = jnp.stack([eta, lam, jnp.asarray(post_scale, jnp.float32), *h])
 
     bsz, p, n = x.shape
+    ragged = pv is not None
     stages = f"fused_{method}+{base_kind}"
     kind, arg, p_pad, n_pad = _plan(
         p, n, bsz, x.dtype, stages, interpret,
         _fused_timer(_round_up(p, 8), _round_up(n, 128), x.dtype, method,
-                     base_kind, nesterov, interpret),
+                     base_kind, nesterov, interpret, ragged=ragged),
+        ragged=ragged,
     )
     nu2d = nu.reshape(bsz, 1) if nu is not None else None
+    # Padded batch rows carry pv=0 (all-zero matrices report distance 0
+    # under the empty mask — _pad_b zero-fills).
+    pv2d = pv.reshape(bsz, 1).astype(jnp.int32) if ragged else None
     if kind == "tiled":
         n_pad = _round_up(n_pad, arg)
     xp = _pad_pn(x, p_pad, n_pad)
@@ -373,16 +390,17 @@ def _fused_dispatch(x, g, mu, nu, eta, lam, count, *, method, base_kind,
         xp, gp = _pad_b(xp, b_pad), _pad_b(gp, b_pad)
         mup = _pad_b(mup, b_pad) if mup is not None else None
         nup = _pad_b(nu2d, b_pad) if nu2d is not None else None
+        pvp = _pad_b(pv2d, b_pad) if pv2d is not None else None
         x2, mu2, nu2, dist = _fs.fused_step_whole(
             xp, gp, mup, nup, scal, method=method, base_kind=base_kind,
             nesterov=nesterov, block_b=block_b, interpret=interpret,
-            p_valid=p,
+            p_valid=p, pv=pvp,
         )
     else:
         x2, mu2, nu2, dist = _fs.fused_step_tiled(
             xp, gp, mup, nu2d, scal, method=method, base_kind=base_kind,
             nesterov=nesterov, tile_n=arg, interpret=interpret,
-            p_valid=p,
+            p_valid=p, pv=pv2d,
         )
     x2 = x2[:bsz, :p, :n]
     mu2 = mu2[:bsz, :p, :n] if mu2 is not None else None
@@ -401,6 +419,7 @@ def fused_group_step(
     mu=None,
     nu=None,
     count=None,
+    pv=None,
     interpret: bool | None = None,
     use_pallas: bool | None = None,
 ):
@@ -413,6 +432,12 @@ def fused_group_step(
     (p, p) accumulators. Returns ``(x_next, mu', nu', dist)`` — moments
     ``None`` where the base has no such slot, ``dist`` a ``(B,)`` fp32
     array of post-update ``||X' X'^H - I||_F``.
+
+    ``pv`` (``(B,)`` int32 valid-row counts) marks a ragged padded
+    megagroup: zero-padded members stay exactly inert through every
+    stage, and the telemetry identity is masked per matrix (each member
+    measured on its true rows). The pad-bucket signature enters the
+    planner/autotune key, so ragged dispatches never reuse uniform plans.
 
     Off-TPU (``use_pallas=None`` default) this routes to the jnp oracle
     (one XLA-fused computation with the same algebraic telemetry); pass
@@ -432,9 +457,10 @@ def fused_group_step(
         return ref.fused_group_step_ref(
             x, g, eta, method=method, lam=lam, base_kind=base_kind,
             hyper=hyper, post_scale=post_scale, mu=mu, nu=nu, count=count,
+            pv=pv,
         )
     return _fused_dispatch(
-        x, g, mu, nu, eta, lam, count, method=method, base_kind=base_kind,
+        x, g, mu, nu, pv, eta, lam, count, method=method, base_kind=base_kind,
         hyper=tuple(hyper), post_scale=float(post_scale), interpret=interpret,
     )
 

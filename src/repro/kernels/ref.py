@@ -74,9 +74,19 @@ def pogo_gram_identity_ref(c: Array, lam) -> Array:
     return (1.0 + lam) ** 2 * c - 2.0 * lam * (1.0 + lam) * c2 + lam**2 * c3
 
 
-def _residual_norm(w: Array) -> Array:
+def _residual_norm(w: Array, pv: Array | None = None) -> Array:
+    """``||W - I||_F`` per matrix; ``pv`` (per-matrix valid-row counts)
+    masks the identity's padded diagonal for ragged megagroup batches —
+    zero-padded rows yield zero gram rows, so the residual must not
+    subtract 1 there (one mask encoding: ``stiefel.masked_eye``)."""
+    from ..core import stiefel
+
     p = w.shape[-1]
-    r = w - jnp.eye(p, dtype=w.dtype)
+    if pv is None:
+        eye = jnp.eye(p, dtype=w.dtype)
+    else:
+        eye = stiefel.masked_eye(p, pv, w.dtype)
+    r = w - eye
     return jnp.sqrt(jnp.sum(jnp.abs(r) ** 2, axis=(-2, -1)))
 
 
@@ -93,6 +103,7 @@ def fused_group_step_ref(
     mu: Array | None = None,
     nu: Array | None = None,
     count: Array | None = None,
+    pv: Array | None = None,
 ):
     """Oracle for the single-pass fused group step (fp32 accumulation).
 
@@ -104,6 +115,12 @@ def fused_group_step_ref(
     re-read of X'. Returns ``(x_next_f32, mu', nu', dist)`` with the
     moment buffers in their storage dtypes (``None`` where the base has
     no such slot).
+
+    ``pv`` (``(B,)`` valid-row counts) handles ragged megagroup batches:
+    every stage is exactly inert on zero-padded rows/cols (zeros propagate
+    through the moment update and all five matrix products), so only the
+    telemetry residual consults it — the masked identity keeps padded
+    diagonal entries out of the distance.
     """
     xf = x.astype(jnp.float32)
     gf = g.astype(jnp.float32)
@@ -141,11 +158,11 @@ def fused_group_step_ref(
         m = xf - eta * r
         c = m @ _bt(m)
         x2 = (1.0 + lam) * m - lam * (c @ m)
-        dist = _residual_norm(pogo_gram_identity_ref(c, lam))
+        dist = _residual_norm(pogo_gram_identity_ref(c, lam), pv)
     elif method == "landing":
         normal = a @ xf - xf  # (A - I) X
         x2 = xf - eta * (r + lam * normal)
-        dist = _residual_norm(x2 @ _bt(x2))
+        dist = _residual_norm(x2 @ _bt(x2), pv)
     else:
         raise ValueError(f"unknown fused method {method!r}")
     return x2, mu_out, nu_out, dist.astype(jnp.float32)

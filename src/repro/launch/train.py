@@ -52,9 +52,11 @@ def main(argv=None):
                          "submanifold_dim=32 (repeatable)")
     ap.add_argument("--pogo-kernel", action="store_true")
     ap.add_argument("--ortho-grouping", default="auto",
-                    choices=["auto", "per_leaf"],
+                    choices=["auto", "per_leaf", "padded"],
                     help="batch same-shape constrained leaves into one "
-                         "grouped dispatch (auto) or unroll per leaf")
+                         "grouped dispatch (auto), unroll per leaf, or "
+                         "merge heterogeneous shapes into few padded "
+                         "megagroups (padded)")
     ap.add_argument("--checkpoint-dir", default=None)
     ap.add_argument("--save-every", type=int, default=50)
     ap.add_argument("--fake-devices", type=int, default=None)

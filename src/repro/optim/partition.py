@@ -10,8 +10,11 @@ transform over its own flat tuple-pytree, scatter updates back. This keeps
 inner transforms completely unaware of masking. The flat tuple is the
 handoff to the grouped orthoptimizer driver (``core.api``): it re-buckets
 its members into constraint groups — one batched ``(B, p, n)`` dispatch
-per (manifold shape, dtype) bucket — so a model with thousands of
-constrained matrices costs a handful of fused updates, not a leaf loop.
+per (manifold shape, dtype) bucket under ``grouping="auto"``, or a few
+padded megagroups under ``grouping="padded"`` (the ragged scheduler in
+``core/schedule.py``, reached via ``--ortho-grouping padded``) — so a
+model with thousands of heterogeneous constrained matrices costs a
+handful of fused updates, not a leaf loop.
 Tuples (not lists) keep the sub-treedef hashable/stable across steps, so
 the inner driver's static :class:`~repro.core.api.GroupPlan` caches
 cleanly under jit.

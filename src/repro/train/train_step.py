@@ -43,7 +43,9 @@ class TrainConfig:
     ortho_seed: int = 0  # driver RNG seed (stochastic methods, e.g. rsdm)
     ortho_safety_project_every: int = 0  # Newton-Schulz cadence, any method
     ortho_grouping: str = "auto"  # "auto": one batched dispatch per
-    # constraint group (same-shape ortho leaves); "per_leaf": unrolled
+    # constraint group (same-shape ortho leaves); "per_leaf": unrolled;
+    # "padded": merge heterogeneous shapes into few padded megagroups
+    # (ragged scheduler, DESIGN.md §Ragged scheduling)
 
 
 def make_optimizer(cfg, train_cfg: TrainConfig) -> optim.GradientTransformation:

@@ -118,6 +118,85 @@ def test_names_only_skips_timing_but_keeps_name_contracts(files):
     assert cr.main(["--baseline", b, "--current", c, "--names-only"]) == 1
 
 
+def test_min_gate_floor_skips_tiny_cells_but_gates_big_ones(files, capsys):
+    """--min-gate-us: a >25% swing on a sub-floor (dispatch-noise) cell
+    is reported but never fails; the same swing above the floor still
+    fails, and the name contracts ignore the floor entirely."""
+    b, c = files({"s/m/tiny": 800.0, "s/m/big": 50000.0},
+                 {"s/m/tiny": 1400.0, "s/m/big": 51000.0})
+    assert cr.main(["--baseline", b, "--current", c,
+                    "--min-gate-us", "5000"]) == 0
+    assert "noise-floor" in capsys.readouterr().out
+    b, c = files({"s/m/big": 50000.0}, {"s/m/big": 90000.0})
+    assert cr.main(["--baseline", b, "--current", c,
+                    "--min-gate-us", "5000"]) == 1
+    # lost family below the floor still fails
+    b, c = files({"s/tiny_mode/a": 100.0, "s/keep/a": 100.0},
+                 {"s/keep/a": 100.0})
+    assert cr.main(["--baseline", b, "--current", c,
+                    "--min-gate-us", "5000"]) == 1
+
+
+def test_aggregate_median_gates_shifts_not_outliers(files, capsys):
+    """--aggregate median: one noisy outlier cell over the threshold
+    passes (scheduler noise), a grid-wide slowdown fails (real
+    regression lifts every cell)."""
+    b, c = files(
+        {"s/m/a": 10000.0, "s/m/b": 10000.0, "s/m/c": 10000.0},
+        {"s/m/a": 10100.0, "s/m/b": 9900.0, "s/m/c": 15000.0},  # one outlier
+    )
+    assert cr.main(["--baseline", b, "--current", c,
+                    "--aggregate", "median"]) == 0
+    assert "median ratio" in capsys.readouterr().out
+    b, c = files(
+        {"s/m/a": 10000.0, "s/m/b": 10000.0, "s/m/c": 10000.0},
+        {"s/m/a": 14000.0, "s/m/b": 13500.0, "s/m/c": 15000.0},  # all slow
+    )
+    assert cr.main(["--baseline", b, "--current", c,
+                    "--aggregate", "median"]) == 1
+    # floored cells stay out of the median
+    b, c = files(
+        {"s/m/tiny1": 100.0, "s/m/tiny2": 100.0, "s/m/big": 10000.0},
+        {"s/m/tiny1": 200.0, "s/m/tiny2": 200.0, "s/m/big": 10100.0},
+    )
+    assert cr.main(["--baseline", b, "--current", c, "--aggregate",
+                    "median", "--min-gate-us", "3000"]) == 0
+
+
+def test_floor_swallowing_every_cell_fails_as_vacuous(files, capsys):
+    """A --min-gate-us that floors EVERY matched cell (trimmed grid,
+    faster hardware) must fail like the zero-overlap case — a silently
+    vacuous timing gate is the exact failure mode this guard exists to
+    prevent. --names-only keeps opting out explicitly."""
+    b, c = files({"s/m/a": 800.0, "s/m/b": 900.0},
+                 {"s/m/a": 2400.0, "s/m/b": 2700.0})
+    assert cr.main(["--baseline", b, "--current", c,
+                    "--min-gate-us", "3000", "--aggregate", "median"]) == 1
+    assert "vacuous" in capsys.readouterr().out
+    assert cr.main(["--baseline", b, "--current", c,
+                    "--min-gate-us", "3000", "--names-only"]) == 0
+
+
+def test_het_and_padded_speedup_rows_in_committed_baseline():
+    """ISSUE-5 acceptance lives in the committed baseline: the padded
+    scheduler's mixed-shape rows must show >=8 auto groups collapsing to
+    <=3 megagroups and a padded e2e win over auto."""
+    import os
+    path = os.path.join(
+        os.path.dirname(__file__), "..", "BENCH_many_matrices.json"
+    )
+    with open(path) as f:
+        records = {r["name"]: r for r in json.load(f)["records"]}
+    row = next(v for k, v in records.items()
+               if k.startswith("many_matrices/padded_speedup/padded/"))
+    assert row["n_matrices"] >= 1024 and row["n_shapes"] >= 6
+    assert row["groups_auto"] >= 8 and row["groups_padded"] <= 3
+    assert row["e2e_step_speedup"] > 1.0
+    for mode in ("het_auto", "het_padded", "het_auto_fused",
+                 "het_padded_fused"):
+        assert any(k.startswith(f"many_matrices/{mode}/") for k in records)
+
+
 def test_escape_hatch_downgrades_all_failures(files, monkeypatch):
     monkeypatch.setenv("BENCH_REGRESSION_OK", "1")
     b, c = files({"s/m/a": 100.0}, {"s/m/a": 140.0})

@@ -110,6 +110,98 @@ def test_fused_telemetry_matches_true_distance(method):
     )
 
 
+def _ragged_operands(shape, pvs, nvs, with_mu=False):
+    """Zero-padded ragged batch: member i lives in its (pv_i, nv_i) block."""
+    b, p, n = shape
+    x, g, mu, _ = _operands(shape, with_mu=with_mu)
+    pv = jnp.asarray(pvs, jnp.int32)
+    nv = jnp.asarray(nvs, jnp.int32)
+    rowm = (jnp.arange(p)[None, :] < pv[:, None]).astype(jnp.float32)
+    colm = (jnp.arange(n)[None, :] < nv[:, None]).astype(jnp.float32)
+    mask = rowm[:, :, None] * colm[:, None, :]
+    return (x * mask, g * mask, mu * mask if with_mu else None, pv, nv)
+
+
+@pytest.mark.parametrize("method", ["pogo", "landing"])
+@pytest.mark.parametrize("base_kind,hyper,with_mu,with_nu", BASES)
+def test_fused_ragged_whole_matches_oracle_and_true_shapes(
+    method, base_kind, hyper, with_mu, with_nu
+):
+    """Ragged megagroup batches through the whole-kernel dispatcher: the
+    kernel matches the masked jnp oracle, padded rows/cols stay exactly
+    zero in every output (inertness), and the per-matrix distance equals
+    the TRUE-shape submatrix feasibility."""
+    x, g, mu, pv, nv = _ragged_operands(
+        (5, 8, 128), [8, 4, 6, 8, 3], [128, 96, 64, 120, 40], with_mu=with_mu
+    )
+    nu = jnp.abs(jax.random.normal(KEY, (5,))) if with_nu else None
+    count = jnp.asarray(3, jnp.int32) if base_kind == "vadam" else None
+    kwargs = dict(method=method, lam=0.5, base_kind=base_kind, hyper=hyper,
+                  mu=mu, nu=nu, count=count, pv=pv)
+    r = ref.fused_group_step_ref(x, g, 0.1, **kwargs)
+    k = ops.fused_group_step(x, g, 0.1, use_pallas=True, interpret=True,
+                             **kwargs)
+    for a, b, name in zip(r, k, ("x", "mu", "nu", "dist")):
+        if a is None:
+            assert b is None
+            continue
+        np.testing.assert_allclose(
+            np.asarray(a, np.float32), np.asarray(b, np.float32),
+            atol=2e-5, rtol=1e-4, err_msg=f"ragged/{method}/{base_kind}/{name}",
+        )
+    # inertness: padded rows/cols of X' (and mu') are exactly zero
+    x2 = np.asarray(k[0])
+    for i, (pi, ni) in enumerate(zip([8, 4, 6, 8, 3], [128, 96, 64, 120, 40])):
+        assert not np.any(x2[i, pi:, :]) and not np.any(x2[i, :, ni:])
+        if k[1] is not None:
+            mu2 = np.asarray(k[1])
+            assert not np.any(mu2[i, pi:, :]) and not np.any(mu2[i, :, ni:])
+        # per-matrix telemetry == true-shape feasibility
+        sub = x2[i, :pi, :ni]
+        d_true = np.linalg.norm(sub @ sub.T - np.eye(pi))
+        np.testing.assert_allclose(
+            d_true, np.asarray(k[3])[i], atol=2e-5, rtol=1e-3
+        )
+
+
+@pytest.mark.parametrize("method", ["pogo", "landing"])
+def test_fused_ragged_tiled_matches_oracle(method, monkeypatch):
+    """Force the tiled variant on a ragged batch (mask applied outside
+    the kernels to the accumulated gram)."""
+    monkeypatch.setattr(ops, "VMEM_BUDGET_BYTES", 64 * 1024)
+    x, g, mu, pv, nv = _ragged_operands(
+        (3, 8, 256), [8, 5, 2], [256, 200, 130], with_mu=True
+    )
+    kwargs = dict(method=method, lam=0.5, base_kind="trace",
+                  hyper=(0.37, False), mu=mu, pv=pv)
+    r = ref.fused_group_step_ref(x, g, 0.1, **kwargs)
+    k = ops.fused_group_step(x, g, 0.1, use_pallas=True, interpret=True,
+                             **kwargs)
+    for a, b, name in zip(r, k, ("x", "mu", "nu", "dist")):
+        if a is None:
+            assert b is None
+            continue
+        np.testing.assert_allclose(
+            np.asarray(a, np.float32), np.asarray(b, np.float32),
+            atol=3e-5, rtol=1e-4, err_msg=f"ragged-tiled/{method}/{name}",
+        )
+
+
+def test_ragged_plan_key_distinct_from_uniform():
+    """The pad-bucket signature reaches the planner cache: ragged and
+    uniform dispatches of the same shape must never share a plan key."""
+    from repro.kernels import autotune
+
+    base = dict(backend="cpu", interpret=True, device="x")
+    uniform = autotune.plan_key(8, 128, 5, "float32", "fused_pogo+trace", **base)
+    ragged = autotune.plan_key(8, 128, 5, "float32", "fused_pogo+trace",
+                               ragged=True, **base)
+    assert uniform != ragged and ragged.endswith(",ragged=1")
+    assert autotune.plan_key(
+        8, 128, 5, "float32", "fused_pogo+trace", ragged=False, **base
+    ) == uniform
+
+
 def test_fused_rejects_complex():
     x = stiefel.random_stiefel(KEY, (2, 4, 12), jnp.complex64)
     with pytest.raises(ValueError):
@@ -179,10 +271,12 @@ DRIVER_BASES = [
     ("pogo", {}),
     ("landing", {"safe_step": False}),
 ])
-@pytest.mark.parametrize("grouping", ["auto", "per_leaf"])
+@pytest.mark.parametrize("grouping", ["auto", "per_leaf", "padded"])
 def test_driver_fused_parity(bname, base_fn, mname, mkw, grouping):
     """use_kernel=True routes through the fused group step and must match
-    the unfused two-phase driver: params, base-optimizer state, telemetry."""
+    the unfused two-phase driver: params, base-optimizer state, telemetry.
+    "padded" merges PARAMS' heterogeneous shapes into ragged megagroups,
+    so this also pins fused-vs-two-stage parity through the mask contract."""
     o_ref = api.orthogonal(mname, learning_rate=0.1, base_optimizer=base_fn(),
                            grouping=grouping, **mkw)
     o_fus = api.orthogonal(mname, learning_rate=0.1, base_optimizer=base_fn(),

@@ -1,7 +1,7 @@
 """Constraint-group driver: bucketing rules, grouped<->per-leaf parity for
 every registered method (mixed tall/wide/stacked/complex leaves), the
-one-program-per-group compile guarantee, grouped telemetry, the legacy
-leaf-wise deprecation shim, and the batch-axis sharding hint."""
+ragged padded-megagroup schedule, the one-program-per-group compile
+guarantee, grouped telemetry, and the batch-axis sharding hint."""
 
 import dataclasses
 
@@ -189,6 +189,150 @@ def test_grouped_matches_per_leaf_multi_step_with_base():
     )
 
 
+# ---------------------------------------------------------- ragged megagroups
+
+
+def _het_tree():
+    """Heterogeneous shapes that the padded scheduler merges: four f32
+    buckets (one stored tall) plus a complex leaf that must stay alone."""
+    return {
+        "a": stiefel.random_stiefel(KEY, (3, 8, 128)),
+        "b": stiefel.random_stiefel(jax.random.PRNGKey(1), (2, 4, 96)),
+        "tall": jnp.swapaxes(
+            stiefel.random_stiefel(jax.random.PRNGKey(2), (6, 64)), -1, -2
+        ),
+        "d": stiefel.random_stiefel(jax.random.PRNGKey(3), (8, 120)),
+        "cplx": stiefel.random_stiefel(
+            jax.random.PRNGKey(4), (6, 48), jnp.complex64
+        ),
+    }
+
+
+def test_padded_plan_merges_buckets_and_records_true_shapes():
+    tree = _het_tree()
+    leaves, treedef = jax.tree.flatten(tree)
+    auto = plan_groups(leaves, treedef, "auto")
+    padded = plan_groups(leaves, treedef, "padded")
+    assert len(auto.groups) == 5
+    # four real buckets merge into one (8, 128) megagroup; complex stays
+    assert len(padded.groups) == 2
+    mega = next(g for g in padded.groups if g.ragged)
+    assert (mega.p, mega.n) == (8, 128) and mega.batch == 7
+    # valid segments cover the batch in member order with true shapes
+    assert sum(c for c, _, _ in mega.valid) == mega.batch
+    assert set(mega.valid) >= {(3, 8, 128), (2, 4, 96), (1, 6, 64)}
+    pv, nv = mega.valid_shape_arrays()
+    assert pv.shape == (7,) and nv.shape == (7,)
+    assert int(pv.max()) == 8 and int(nv.max()) == 128
+    # members carry their true shape; matrix count is conserved
+    for m in mega.members:
+        assert m.shape_in(mega)[0] <= mega.p
+    assert padded.n_matrices == auto.n_matrices == 8
+
+
+@pytest.mark.parametrize("variant", sorted(VARIANTS))
+def test_padded_matches_per_leaf(variant):
+    """ISSUE-5 acceptance: grouping="padded" reproduces per_leaf updates
+    and telemetry per matrix for EVERY method on heterogeneous shapes
+    (non-ragged-ready methods degrade to exact auto buckets)."""
+    tree = _het_tree()
+    grads = _grads_like(tree)
+    outs = {}
+    for grouping in ("padded", "per_leaf"):
+        opt = orthogonal(
+            _method_of(variant), learning_rate=0.1, grouping=grouping,
+            **VARIANTS[variant],
+        )
+        state = opt.init(tree)
+        u, state = opt.update(grads, state, tree)
+        outs[grouping] = (u, state)
+    u_a, s_a = outs["padded"]
+    u_p, s_p = outs["per_leaf"]
+    jax.tree.map(
+        lambda a, b: np.testing.assert_allclose(
+            np.asarray(a), np.asarray(b), atol=5e-6, rtol=1e-5
+        ),
+        u_a, u_p,
+    )
+    jax.tree.map(
+        lambda a, b: np.testing.assert_allclose(
+            np.asarray(a), np.asarray(b), atol=5e-6
+        ),
+        leaf_distances(s_a), leaf_distances(s_p),
+    )
+
+
+def test_padded_ragged_telemetry_masks_padding():
+    """A padded megagroup's (B,) distances equal each member's TRUE-shape
+    feasibility — padded rows/cols must contribute exactly zero."""
+    tree = {k: v for k, v in _het_tree().items() if k != "cplx"}
+    grads = _grads_like(tree)
+    opt = orthogonal("pogo", learning_rate=0.1, grouping="padded")
+    _, state = opt.update(grads, opt.init(tree), tree)
+    ld = state.last_distance
+    assert any(g.ragged for g in ld.plan.groups)
+    # every matrix landed ~on-manifold; an unmasked residual would report
+    # sqrt(pad_rows) >= 1 for the smaller members
+    assert float(max_distance(state)) < 1e-4
+
+
+def test_padded_constraint_set_roundtrip_and_driver():
+    """Padded stacks as resting storage: from_tree/to_tree round-trip
+    (crop the padding), the driver consumes the set through its own plan
+    (stacked_plan preserves raggedness), and methods without ragged
+    support refuse padded sets loudly."""
+    tree = {k: v for k, v in _het_tree().items() if k != "cplx"}
+    cs = ConstraintSet.from_tree(tree, grouping="padded")
+    assert len(cs.stacks) == 1 and cs.stacks[0].shape == (7, 8, 128)
+    jax.tree.map(
+        lambda a, b: np.testing.assert_array_equal(np.asarray(a), np.asarray(b)),
+        cs.to_tree(), tree,
+    )
+    sp = cs.stacked_plan()
+    assert sp.groups[0].ragged and sp.groups[0].valid == cs.plan.groups[0].valid
+
+    grads = _grads_like(tree)
+    gs = ConstraintSet.from_tree(grads, grouping="padded")
+    opt = orthogonal("pogo", learning_rate=0.1)
+    u_cs, s_cs = opt.update(gs, opt.init(cs), cs)
+    opt_ref = orthogonal("pogo", learning_rate=0.1, grouping="per_leaf")
+    u_t, s_t = opt_ref.update(grads, opt_ref.init(tree), tree)
+    jax.tree.map(
+        lambda a, b: np.testing.assert_allclose(
+            np.asarray(a), np.asarray(b), atol=5e-6, rtol=1e-5
+        ),
+        cs.apply(u_cs).to_tree(),
+        jax.tree.map(jnp.add, tree, u_t),
+    )
+    np.testing.assert_allclose(
+        float(max_distance(s_cs)), float(max_distance(s_t)), atol=5e-6
+    )
+    with pytest.raises(ValueError, match="ragged"):
+        orthogonal("rsdm", learning_rate=0.1).init(cs)
+
+
+def test_padded_compiles_fewer_group_programs(monkeypatch):
+    """The dispatch-count win itself: heterogeneous shapes trace the stage
+    functions once per MEGAgroup under "padded", once per exact bucket
+    under "auto"."""
+    calls = {"n": 0}
+    orig = api.Pogo.direction
+
+    def counting(self, x, g, ctx):
+        calls["n"] += 1
+        return orig(self, x, g, ctx)
+
+    monkeypatch.setattr(api.Pogo, "direction", counting)
+    tree = {k: v for k, v in _het_tree().items() if k != "cplx"}
+    grads = _grads_like(tree)
+    for grouping, expect in (("auto", 4), ("padded", 1)):
+        opt = orthogonal("pogo", learning_rate=0.1, grouping=grouping)
+        state = opt.init(tree)
+        calls["n"] = 0
+        jax.jit(opt.update)(grads, state, tree)
+        assert calls["n"] == expect, (grouping, calls["n"])
+
+
 # ------------------------------------------------------------ compile counts
 
 
@@ -240,9 +384,11 @@ def test_grouped_distances_layout_and_views():
     assert want < 1e-4  # pogo lands ~on-manifold in one step
 
 
-def test_legacy_leafwise_state_readable_with_one_warning():
-    """Deprecation shim: pre-group states (per-leaf scalar pytree) stay
-    readable through max_distance/leaf_distances, warning once."""
+def test_legacy_leafwise_state_no_longer_readable():
+    """The PR-2 leaf-wise deprecation shim is gone (its one-release window
+    passed): in-memory legacy states raise a pointed TypeError from both
+    telemetry views. On-disk pre-group checkpoints keep restoring through
+    checkpoint.restore (covered in tests/test_checkpoint.py)."""
     legacy = OrthoState(
         count=jnp.zeros([], jnp.int32),
         base_state=(),
@@ -251,20 +397,10 @@ def test_legacy_leafwise_state_readable_with_one_warning():
                        "b": jnp.asarray(0.5, jnp.float32)},
         extras=(),
     )
-    monkey_flag = api._LEGACY_DISTANCE_WARNED
-    api._LEGACY_DISTANCE_WARNED = False
-    try:
-        with pytest.warns(DeprecationWarning, match="leaf-wise"):
-            assert float(max_distance(legacy)) == 0.5
-        # second read: no further warning
-        import warnings as _w
-
-        with _w.catch_warnings():
-            _w.simplefilter("error")
-            assert float(max_distance(legacy)) == 0.5
-            assert leaf_distances(legacy)["a"] == 0.25
-    finally:
-        api._LEGACY_DISTANCE_WARNED = monkey_flag
+    with pytest.raises(TypeError, match="GroupedDistances"):
+        max_distance(legacy)
+    with pytest.raises(TypeError, match="checkpoint.restore"):
+        leaf_distances(legacy)
 
 
 # ----------------------------------------------------------------------- rng

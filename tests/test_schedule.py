@@ -1,0 +1,175 @@
+"""Ragged megagroup scheduler: plan_groups edge cases (ISSUE-5 satellite)
+and the padding-waste-vs-dispatch-count cost model in core/schedule.py."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import schedule, stiefel
+from repro.core.api import plan_groups
+from repro.core.schedule import (
+    DISPATCH_OVERHEAD_BYTES,
+    aligned_stack_bytes,
+    plan_megagroups,
+)
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _plan(tree, grouping):
+    leaves, treedef = jax.tree.flatten(tree)
+    return plan_groups(leaves, treedef, grouping)
+
+
+# ------------------------------------------------------- plan_groups edges
+
+
+def test_single_leaf_tree_is_one_uniform_group_every_mode():
+    tree = {"only": stiefel.random_stiefel(KEY, (4, 16))}
+    for grouping in ("auto", "per_leaf", "padded"):
+        plan = _plan(tree, grouping)
+        assert len(plan.groups) == 1
+        (g,) = plan.groups
+        assert (g.p, g.n, g.batch) == (4, 16, 1)
+        assert not g.ragged and g.valid_shape_arrays() is None
+        assert plan.n_matrices == 1
+
+
+def test_complex_dtype_never_buckets_next_to_real():
+    """Same manifold shape, different dtype: separate exact buckets AND
+    separate megagroups — a complex matrix never shares a padded dispatch
+    with a real one (the fused path is real-only and the update algebra
+    differs)."""
+    tree = {
+        "r1": stiefel.random_stiefel(KEY, (4, 16)),
+        "c1": stiefel.random_stiefel(jax.random.PRNGKey(1), (4, 16), jnp.complex64),
+        "r2": stiefel.random_stiefel(jax.random.PRNGKey(2), (4, 12)),
+        "c2": stiefel.random_stiefel(jax.random.PRNGKey(3), (4, 12), jnp.complex64),
+    }
+    auto = _plan(tree, "auto")
+    assert len(auto.groups) == 4
+    padded = _plan(tree, "padded")
+    # the two real buckets merge, the two complex buckets merge — never
+    # across the dtype boundary
+    assert len(padded.groups) == 2
+    dtypes = sorted(str(g.dtype) for g in padded.groups)
+    assert dtypes == ["complex64", "float32"]
+    for g in padded.groups:
+        assert g.batch == 2
+
+
+def test_tall_and_wide_same_orientation_share_a_bucket():
+    """A (16, 6) tall leaf and a (6, 16) wide leaf live on the same
+    manifold (orientation key (6, 16)) and land in ONE bucket, the tall
+    member marked for transpose — in every grouping mode that buckets."""
+    tree = {
+        "wide": stiefel.random_stiefel(KEY, (6, 16)),
+        "tall": jnp.swapaxes(
+            stiefel.random_stiefel(jax.random.PRNGKey(1), (6, 16)), -1, -2
+        ),
+    }
+    for grouping in ("auto", "padded"):
+        plan = _plan(tree, grouping)
+        assert len(plan.groups) == 1
+        (g,) = plan.groups
+        assert (g.p, g.n, g.batch) == (6, 16, 2)
+        assert sorted(m.transpose for m in g.members) == [False, True]
+        assert not g.ragged  # same manifold shape: no padding needed
+
+
+def test_vector_leaf_error_names_the_leaf_and_shape():
+    leaves, treedef = jax.tree.flatten({"v": jnp.ones((4,))})
+    with pytest.raises(ValueError, match=r"matrices \(\.\.\., p, n\); leaf 0"):
+        plan_groups(leaves, treedef, "auto")
+    with pytest.raises(ValueError, match="matrices"):
+        plan_groups(leaves, treedef, "padded")
+
+
+def test_unknown_grouping_rejected():
+    leaves, treedef = jax.tree.flatten({"w": jnp.ones((2, 4))})
+    with pytest.raises(ValueError, match="grouping"):
+        plan_groups(leaves, treedef, "bogus")
+
+
+# ------------------------------------------------------------- cost model
+
+
+def test_megagroups_merge_near_shapes_and_split_far_ones():
+    """Shapes inside the same aligned tile merge for free; a shape whose
+    padding waste exceeds the dispatch overhead stays separate."""
+    f32 = jnp.dtype(jnp.float32)
+    near = [(8, 60, 64, f32), (8, 64, 64, f32), (4, 50, 64, f32)]
+    assert plan_megagroups(near) == [[0, 1, 2]]
+
+    # huge mismatched bucket: padding 4096 small matrices from (4, 64)
+    # up to (256, 2048) wastes ~2000x the overhead -> never merges
+    far = [(4, 64, 4096, f32), (256, 2048, 64, f32)]
+    assert plan_megagroups(far) == [[0], [1]]
+
+
+def test_megagroups_overhead_knob_controls_merging():
+    f32 = jnp.dtype(jnp.float32)
+    shapes = [(8, 128, 8, f32), (16, 256, 8, f32)]
+    # generous overhead: merging two tiny dispatches wins
+    assert plan_megagroups(shapes, DISPATCH_OVERHEAD_BYTES) == [[0, 1]]
+    # zero overhead: any padding is a pure loss
+    assert plan_megagroups(shapes, 0) == [[0], [1]]
+
+
+def test_megagroup_partition_is_deterministic_and_dtype_pure():
+    shapes = [
+        (8, 64, 16, jnp.dtype(jnp.float32)),
+        (8, 64, 16, jnp.dtype(jnp.bfloat16)),
+        (4, 60, 16, jnp.dtype(jnp.float32)),
+        (4, 60, 16, jnp.dtype(jnp.bfloat16)),
+    ]
+    part = plan_megagroups(shapes)
+    assert part == plan_megagroups(shapes)  # deterministic
+    for idxs in part:
+        assert len({shapes[i][3] for i in idxs}) == 1
+
+
+def test_aligned_stack_bytes_is_backend_aware(monkeypatch):
+    # On TPU the kernel pads to (8, 128) tiles anyway: sub-tile
+    # raggedness is free and (4, 60) costs the same as (8, 128).
+    monkeypatch.setattr(schedule, "_tile", lambda: (8, 128))
+    assert aligned_stack_bytes(4, 60, 2, jnp.float32) == \
+        aligned_stack_bytes(8, 128, 2, jnp.float32)
+    # The jnp path (CPU/GPU) executes every padded element: true bytes.
+    monkeypatch.setattr(schedule, "_tile", lambda: (1, 1))
+    assert aligned_stack_bytes(4, 60, 2, jnp.float32) == 2 * 4 * 60 * 4
+    assert aligned_stack_bytes(8, 128, 1, jnp.float32) == 8 * 128 * 4
+
+
+def test_finalized_megagroup_offsets_and_segments_consistent():
+    """Members keep flat-leaf order with contiguous offsets; the valid
+    segments RLE exactly covers the batch."""
+    tree = {
+        "a": stiefel.random_stiefel(KEY, (2, 4, 96)),
+        "b": stiefel.random_stiefel(jax.random.PRNGKey(1), (8, 128)),
+        "c": stiefel.random_stiefel(jax.random.PRNGKey(2), (3, 4, 96)),
+    }
+    plan = _plan(tree, "padded")
+    assert len(plan.groups) == 1
+    (g,) = plan.groups
+    assert [m.leaf for m in g.members] == [0, 1, 2]
+    off = 0
+    for m in g.members:
+        assert m.offset == off
+        off += m.count
+    assert off == g.batch == 6
+    pv, nv = g.valid_shape_arrays()
+    np.testing.assert_array_equal(pv, [4, 4, 8, 4, 4, 4])
+    np.testing.assert_array_equal(nv, [96, 96, 128, 96, 96, 96])
+
+
+def test_dispatch_cost_penalizes_tiled_shapes():
+    from repro.kernels.ops import FUSED_TRACE_HBM_PASSES
+
+    f32 = jnp.dtype(jnp.float32)
+    small = schedule.dispatch_cost_bytes(16, 256, 1, f32, 0)
+    huge = schedule.dispatch_cost_bytes(512, 4096, 1, f32, 0)
+    # the huge shape blows the whole-kernel VMEM budget -> 15% penalty
+    assert huge > FUSED_TRACE_HBM_PASSES * aligned_stack_bytes(512, 4096, 1, f32)
+    assert small == FUSED_TRACE_HBM_PASSES * aligned_stack_bytes(16, 256, 1, f32)
