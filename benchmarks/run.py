@@ -41,6 +41,7 @@ def main(argv=None):
         precision_ablation,
         procrustes,
         roofline,
+        serve_bench,
         unitary_pc,
     )
 
@@ -58,6 +59,8 @@ def main(argv=None):
         "many_matrices_sharded": lambda: many_matrices.run_sharded(   # §Sharded
             full=args.full, smoke=args.smoke),
         "group_roofline": lambda: roofline.run_group_step(            # §Fusion
+            full=args.full, smoke=args.smoke),
+        "serve": lambda: serve_bench.run(                             # §Serving
             full=args.full, smoke=args.smoke),
     }
     only = set(args.only.split(",")) if args.only else None

@@ -1,0 +1,285 @@
+"""Serving benchmark suite — measured continuous batching (BENCH_serve.json).
+
+What it measures, all through ``common.RECORDS`` so
+``check_regression.py`` can gate it:
+
+  serve/fold/<arch>       wall time to fold the trained ConstraintSet into
+                          inference params (+ post-fold feasibility).
+  serve/load/x<NNN>       open-loop offered load at NNN% of the probed
+                          closed-loop capacity (>= 3 levels, one above
+                          capacity so admission control fires):
+                          us_per_call = p50 per-token latency; extras carry
+                          tokens/s, p99, TTFT, slot/block utilization,
+                          prefill-stall fraction, completed/rejected.
+  serve/prefill/chunked   p99 inter-token gap inflicted on concurrent
+  serve/prefill/whole     decoders by a long prompt arriving mid-stream,
+                          with chunked-prefill scheduling vs one
+                          whole-prompt dispatch.
+  serve/prefill/stall_ratio   whole/chunked p99 gap ratio (the headline:
+                          chunking bounds decode stall by one chunk).
+
+Smoke mode shrinks sizes but emits the SAME record names, so the CI
+``serve-smoke`` job can pin the name contract against the committed
+baseline with ``check_regression.py --names-only``.
+
+Standalone:  python -m benchmarks.serve_bench [--smoke|--full] [--json OUT]
+Orchestrated: benchmarks.run --only serve --json OUT
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import time
+
+import numpy as np
+
+from . import common
+
+
+def _sizes(full: bool, smoke: bool) -> dict:
+    if smoke:
+        return dict(
+            n_requests=12, max_new=8, n_slots=4, n_blocks=64, block_size=8,
+            prompt_lo=4, prompt_hi=24, prefill_chunk=8, max_queue=16,
+            long_prompt=512, stall_decode_tokens=32, stall_long_new=4,
+        )
+    if full:
+        return dict(
+            n_requests=64, max_new=24, n_slots=8, n_blocks=192, block_size=16,
+            prompt_lo=8, prompt_hi=96, prefill_chunk=16, max_queue=32,
+            long_prompt=4096, stall_decode_tokens=64, stall_long_new=4,
+        )
+    return dict(
+        n_requests=32, max_new=16, n_slots=8, n_blocks=128, block_size=16,
+        prompt_lo=8, prompt_hi=48, prefill_chunk=16, max_queue=24,
+        long_prompt=2048, stall_decode_tokens=48, stall_long_new=4,
+    )
+
+
+def _setup(arch: str = "smollm-360m"):
+    """Smoke-scale model with on-manifold (folded) serving weights."""
+    import jax
+    from repro.configs import get_config
+    from repro.models import ortho, transformer as tfm
+    from repro.serve import extract_constraint_set, fold_constraint_set
+
+    cfg = get_config(arch, smoke=True)
+    params = ortho.project_init(tfm.init_params(jax.random.PRNGKey(0), cfg), cfg)
+
+    # orthogonality-aware inference: serving params come out of a fold of
+    # the (here: freshly projected) constraint stacks — the trained-weights
+    # handoff path — and the fold itself is timed + feasibility-checked
+    cs = extract_constraint_set(params, cfg)
+    t0 = time.perf_counter()
+    res = fold_constraint_set(params, cfg, cs)
+    dt = time.perf_counter() - t0
+    common.emit(
+        f"serve/fold/{arch}", 1e6 * dt,
+        f"max_dist={res.max_distance:.2e} n_leaves={res.n_leaves}",
+        max_distance=res.max_distance, n_leaves=res.n_leaves,
+    )
+    return res.params, cfg
+
+
+def _make_engine(params, cfg, S, **overrides):
+    from repro.serve import ServeEngine
+
+    kw = dict(
+        n_slots=S["n_slots"], n_blocks=S["n_blocks"],
+        block_size=S["block_size"], prefill_chunk=S["prefill_chunk"],
+        max_queue=S["max_queue"],
+    )
+    kw.update(overrides)
+    return ServeEngine(params, cfg, **kw)
+
+
+def _prompts(S, n, rng):
+    return [
+        rng.integers(0, 256, size=(int(rng.integers(S["prompt_lo"],
+                                                    S["prompt_hi"] + 1)),))
+        .astype(np.int32)
+        for _ in range(n)
+    ]
+
+
+def _capacity_probe(params, cfg, S) -> tuple[float, float]:
+    """Closed-loop burst capacity (tokens/s, requests/s); also warms the
+    compiled prefill/decode programs so load runs measure steady state."""
+    from repro.serve import Request
+
+    eng = _make_engine(params, cfg, S, max_queue=None)
+    rng = np.random.default_rng(0)
+    prompts = _prompts(S, S["n_requests"], rng)
+    for uid, p in enumerate(prompts):
+        eng.submit(Request(uid=uid, prompt=p, max_new_tokens=S["max_new"]))
+    t0 = time.perf_counter()
+    finished = eng.run()
+    dt = time.perf_counter() - t0
+    tokens = sum(len(r.out_tokens) for r in finished)
+    return tokens / dt, len(finished) / dt
+
+
+def _run_load(params, cfg, S, offered_req_s: float, label: str):
+    """Open-loop arrivals at ``offered_req_s``; drain; emit one record."""
+    from repro.serve import Request
+
+    eng = _make_engine(params, cfg, S)
+    rng = np.random.default_rng(1)
+    prompts = _prompts(S, S["n_requests"], rng)
+    inter = 1.0 / offered_req_s
+    t_start = time.perf_counter()
+    arrivals = [t_start + i * inter for i in range(len(prompts))]
+    next_up, rejected = 0, 0
+    while next_up < len(prompts) or eng.has_work():
+        now = time.perf_counter()
+        while next_up < len(prompts) and arrivals[next_up] <= now:
+            r = Request(uid=next_up, prompt=prompts[next_up],
+                        max_new_tokens=S["max_new"])
+            if eng.try_submit(r) is not None:
+                rejected += 1
+            next_up += 1
+        if not eng.step() and next_up < len(prompts):
+            time.sleep(min(0.001, max(0.0, arrivals[next_up] - now)))
+    wall = time.perf_counter() - t_start
+
+    finished = eng.finished
+    tokens = sum(len(r.out_tokens) for r in finished)
+    gaps, ttfts = [], []
+    for r in finished:
+        ttfts.append(r.t_first - r.t_submit)
+        gaps.extend(np.diff(r.token_times))
+    gaps = np.asarray(gaps) if gaps else np.asarray([0.0])
+    ttfts = np.asarray(ttfts) if ttfts else np.asarray([0.0])
+    util = np.asarray(eng.stats["util_samples"]) if eng.stats["util_samples"] \
+        else np.zeros((1, 2))
+    p50, p99 = np.percentile(gaps, [50, 99])
+    stall_frac = eng.stats["prefill_time_s"] / max(wall, 1e-9)
+    common.emit(
+        f"serve/load/{label}", 1e6 * p50,
+        f"tok/s={tokens / wall:.1f} p99={1e3 * p99:.2f}ms "
+        f"done={len(finished)} rej={rejected}",
+        offered_req_s=float(offered_req_s),
+        tokens_per_s=float(tokens / wall),
+        p50_token_latency_ms=float(1e3 * p50),
+        p99_token_latency_ms=float(1e3 * p99),
+        ttft_p50_ms=float(1e3 * np.percentile(ttfts, 50)),
+        completed=len(finished), rejected=int(rejected),
+        slot_utilization=float(util[:, 0].mean()),
+        block_utilization=float(util[:, 1].mean()),
+        prefill_stall_frac=float(stall_frac),
+        n_slots=S["n_slots"], n_blocks=S["n_blocks"],
+        block_size=S["block_size"],
+    )
+
+
+def _stall_scenario(params, cfg, S, chunked: bool) -> float:
+    """p99 inter-token gap suffered by established decoders when one long
+    prompt arrives: chunked-prefill schedule vs whole-prompt dispatch."""
+    from repro.serve import Request
+
+    from repro.serve import blocks_needed
+
+    long_len = S["long_prompt"]
+    chunk = S["prefill_chunk"] if chunked else long_len
+    rng = np.random.default_rng(2)
+    n_short = S["n_slots"] - 1
+    # dedicated pool geometry: the long prompt must be long enough that its
+    # whole-prompt dispatch is compute-bound (O(L^2) attention), not just
+    # one more dispatch-overhead unit — identical in both modes so decode
+    # tick cost is held constant and only the prefill schedule differs
+    bs = S["block_size"]
+    n_blocks = (blocks_needed(long_len + S["stall_long_new"], bs)
+                + n_short * blocks_needed(6 + S["stall_decode_tokens"], bs) + 2)
+    eng = _make_engine(params, cfg, S, prefill_chunk=chunk,
+                       prefill_token_budget=chunk, max_queue=None,
+                       n_blocks=n_blocks,
+                       max_model_len=long_len + S["stall_long_new"])
+    for uid in range(n_short):
+        eng.submit(Request(
+            uid=uid, prompt=rng.integers(0, 256, size=(6,)).astype(np.int32),
+            max_new_tokens=S["stall_decode_tokens"],
+        ))
+    # establish the decoders (and, first call, compile this chunk shape)
+    for _ in range(64):
+        eng.step()
+        if all(st == "decode" for st in eng.slot_state[:n_short]):
+            break
+    t_arrive = time.perf_counter()
+    eng.submit(Request(
+        uid=99, prompt=rng.integers(0, 256, size=(long_len,)).astype(np.int32),
+        max_new_tokens=S["stall_long_new"],
+    ))
+    eng.run()
+    gaps = []
+    for r in eng.finished:
+        if r.uid == 99:
+            continue
+        # a gap counts if it ENDS after the long prompt arrived — the
+        # whole-prompt stall lives in the single gap spanning t_arrive,
+        # so filtering both endpoints would silently drop it
+        times = r.token_times
+        gaps.extend(t1 - t0 for t0, t1 in zip(times, times[1:])
+                    if t1 >= t_arrive)
+    gaps = np.asarray(gaps) if gaps else np.asarray([0.0])
+    p99 = float(np.percentile(gaps, 99))
+    mode = "chunked" if chunked else "whole"
+    common.emit(
+        f"serve/prefill/{mode}", 1e6 * p99,
+        f"max_gap={1e3 * gaps.max():.2f}ms long_len={long_len}",
+        p99_gap_ms=float(1e3 * p99), max_gap_ms=float(1e3 * gaps.max()),
+        long_prompt=long_len, prefill_chunk=chunk,
+    )
+    return p99
+
+
+def run(full: bool = False, smoke: bool = False):
+    S = _sizes(full, smoke)
+    params, cfg = _setup()
+
+    cap_tok_s, cap_req_s = _capacity_probe(params, cfg, S)
+    print(f"# capacity probe: {cap_tok_s:.1f} tok/s, {cap_req_s:.2f} req/s",
+          flush=True)
+    for frac, label in ((0.3, "x030"), (0.7, "x070"), (1.5, "x150")):
+        _run_load(params, cfg, S, frac * cap_req_s, label)
+
+    p99_chunked = _stall_scenario(params, cfg, S, chunked=True)
+    p99_whole = _stall_scenario(params, cfg, S, chunked=False)
+    ratio = p99_whole / max(p99_chunked, 1e-9)
+    common.emit(
+        "serve/prefill/stall_ratio", 1e6 * p99_whole,
+        f"whole/chunked={ratio:.1f}x",
+        stall_ratio=float(ratio),
+        p99_chunked_ms=float(1e3 * p99_chunked),
+        p99_whole_ms=float(1e3 * p99_whole),
+    )
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--json", default=None, metavar="OUT.json")
+    args = ap.parse_args(argv)
+
+    print("name,us_per_call,derived", flush=True)
+    common.CURRENT_SUITE = "serve"
+    run(full=args.full, smoke=args.smoke)
+    common.CURRENT_SUITE = None
+    if args.json:
+        payload = {
+            "suites": ["serve"],
+            "full": args.full,
+            "smoke": args.smoke,
+            "records": common.RECORDS,
+        }
+        with open(args.json, "w") as f:
+            json.dump(payload, f, indent=2)
+        print(f"# wrote {len(common.RECORDS)} records to {args.json}",
+              flush=True)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,10 +1,12 @@
-"""Serving example: batched greedy decoding with continuous batching.
+"""Serving example: paged continuous batching with folded orthogonal weights.
 
     PYTHONPATH=src python examples/serve_lm.py
 
-Loads (or trains briefly) a smoke-scale LM, then serves a stream of
-requests through the slot-based engine — more requests than slots, so
-admission/eviction is exercised; prints tokens/s.
+Builds a smoke-scale LM, folds its orthogonal constraint stacks into the
+inference params (asserting post-fold feasibility), then serves a burst of
+requests through the paged engine — more requests than slots, so slot
+recycling and the block allocator are exercised; prints tokens/s and
+engine telemetry.
 """
 
 import sys
@@ -17,14 +19,27 @@ import numpy as np
 
 from repro.configs import get_config
 from repro.models import ortho, transformer as tfm
-from repro.serve.engine import Request, ServeEngine
+from repro.serve import (
+    Request,
+    ServeEngine,
+    extract_constraint_set,
+    fold_constraint_set,
+)
 
 
 def main():
     cfg = get_config("smollm-360m", smoke=True)
     params = ortho.project_init(tfm.init_params(jax.random.PRNGKey(0), cfg), cfg)
 
-    engine = ServeEngine(params, cfg, n_slots=4, cache_len=128)
+    # trained-weights handoff: constraint stacks -> inference params,
+    # with the feasibility contract checked before serving
+    cs = extract_constraint_set(params, cfg)
+    res = fold_constraint_set(params, cfg, cs)
+    print(f"folded {res.n_leaves} constrained leaves "
+          f"(max off-manifold distance {res.max_distance:.2e})")
+
+    engine = ServeEngine(res.params, cfg, n_slots=4, n_blocks=64,
+                         block_size=8, prefill_chunk=16)
     rng = np.random.default_rng(0)
     n_requests = 10
     for uid in range(n_requests):
@@ -36,8 +51,13 @@ def main():
     finished = engine.run()
     dt = time.time() - t0
     total = sum(len(r.out_tokens) for r in finished)
+    s = engine.stats
     print(f"served {len(finished)} requests ({total} tokens) in {dt:.2f}s "
           f"-> {total/dt:.1f} tok/s on CPU")
+    print(f"  {s['n_prefill_dispatches']} prefill chunks "
+          f"({s['prefill_tokens']} prompt tokens), "
+          f"{s['n_decode_dispatches']} decode steps, "
+          f"slot admissions {s['admissions_per_slot']}")
     for r in finished[:5]:
         print(f"  req {r.uid}: prompt_len={len(r.prompt)} -> {r.out_tokens}")
     return 0

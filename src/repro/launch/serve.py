@@ -1,5 +1,6 @@
-"""Serving launcher: batched greedy decoding over a request file or a
-synthetic request stream.
+"""Serving launcher: paged continuous batching over a synthetic request
+stream, with the orthogonal constraint stacks folded into the serving
+params first.
 
   PYTHONPATH=src python -m repro.launch.serve --arch smollm-360m --smoke \
       --requests 8 --max-new 12
@@ -18,7 +19,13 @@ def main(argv=None):
     ap.add_argument("--prompt-len", type=int, default=12)
     ap.add_argument("--max-new", type=int, default=8)
     ap.add_argument("--slots", type=int, default=4)
-    ap.add_argument("--cache-len", type=int, default=128)
+    ap.add_argument("--blocks", type=int, default=64,
+                    help="KV pool size in blocks (block 0 is reserved)")
+    ap.add_argument("--block-size", type=int, default=8,
+                    help="tokens per KV block")
+    ap.add_argument("--prefill-chunk", type=int, default=16)
+    ap.add_argument("--no-fold", action="store_true",
+                    help="skip the constraint-set fold (serve raw params)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
@@ -27,15 +34,28 @@ def main(argv=None):
 
     from ..configs import get_config
     from ..models import ortho, transformer as tfm
-    from ..serve.engine import Request, ServeEngine
+    from ..serve import (
+        Request,
+        ServeEngine,
+        extract_constraint_set,
+        fold_constraint_set,
+    )
 
     cfg = get_config(args.arch, smoke=args.smoke)
     key = jax.random.PRNGKey(args.seed)
     params = tfm.init_params(key, cfg)
     params = ortho.project_init(params, cfg)
 
+    if not args.no_fold:
+        cs = extract_constraint_set(params, cfg)
+        res = fold_constraint_set(params, cfg, cs)
+        params = res.params
+        print(f"folded {res.n_leaves} constrained leaves "
+              f"(max off-manifold distance {res.max_distance:.2e})")
+
     engine = ServeEngine(
-        params, cfg, n_slots=args.slots, cache_len=args.cache_len
+        params, cfg, n_slots=args.slots, n_blocks=args.blocks,
+        block_size=args.block_size, prefill_chunk=args.prefill_chunk,
     )
     rng = np.random.default_rng(args.seed)
     for uid in range(args.requests):
@@ -48,9 +68,12 @@ def main(argv=None):
     finished = engine.run()
     dt = time.time() - t0
     n_tokens = sum(len(r.out_tokens) for r in finished)
+    s = engine.stats
     print(
         f"served {len(finished)} requests, {n_tokens} tokens in {dt:.2f}s "
-        f"({n_tokens / max(dt, 1e-9):.1f} tok/s)"
+        f"({n_tokens / max(dt, 1e-9):.1f} tok/s; "
+        f"{s['n_prefill_dispatches']} prefill chunks, "
+        f"{s['n_decode_dispatches']} decode steps)"
     )
     for r in finished[:4]:
         print(f"  req {r.uid}: {r.out_tokens[:8]}...")

@@ -47,6 +47,30 @@ class KVCache(NamedTuple):
     index: Array  # scalar int32: next write position (ring for SWA)
 
 
+class PagedKVCache(NamedTuple):
+    """Paged K/V storage: a shared pool of fixed-size blocks.
+
+    ``k``/``v`` are ``(n_blocks, block_size, KV, hd)`` (an extra leading
+    ``n_rep`` axis when stacked over scan repeats — ``lax.scan`` slices it
+    off before the per-layer apply sees the cache). There is NO index:
+    per-request positions live in the engine's block tables and ``lengths``
+    operands (``serve/kv_cache.py``). Block 0 is the reserved null/scratch
+    block — the allocator never hands it out, and masked writes are
+    redirected there.
+    """
+
+    k: Array  # (n_blocks, block_size, KV, hd)
+    v: Array  # (n_blocks, block_size, KV, hd)
+
+
+def init_paged_kv_cache(n_blocks: int, block_size: int, cfg, dtype) -> PagedKVCache:
+    kvh, hd = cfg.num_kv_heads, cfg.head_dim
+    return PagedKVCache(
+        k=jnp.zeros((n_blocks, block_size, kvh, hd), dtype),
+        v=jnp.zeros((n_blocks, block_size, kvh, hd), dtype),
+    )
+
+
 def init_kv_cache(batch: int, cache_len: int, cfg, dtype) -> KVCache:
     kvh, hd = cfg.num_kv_heads, cfg.head_dim
     return KVCache(
@@ -222,6 +246,80 @@ def attention_apply(
             preferred_element_type=jnp.float32,
         ).astype(x.dtype)
         out = out.reshape(b, s, h, hd)
+
+    w_o = params["o_proj"].astype(x.dtype)  # (H, hd, d)
+    y = jnp.einsum("bshk,hkd->bsd", out, w_o, preferred_element_type=jnp.float32)
+    return y.astype(x.dtype), new_cache
+
+
+def paged_attention_apply(
+    params,
+    x: Array,
+    cfg,
+    cache: PagedKVCache,
+    *,
+    positions: Array,  # (B, S) absolute token positions
+    block_tables: Array,  # (B, max_blocks) int32 physical block ids (0 = null)
+    write_mask: Array,  # (B, S) bool: False -> write redirected to null block
+    window: Optional[int] = None,
+):
+    """Serving-path attention over a paged KV pool — decode and chunked
+    prefill in one entry point.
+
+    Writes each token's K/V at ``block_tables[b, pos // bs][pos % bs]``
+    (masked tokens go to the reserved null block 0), then attends the
+    queries over the *gathered* logical cache ``pool[block_tables]`` with
+    the causal/window mask expressed on absolute positions. The contraction
+    pattern matches the dense ``attention_apply`` decode path exactly so
+    paged and dense decodes agree to float round-off.
+
+    Invariants the engine maintains (see ``serve/kv_cache.py``): writes per
+    request form a position prefix (pos 0..len-1 all written before any
+    read at q_pos >= len); real blocks are uniquely owned, so masked reads
+    of stale/unwritten entries are the only way foreign data could enter —
+    and those are forced to exactly ``NEG_INF`` before the softmax.
+    """
+    b, s, d = x.shape
+    n_blocks, blk = cache.k.shape[-4], cache.k.shape[-3]
+    max_blocks = block_tables.shape[-1]
+
+    q = _project(params, x, "q_proj")  # (B, S, H, hd)
+    k = _project(params, x, "k_proj")  # (B, S, KV, hd)
+    v = _project(params, x, "v_proj")
+    q = layers.rope(q, positions, cfg.rope_theta)
+    k = layers.rope(k, positions, cfg.rope_theta)
+
+    # -- scatter the new K/V into the pool (null-block redirect for masked)
+    logical = jnp.clip(positions // blk, 0, max_blocks - 1)  # (B, S)
+    phys = jnp.take_along_axis(block_tables, logical, axis=1)  # (B, S)
+    phys = jnp.where(write_mask, phys, 0)
+    offs = jnp.where(write_mask, positions % blk, 0)
+    k_new = cache.k.at[phys, offs].set(k.astype(cache.k.dtype))
+    v_new = cache.v.at[phys, offs].set(v.astype(cache.v.dtype))
+    new_cache = PagedKVCache(k=k_new, v=v_new)
+
+    # -- gather the logical cache and attend (same einsum as dense decode)
+    k_all = k_new[block_tables].reshape(b, max_blocks * blk, *k_new.shape[-2:])
+    v_all = v_new[block_tables].reshape(b, max_blocks * blk, *v_new.shape[-2:])
+    h, kvh, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    groups = h // kvh
+    qg = q.reshape(b, s, kvh, groups, hd)
+    scores = jnp.einsum(
+        "bskgh,btkh->bkgst", qg, k_all.astype(q.dtype),
+        preferred_element_type=jnp.float32,
+    ) * (hd**-0.5)
+    t_pos = jnp.arange(max_blocks * blk)[None, None, None, None, :]
+    q_pos = positions[:, None, None, :, None]
+    valid = t_pos <= q_pos
+    if window is not None:
+        valid = valid & (t_pos > q_pos - window)
+    scores = jnp.where(valid, scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1).astype(v.dtype)
+    out = jnp.einsum(
+        "bkgst,btkh->bskgh", probs, v_all.astype(v.dtype),
+        preferred_element_type=jnp.float32,
+    ).astype(x.dtype)
+    out = out.reshape(b, s, h, hd)
 
     w_o = params["o_proj"].astype(x.dtype)  # (H, hd, d)
     y = jnp.einsum("bshk,hkd->bsd", out, w_o, preferred_element_type=jnp.float32)

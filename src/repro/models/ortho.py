@@ -75,6 +75,52 @@ def orthogonal_leaf_info(params: PyTree, cfg):
     return out
 
 
+def extract_constrained(params: PyTree, cfg) -> tuple:
+    """Flat tuple of the constrained leaves, in ``tree_flatten`` order —
+    the same order :func:`label_tree` + ``optim.partition`` hand them to
+    the grouped orthoptimizer driver, and the order
+    :func:`merge_constrained` expects them back in."""
+    out = []
+    for path, leaf in jax.tree_util.tree_flatten_with_path(params)[0]:
+        if _is_orthogonal_path(_path_str(path), cfg):
+            out.append(leaf)
+    return tuple(out)
+
+
+def merge_constrained(params: PyTree, cfg, leaves) -> PyTree:
+    """Write ``leaves`` (as produced by :func:`extract_constrained`) back
+    into the constrained positions of ``params``; every other leaf passes
+    through untouched. Shape/count mismatches raise."""
+    flat, treedef = jax.tree_util.tree_flatten_with_path(params)
+    it = iter(leaves)
+    out = []
+    n_used = 0
+    for path, leaf in flat:
+        ps = _path_str(path)
+        if _is_orthogonal_path(ps, cfg):
+            try:
+                new = next(it)
+            except StopIteration:
+                raise ValueError(
+                    f"merge_constrained: ran out of leaves at {ps!r}"
+                ) from None
+            if new.shape != leaf.shape:
+                raise ValueError(
+                    f"merge_constrained: {ps!r} expects {leaf.shape}, "
+                    f"got {new.shape}"
+                )
+            out.append(new.astype(leaf.dtype))
+            n_used += 1
+        else:
+            out.append(leaf)
+    leftover = sum(1 for _ in it)
+    if leftover:
+        raise ValueError(
+            f"merge_constrained: {leftover} extra leaves (used {n_used})"
+        )
+    return jax.tree.unflatten(jax.tree.structure(params), out)
+
+
 def _project_leaf(leaf):
     """Project (..., p, n) onto St; tall matrices along the transpose."""
     p, n = leaf.shape[-2:]

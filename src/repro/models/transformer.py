@@ -20,6 +20,7 @@ Entry points: ``init_params``, ``forward``, ``loss_fn``, ``prefill``,
 
 from __future__ import annotations
 
+import dataclasses
 import functools
 from typing import Any, Optional
 
@@ -117,6 +118,7 @@ def _apply_block(
     cache=None,
     memory=None,
     causal: bool = True,
+    paged=None,
 ):
     """Returns (x, aux_loss, new_cache)."""
     aux = jnp.zeros([], jnp.float32)
@@ -125,10 +127,18 @@ def _apply_block(
         # archs with cfg.attention_window use SWA on every attention layer
         # (starcoder2/mixtral global SWA; recurrentgemma local_attn blocks)
         window = cfg.attention_window
-        attn_out, new_cache = attention.attention_apply(
-            p["inner"], h, cfg, positions=positions, causal=causal,
-            window=window, cache=cache,
-        )
+        if paged is not None and cache is not None:
+            block_tables, write_mask = paged
+            attn_out, new_cache = attention.paged_attention_apply(
+                p["inner"], h, cfg, cache, positions=positions,
+                block_tables=block_tables, write_mask=write_mask,
+                window=window,
+            )
+        else:
+            attn_out, new_cache = attention.attention_apply(
+                p["inner"], h, cfg, positions=positions, causal=causal,
+                window=window, cache=cache,
+            )
         x = x + attn_out
         if memory is not None and "cross" in p:
             hc = layers.rmsnorm(p["cross_norm"], x, cfg.norm_eps)
@@ -168,7 +178,8 @@ def _maybe_remat(fn, cfg):
 # -------------------------------------------------------------------- backbone
 
 
-def _run_blocks(params, x, cfg, *, positions=None, caches=None, memory=None):
+def _run_blocks(params, x, cfg, *, positions=None, caches=None, memory=None,
+                paged=None):
     """Run the full layer stack. Returns (x, aux, new_caches)."""
     unit, n_rep, tail = cfg.layer_plan()
     aux_total = jnp.zeros([], jnp.float32)
@@ -189,7 +200,7 @@ def _run_blocks(params, x, cfg, *, positions=None, caches=None, memory=None):
                 def block_fn(p, x, cache_i=cache_i, kind=kind):
                     return _apply_block(
                         kind, p, x, cfg, positions=positions, cache=cache_i,
-                        memory=memory,
+                        memory=memory, paged=paged,
                     )
 
                 x, aux_i, nc = _maybe_remat(block_fn, cfg)(slot_params[i], x)
@@ -220,7 +231,8 @@ def _run_blocks(params, x, cfg, *, positions=None, caches=None, memory=None):
 
             def block_fn(p, x, cache_i=cache_i, kind=kind):
                 return _apply_block(
-                    kind, p, x, cfg, positions=positions, cache=cache_i, memory=memory
+                    kind, p, x, cfg, positions=positions, cache=cache_i,
+                    memory=memory, paged=paged,
                 )
 
             x, aux_i, nc = _maybe_remat(block_fn, cfg)(params["tail"][i], x)
@@ -269,6 +281,7 @@ def forward(
     encoder_memory: Optional[Array] = None,
     caches=None,
     positions=None,
+    paged=None,
 ):
     """Full forward to hidden states. Returns (hidden, aux, new_caches, n_prefix).
 
@@ -290,7 +303,8 @@ def forward(
         n_prefix = frontend_embeds.shape[1]
     x = shard_hints.activation(x)
     x, aux, new_caches = _run_blocks(
-        params, x, cfg, positions=positions, caches=caches, memory=memory
+        params, x, cfg, positions=positions, caches=caches, memory=memory,
+        paged=paged,
     )
     x = shard_hints.activation(x)
     x = layers.rmsnorm(params["final_norm"], x, cfg.norm_eps)
@@ -382,6 +396,96 @@ def cache_specs(cfg, batch: int, cache_len: int):
     return _build_caches(cfg, batch, cache_len, jax.ShapeDtypeStruct)
 
 
+# ------------------------------------------------------ cache layout metadata
+
+
+@dataclasses.dataclass(frozen=True)
+class CacheLeafLayout:
+    """Explicit per-leaf cache layout — the contract serving code programs
+    against instead of guessing axes from ndim/dtype.
+
+    role:
+      "kv"     dense per-slot K/V rows (slot-indexed along ``slot_axis``)
+      "index"  shared write-position scalar (no slot axis)
+      "state"  per-slot recurrent state (rglru/mamba h/conv)
+      "pool"   paged K/V block pool — shared across slots, never reset
+               per-slot (block ownership + masked reads give isolation)
+
+    ``slot_axis`` is the axis indexed by the engine's slot id (1 for leaves
+    stacked over scan repeats, 0 otherwise), or None for shared leaves.
+    Deliberately NOT a pytree node: a layout tree has the same treedef as
+    its cache tree, so ``jax.tree.map(fn, cache, layout)`` pairs each cache
+    leaf with its layout.
+    """
+
+    role: str
+    slot_axis: Optional[int] = None
+
+
+def _block_cache_layout(kind: str, *, stacked: bool, paged: bool):
+    ax = 1 if stacked else 0
+    if kind in ("attn", "moe_attn", "local_attn"):
+        if paged:
+            pool = CacheLeafLayout("pool", None)
+            return attention.PagedKVCache(k=pool, v=pool)
+        kv = CacheLeafLayout("kv", ax)
+        return attention.KVCache(k=kv, v=kv, index=CacheLeafLayout("index", None))
+    state = CacheLeafLayout("state", ax)
+    return (state, state)
+
+
+def _build_cache_layout(cfg, *, paged: bool):
+    unit, n_rep, tail = cfg.layer_plan()
+    out: dict[str, Any] = {}
+    if n_rep > 0:
+        out["unit"] = tuple(
+            _block_cache_layout(kind, stacked=True, paged=paged) for kind in unit
+        )
+    if tail:
+        out["tail"] = tuple(
+            _block_cache_layout(kind, stacked=False, paged=paged) for kind in tail
+        )
+    return out
+
+
+def cache_layout(cfg):
+    """Layout metadata for :func:`init_cache` (same treedef)."""
+    return _build_cache_layout(cfg, paged=False)
+
+
+def paged_cache_layout(cfg):
+    """Layout metadata for :func:`init_paged_cache` (same treedef)."""
+    return _build_cache_layout(cfg, paged=True)
+
+
+def init_paged_cache(cfg, n_slots: int, n_blocks: int, block_size: int):
+    """Serving cache: paged K/V pools for attention blocks (shared across
+    slots, block 0 reserved as null/scratch) + per-slot recurrent state for
+    rglru/mamba blocks. Slot count and worst-case sequence length are
+    decoupled: total KV memory is ``n_blocks * block_size`` positions."""
+    unit, n_rep, tail = cfg.layer_plan()
+
+    def build(kind, make):
+        if kind in ("attn", "moe_attn", "local_attn"):
+            return attention.PagedKVCache(
+                k=make((n_blocks, block_size, cfg.num_kv_heads, cfg.head_dim),
+                       cfg.dtype),
+                v=make((n_blocks, block_size, cfg.num_kv_heads, cfg.head_dim),
+                       cfg.dtype),
+            )
+        shape_map = _block_cache_shape(kind, cfg, n_slots, block_size)
+        return (make(*shape_map["h"]), make(*shape_map["conv"]))
+
+    make = lambda s, d: jnp.zeros(s, d)
+    out: dict[str, Any] = {}
+    if n_rep > 0:
+        make_stacked = lambda s, d: make((n_rep, *s), d)
+        out["unit"] = tuple(build(kind, make_stacked) for kind in unit)
+    if tail:
+        out["tail"] = tuple(build(kind, make) for kind in tail)
+    return out
+
+
 # -------------------------------------------------------------- prefill/decode
 
 
@@ -411,6 +515,89 @@ def decode_step(params, cfg, tokens, caches, *, encoder_memory=None):
         encoder_memory=encoder_memory,
     )
     logits = logits_from_hidden(params, cfg, hidden)
+    return logits, new_caches
+
+
+def decode_step_paged(params, cfg, tokens, caches, *, block_tables, lengths,
+                      write_mask):
+    """One-token decode over the paged cache. tokens: (B, 1); ``lengths``:
+    (B,) int32, the number of cached positions per slot (the new token is
+    written at position ``lengths[b]``); ``write_mask``: (B,) bool —
+    False rows (free / still-prefilling slots riding in the fixed-shape
+    batch) have their K/V writes redirected to the null block so they can
+    never perturb a neighbour's stream."""
+    if cfg.encoder_layers:
+        raise NotImplementedError("paged serving does not support enc-dec archs")
+    positions = lengths.astype(jnp.int32)[:, None]
+    hidden, _, new_caches, _ = forward(
+        params, cfg, tokens, caches=caches, positions=positions,
+        paged=(block_tables, write_mask[:, None]),
+    )
+    logits = logits_from_hidden(params, cfg, hidden)
+
+    # masked rows must not advance per-slot recurrent state either — the
+    # pool writes are null-block-redirected inside the attention kernel,
+    # but rglru/mamba state is recomputed for every batch row, so keep the
+    # old rows wherever write_mask is False
+    layouts = paged_cache_layout(cfg)
+
+    def keep_masked(old, new, lay):
+        if lay.role != "state":
+            return new
+        shape = [1] * new.ndim
+        shape[lay.slot_axis] = write_mask.shape[0]
+        return jnp.where(write_mask.reshape(shape), new, old)
+
+    new_caches = jax.tree.map(keep_masked, caches, new_caches, layouts)
+    return logits, new_caches
+
+
+def prefill_chunk(params, cfg, tokens, caches, *, block_table, start, n_valid,
+                  slot):
+    """Bulk prefill of one chunk of ONE request — a single dispatch per
+    chunk, writing straight into the request's own blocks.
+
+    tokens: (1, C) — positions ``start .. start+C-1`` of the prompt, the
+    tail beyond ``n_valid`` being padding (padded chunks keep the dispatch
+    shape static; pad writes are masked to the null block). ``block_table``:
+    (1, max_blocks). ``slot``: the engine slot, used to address per-slot
+    recurrent state rows (rglru/mamba); archs with recurrent state must
+    dispatch exact-size chunks (``n_valid == C``) because pad tokens would
+    pollute the recurrent scan.
+
+    Returns (last_logits, new_caches): logits at prompt position
+    ``start + n_valid - 1`` (shape (1, 1, V)) and the updated cache.
+    """
+    if cfg.encoder_layers:
+        raise NotImplementedError("paged serving does not support enc-dec archs")
+    layouts = paged_cache_layout(cfg)
+    c = tokens.shape[1]
+
+    def pick(leaf, lay):
+        if lay.role == "state":
+            return jax.lax.dynamic_index_in_dim(
+                leaf, slot, axis=lay.slot_axis, keepdims=True
+            )
+        return leaf
+
+    sliced = jax.tree.map(pick, caches, layouts)
+    positions = (start + jnp.arange(c, dtype=jnp.int32))[None, :]
+    write_mask = (jnp.arange(c) < n_valid)[None, :]
+    hidden, _, new_sliced, _ = forward(
+        params, cfg, tokens, caches=sliced, positions=positions,
+        paged=(block_table, write_mask),
+    )
+    last = jax.lax.dynamic_slice_in_dim(hidden, n_valid - 1, 1, axis=1)
+    logits = logits_from_hidden(params, cfg, last)
+
+    def put(old, new, lay):
+        if lay.role == "state":
+            return jax.lax.dynamic_update_index_in_dim(
+                old, new, slot, axis=lay.slot_axis
+            )
+        return new
+
+    new_caches = jax.tree.map(put, caches, new_sliced, layouts)
     return logits, new_caches
 
 

@@ -1,1 +1,22 @@
-"""serve substrate."""
+"""Serving subsystem: paged continuous batching + orthogonal weight folding.
+
+  engine    ServeEngine (paged KV, chunked prefill, admission control),
+            Request, generate_reference oracle
+  kv_cache  BlockAllocator / BlockTables / reset_slot (layout-driven)
+  fold      fold trained ConstraintSet stacks into inference params
+"""
+
+from .engine import (  # noqa: F401
+    AdmissionError,
+    RejectReason,
+    Request,
+    ServeEngine,
+    generate_reference,
+)
+from .fold import (  # noqa: F401
+    FoldFeasibilityError,
+    FoldResult,
+    extract_constraint_set,
+    fold_constraint_set,
+)
+from .kv_cache import BlockAllocator, BlockTables, blocks_needed, reset_slot  # noqa: F401

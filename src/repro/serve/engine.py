@@ -1,21 +1,46 @@
-"""Serving engine: prefill + decode with continuous batching (lite).
+"""Paged continuous-batching serving engine.
 
-The engine keeps a fixed pool of decode slots; requests are admitted from a
-queue as slots free up (continuous batching a la vLLM/Orca, shrunk to the
-essentials: one shared KV cache, slot-indexed writes). The jitted
-``decode_fn`` always runs the full (B_slots, 1) batch; empty slots decode a
-pad token into a scratch position.
+Requests flow queue -> slot -> finished. A slot is a row in the fixed
+``(n_slots, 1)`` decode batch; its KV lives in fixed-size blocks drawn
+from a shared pool (``kv_cache.BlockAllocator``), so slot count is
+decoupled from worst-case sequence length — admitting a request reserves
+``ceil((prompt_len + max_new_tokens) / block_size)`` blocks up front and
+can therefore never run out of cache mid-flight.
 
-The prefill path runs the full-forward once per request (per-slot prefill)
-and seeds the slot's cache. For the dry-run cells, prefill/decode entry
-points come from ``models.transformer`` directly; this module is the
-driver around them.
+Scheduling (one ``step()`` tick):
+
+  1. **admit** — strict FIFO: the queue head is admitted the moment a
+     free slot AND its block reservation are both available; a stuck head
+     blocks the line (no reordering, so admission order == service order).
+  2. **prefill** — up to ``prefill_token_budget`` prompt tokens are
+     prefilled through bulk ``tfm.prefill_chunk`` dispatches (one dispatch
+     per chunk, writing only into the request's own blocks — neighbouring
+     slots' caches are untouched, unlike the retired per-slot decode-replay
+     prefill which pushed pad tokens through every active slot).
+  3. **decode** — one ``tfm.decode_step_paged`` over the full slot batch;
+     rows that are free or still prefilling ride along masked (their
+     writes are redirected to the null block).
+
+Because long prompts are chopped into budgeted chunks interleaved with
+decode ticks, the decode stall a long prompt can inflict on concurrent
+requests is bounded by one chunk dispatch instead of the whole prompt
+(measured in ``benchmarks/serve_bench.py``).
+
+Admission control: ``submit`` raises :class:`AdmissionError` with a typed
+:class:`RejectReason` when the queue is full or the request can never fit
+(``try_submit`` is the non-raising variant for open-loop load generators).
+
+``generate_reference`` is the sequential one-request-at-a-time oracle
+(dense cache path) that the engine's batched output is pinned against in
+tests.
 """
 
 from __future__ import annotations
 
 import dataclasses
+import time
 from collections import deque
+from enum import Enum
 from typing import Callable, List, Optional
 
 import jax
@@ -23,6 +48,64 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..models import transformer as tfm
+from . import kv_cache
+from .kv_cache import BlockAllocator, BlockTables, blocks_needed
+
+_FREE, _PREFILL, _DECODE = "free", "prefill", "decode"
+
+# Process-wide compiled entry points, keyed by the (hashable, frozen) model
+# config: engines over the same config share compiled prefill/decode
+# programs instead of re-tracing per instance (jax.jit still specializes
+# per operand shape under each callable).
+_JIT_CACHE: dict = {}
+
+
+def _decode_callable(cfg) -> Callable:
+    key = ("decode_paged", cfg)
+    if key not in _JIT_CACHE:
+        _JIT_CACHE[key] = jax.jit(
+            lambda params, tok, caches, bt, lengths, mask: tfm.decode_step_paged(
+                params, cfg, tok, caches, block_tables=bt, lengths=lengths,
+                write_mask=mask,
+            )
+        )
+    return _JIT_CACHE[key]
+
+
+def _prefill_callable(cfg) -> Callable:
+    key = ("prefill_chunk", cfg)
+    if key not in _JIT_CACHE:
+        _JIT_CACHE[key] = jax.jit(
+            lambda params, tok, caches, bt, start, n_valid, slot:
+            tfm.prefill_chunk(
+                params, cfg, tok, caches, block_table=bt, start=start,
+                n_valid=n_valid, slot=slot,
+            )
+        )
+    return _JIT_CACHE[key]
+
+
+def _dense_decode_callable(cfg) -> Callable:
+    key = ("decode_dense", cfg)
+    if key not in _JIT_CACHE:
+        _JIT_CACHE[key] = jax.jit(
+            lambda params, tok, caches: tfm.decode_step(params, cfg, tok, caches)
+        )
+    return _JIT_CACHE[key]
+
+
+class RejectReason(Enum):
+    QUEUE_FULL = "queue_full"        # bounded queue at capacity
+    TOO_LONG = "too_long"            # can never fit: blocks > table/pool
+    EMPTY_PROMPT = "empty_prompt"
+
+
+class AdmissionError(RuntimeError):
+    """Typed admission rejection; ``.reason`` is a :class:`RejectReason`."""
+
+    def __init__(self, reason: RejectReason, msg: str):
+        super().__init__(msg)
+        self.reason = reason
 
 
 @dataclasses.dataclass
@@ -31,104 +114,312 @@ class Request:
     prompt: np.ndarray  # (prompt_len,) int32
     max_new_tokens: int = 16
     out_tokens: Optional[list] = None
+    # telemetry, filled by the engine (perf_counter timestamps)
+    t_submit: float = 0.0
+    t_admit: float = 0.0
+    t_first: float = 0.0
+    t_finish: float = 0.0
+    token_times: Optional[list] = None
 
 
 class ServeEngine:
-    def __init__(self, params, cfg, *, n_slots: int = 8, cache_len: int = 1024,
-                 greedy: bool = True):
+    """Continuous batching over a paged KV cache.
+
+    Parameters
+    ----------
+    n_slots: concurrent decode lanes (rows of the decode batch).
+    n_blocks: physical KV blocks in the pool (block 0 is reserved).
+    block_size: tokens per block.
+    max_model_len: longest prompt+generation a request may need; sets the
+        block-table width (and with it the gathered-attention span).
+        Defaults to the whole pool.
+    prefill_chunk: prompt tokens per prefill dispatch. Attention-only
+        archs pad the final chunk to this size (one compiled shape);
+        archs with recurrent state (rglru/mamba) dispatch exact sizes.
+    prefill_token_budget: max prompt tokens prefilled per tick — the
+        knob bounding how long a prompt may stall concurrent decodes.
+        Defaults to ``prefill_chunk``.
+    max_queue: bounded admission queue; ``None`` = unbounded.
+    """
+
+    def __init__(self, params, cfg, *, n_slots: int = 8, n_blocks: int = 128,
+                 block_size: int = 16, max_model_len: Optional[int] = None,
+                 prefill_chunk: int = 32,
+                 prefill_token_budget: Optional[int] = None,
+                 max_queue: Optional[int] = None, greedy: bool = True):
+        if cfg.encoder_layers:
+            raise NotImplementedError("paged serving supports decoder-only archs")
+        if not greedy:
+            raise NotImplementedError("only greedy decoding is implemented")
         self.params = params
         self.cfg = cfg
         self.n_slots = n_slots
-        self.cache_len = cache_len
+        self.n_blocks = n_blocks
+        self.block_size = block_size
+        if max_model_len is None:
+            max_model_len = (n_blocks - 1) * block_size
+        self.max_model_len = max_model_len
+        self.max_blocks = blocks_needed(max_model_len, block_size)
+        self.prefill_chunk = prefill_chunk
+        self.prefill_token_budget = (
+            prefill_chunk if prefill_token_budget is None else prefill_token_budget
+        )
+        self.max_queue = max_queue
         self.greedy = greedy
-        self.caches = tfm.init_cache(cfg, n_slots, cache_len)
-        self.slot_free = [True] * n_slots
+
+        # recurrent-state archs can't pad prefill chunks (pad tokens would
+        # pollute the scan state), so they trade one compiled shape for
+        # exact-size dispatches
+        kinds = set(cfg.block_pattern)
+        self._pad_chunks = not (kinds & {"rglru", "mamba"})
+
+        self.caches = tfm.init_paged_cache(cfg, n_slots, n_blocks, block_size)
+        self.layouts = tfm.paged_cache_layout(cfg)
+        self.allocator = BlockAllocator(n_blocks)
+        self.tables = BlockTables(n_slots, self.max_blocks)
+
+        self.slot_state = [_FREE] * n_slots
         self.slot_req: List[Optional[Request]] = [None] * n_slots
-        self.slot_remaining = np.zeros(n_slots, np.int32)
+        self.slot_len = np.zeros(n_slots, np.int64)       # cached positions
+        self.slot_prefill_pos = np.zeros(n_slots, np.int64)
+        self.slot_remaining = np.zeros(n_slots, np.int64)
         self.queue: deque = deque()
         self.finished: list = []
 
-        self._decode = jax.jit(
-            lambda params, tok, caches: tfm.decode_step(params, cfg, tok, caches)
-        )
+        self.stats: dict = {
+            "admitted": 0,
+            "finished": 0,
+            "rejected": {},                      # reason.value -> count
+            "admissions_per_slot": [0] * n_slots,
+            "prefill_tokens": 0,
+            "n_prefill_dispatches": 0,
+            "n_decode_dispatches": 0,
+            "prefill_time_s": 0.0,
+            "decode_time_s": 0.0,
+            "util_samples": [],                  # (slot_frac, block_frac)
+            "ticks": 0,
+        }
+
+        self._decode_fn = _decode_callable(cfg)
+        self._prefill_fn = _prefill_callable(cfg)
 
     # -------------------------------------------------------------- admission
 
-    def submit(self, req: Request):
+    def submit(self, req: Request) -> None:
+        """Enqueue a request; raises :class:`AdmissionError` on rejection."""
+        plen = len(req.prompt)
+        if plen == 0:
+            self._reject(RejectReason.EMPTY_PROMPT, "empty prompt")
+        need = blocks_needed(plen + req.max_new_tokens, self.block_size)
+        if need > self.max_blocks or need > self.n_blocks - 1:
+            self._reject(
+                RejectReason.TOO_LONG,
+                f"request needs {need} blocks "
+                f"(table holds {self.max_blocks}, pool {self.n_blocks - 1})",
+            )
+        if self.max_queue is not None and len(self.queue) >= self.max_queue:
+            self._reject(
+                RejectReason.QUEUE_FULL, f"queue at capacity {self.max_queue}"
+            )
         req.out_tokens = []
+        req.token_times = []
+        req.t_submit = time.perf_counter()
         self.queue.append(req)
 
+    def try_submit(self, req: Request) -> Optional[RejectReason]:
+        """Non-raising :meth:`submit`; returns the reason on rejection."""
+        try:
+            self.submit(req)
+            return None
+        except AdmissionError as e:
+            return e.reason
+
+    def _reject(self, reason: RejectReason, msg: str):
+        r = self.stats["rejected"]
+        r[reason.value] = r.get(reason.value, 0) + 1
+        raise AdmissionError(reason, msg)
+
     def _admit(self):
-        for slot in range(self.n_slots):
-            if not self.queue:
+        """Strict FIFO: admit the head while a slot + its blocks are free."""
+        while self.queue:
+            free = [s for s in range(self.n_slots) if self.slot_state[s] == _FREE]
+            if not free:
                 return
-            if not self.slot_free[slot]:
-                continue
-            req = self.queue.popleft()
-            self._prefill_slot(slot, req)
+            req = self.queue[0]
+            need = blocks_needed(
+                len(req.prompt) + req.max_new_tokens, self.block_size
+            )
+            blocks = self.allocator.alloc(need)
+            if blocks is None:
+                return  # head-of-line waits for blocks; order preserved
+            self.queue.popleft()
+            slot = free[0]
+            self.tables.assign(slot, blocks)
+            # zero per-slot recurrent state rows (layout-driven; KV pool
+            # blocks need no reset — unique ownership + position masking)
+            self.caches = kv_cache.reset_slot(self.caches, self.layouts, slot)
+            self.slot_state[slot] = _PREFILL
+            self.slot_req[slot] = req
+            self.slot_len[slot] = 0
+            self.slot_prefill_pos[slot] = 0
+            self.slot_remaining[slot] = req.max_new_tokens
+            req.t_admit = time.perf_counter()
+            self.stats["admitted"] += 1
+            self.stats["admissions_per_slot"][slot] += 1
 
-    def _prefill_slot(self, slot: int, req: Request):
-        """Per-slot prefill: run the prompt through decode steps (simple,
-        correct; a production engine lowers a bulk prefill kernel — our
-        prefill_32k dry-run cell covers that path)."""
-        self.slot_free[slot] = False
-        self.slot_req[slot] = req
-        self.slot_remaining[slot] = req.max_new_tokens
-        # reset this slot's cache region
-        self.caches = _reset_slot(self.caches, slot)
-        for t in req.prompt:
-            tok = jnp.full((self.n_slots, 1), 0, jnp.int32).at[slot, 0].set(int(t))
-            _, self.caches = self._decode(self.params, tok, self.caches)
-        # note: other slots decoded a pad token into their stream; for the
-        # lite engine we accept this (their caches see pad) — slots are
-        # reset at admission so cross-request state never leaks.
+    # ----------------------------------------------------------------- prefill
 
-    # ----------------------------------------------------------------- decode
+    def _dispatch_prefill(self, slot: int, req: Request, pos: int,
+                          n_valid: int) -> np.ndarray:
+        """One chunk dispatch; returns fp32 logits at the chunk's last
+        valid position, shape (V,)."""
+        c = self.prefill_chunk if self._pad_chunks else n_valid
+        tokens = np.zeros((1, c), np.int32)
+        tokens[0, :n_valid] = req.prompt[pos:pos + n_valid]
+        bt = jnp.asarray(self.tables.array[slot:slot + 1])
+        logits, self.caches = self._prefill_fn(
+            self.params, jnp.asarray(tokens), self.caches, bt, pos, n_valid,
+            slot,
+        )
+        return np.asarray(logits.astype(jnp.float32))[0, 0]
 
-    def step(self):
-        """One engine tick: admit, decode one token for all active slots."""
-        self._admit()
-        active = [s for s in range(self.n_slots) if not self.slot_free[s]]
+    def _prefill_tick(self) -> bool:
+        """Spend up to ``prefill_token_budget`` prompt tokens, round-robin
+        over prefilling slots. Returns True if any chunk ran."""
+        budget = self.prefill_token_budget
+        ran = False
+        progressed = True
+        while budget > 0 and progressed:
+            progressed = False
+            for slot in range(self.n_slots):
+                if budget <= 0:
+                    break
+                if self.slot_state[slot] != _PREFILL:
+                    continue
+                req = self.slot_req[slot]
+                plen = len(req.prompt)
+                pos = int(self.slot_prefill_pos[slot])
+                n_valid = min(self.prefill_chunk, plen - pos, budget)
+                t0 = time.perf_counter()
+                logits = self._dispatch_prefill(slot, req, pos, n_valid)
+                dt = time.perf_counter() - t0
+                self.stats["prefill_time_s"] += dt
+                self.stats["n_prefill_dispatches"] += 1
+                self.stats["prefill_tokens"] += n_valid
+                pos += n_valid
+                budget -= n_valid
+                self.slot_prefill_pos[slot] = pos
+                self.slot_len[slot] = pos
+                ran = progressed = True
+                if pos >= plen:
+                    # prompt complete: its last logits yield the first token
+                    now = time.perf_counter()
+                    tok = int(np.argmax(logits))
+                    req.out_tokens.append(tok)
+                    req.token_times.append(now)
+                    req.t_first = now
+                    self.slot_remaining[slot] -= 1
+                    self.slot_state[slot] = _DECODE
+                    if self.slot_remaining[slot] <= 0:
+                        self._finish(slot)
+        return ran
+
+    # ------------------------------------------------------------------ decode
+
+    def _decode_tick(self) -> bool:
+        """One decode step for every decoding slot. Returns True if ran."""
+        active = [s for s in range(self.n_slots) if self.slot_state[s] == _DECODE]
         if not active:
             return False
         last = np.zeros((self.n_slots, 1), np.int32)
+        lengths = np.zeros(self.n_slots, np.int32)
+        mask = np.zeros(self.n_slots, bool)
         for s in active:
-            req = self.slot_req[s]
-            prev = req.out_tokens[-1] if req.out_tokens else int(req.prompt[-1])
-            last[s, 0] = prev
-        logits, self.caches = self._decode(self.params, jnp.asarray(last), self.caches)
+            last[s, 0] = self.slot_req[s].out_tokens[-1]
+            lengths[s] = self.slot_len[s]
+            mask[s] = True
+        t0 = time.perf_counter()
+        logits, self.caches = self._decode_fn(
+            self.params, jnp.asarray(last), self.caches,
+            jnp.asarray(self.tables.array), jnp.asarray(lengths),
+            jnp.asarray(mask),
+        )
         logits = np.asarray(logits.astype(jnp.float32))[:, 0]  # (B, V)
+        now = time.perf_counter()
+        self.stats["decode_time_s"] += now - t0
+        self.stats["n_decode_dispatches"] += 1
         for s in active:
-            nxt = int(np.argmax(logits[s]))
+            self.slot_len[s] += 1
             req = self.slot_req[s]
+            nxt = int(np.argmax(logits[s]))
             req.out_tokens.append(nxt)
+            req.token_times.append(now)
             self.slot_remaining[s] -= 1
             if self.slot_remaining[s] <= 0:
-                self.finished.append(req)
-                self.slot_free[s] = True
-                self.slot_req[s] = None
+                self._finish(s)
         return True
 
-    def run(self, max_ticks: int = 10_000):
+    def _finish(self, slot: int):
+        req = self.slot_req[slot]
+        req.t_finish = time.perf_counter()
+        self.finished.append(req)
+        self.allocator.free(self.tables.release(slot))
+        self.slot_state[slot] = _FREE
+        self.slot_req[slot] = None
+        self.slot_len[slot] = 0
+        self.slot_remaining[slot] = 0
+        self.stats["finished"] += 1
+
+    # ------------------------------------------------------------------- drive
+
+    def has_work(self) -> bool:
+        return bool(self.queue) or any(
+            st != _FREE for st in self.slot_state
+        )
+
+    def step(self) -> bool:
+        """One engine tick: admit -> chunked prefill -> decode."""
+        self._admit()
+        ran = self._prefill_tick()
+        ran = self._decode_tick() or ran
+        n_active = sum(st != _FREE for st in self.slot_state)
+        self.stats["util_samples"].append((
+            n_active / self.n_slots,
+            self.allocator.n_used / max(self.n_blocks - 1, 1),
+        ))
+        self.stats["ticks"] += 1
+        return ran
+
+    def run(self, max_ticks: int = 100_000):
         ticks = 0
-        while (self.queue or any(not f for f in self.slot_free)) and ticks < max_ticks:
+        while self.has_work() and ticks < max_ticks:
             self.step()
             ticks += 1
         return self.finished
 
 
-def _reset_slot(caches, slot: int):
-    """Zero one slot's cache rows (leading-batch or stacked layouts)."""
+# ------------------------------------------------------------------ reference
 
-    def reset(leaf):
-        if not hasattr(leaf, "ndim") or leaf.ndim == 0:
-            return leaf
-        if leaf.ndim >= 2 and leaf.shape[0] != 1 and leaf.dtype != jnp.int32:
-            # stacked (n_rep, B, ...) or plain (B, ...): find the batch axis
-            axis = 1 if leaf.ndim >= 3 and leaf.shape[1] > slot else 0
-            idx = [slice(None)] * leaf.ndim
-            idx[axis] = slot
-            return leaf.at[tuple(idx)].set(0)
-        return leaf
 
-    return jax.tree.map(reset, caches)
+def generate_reference(params, cfg, prompt, max_new_tokens: int, *,
+                       cache_len: Optional[int] = None) -> list:
+    """Sequential single-request greedy oracle on the dense cache path —
+    the correctness pin for the batched paged engine (one request, one
+    slot, per-token decode; no batching, no paging)."""
+    prompt = np.asarray(prompt, np.int32)
+    if cache_len is None:
+        cache_len = len(prompt) + max_new_tokens
+    caches = tfm.init_cache(cfg, 1, cache_len)
+    decode = _dense_decode_callable(cfg)
+    logits = None
+    for t in prompt:
+        logits, caches = decode(params, jnp.full((1, 1), int(t), jnp.int32), caches)
+    out: list = []
+    while len(out) < max_new_tokens:
+        tok = int(np.argmax(np.asarray(logits.astype(jnp.float32))[0, 0]))
+        out.append(tok)
+        if len(out) < max_new_tokens:
+            logits, caches = decode(
+                params, jnp.full((1, 1), tok, jnp.int32), caches
+            )
+    return out

@@ -1,0 +1,101 @@
+"""Fold trained orthogonal constraint stacks into inference weights.
+
+Training at scale keeps the constrained matrices in a
+:class:`~repro.core.api.ConstraintSet` — stacked ``(B, p, n)`` resting
+storage that the grouped/fused optimizer ladder consumes without
+per-step repacking. Serving consumes the *parameter tree*: this module
+closes the loop by writing a trained set back into the transformer
+params (``models.ortho`` selects the destinations — the same
+``label_tree`` paths the optimizer partitioned on) and asserting the
+folded weights actually sit on their Stiefel manifolds before they are
+allowed near the engine.
+
+Feasibility contract: every folded matrix ``X`` (tall leaves measured
+along their transpose, matching the optimizer's orientation) must have
+``max ||X X^H - I||_F <= atol``. POGO's invariant is feasibility *at all
+times*, so a violation here means the checkpoint/stack is corrupt or was
+produced by an infeasible method — folding it would silently serve a
+model whose attention projections are not the trained operator. We fail
+loudly with the worst offender named instead.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax.numpy as jnp
+
+from ..core import stiefel
+from ..core.api import ConstraintSet
+from ..models import ortho
+
+DEFAULT_ATOL = 1e-2
+
+
+class FoldFeasibilityError(RuntimeError):
+    """A folded matrix is off-manifold beyond ``atol``."""
+
+    def __init__(self, path: str, distance: float, atol: float):
+        super().__init__(
+            f"folded leaf {path!r} is off-manifold: "
+            f"max ||XX^H - I|| = {distance:.3e} > atol={atol:.3e}"
+        )
+        self.path = path
+        self.distance = distance
+        self.atol = atol
+
+
+@dataclasses.dataclass(frozen=True)
+class FoldResult:
+    params: object          # the updated parameter tree
+    n_leaves: int           # constrained leaves written
+    max_distance: float     # worst post-fold feasibility residual
+    worst_path: str         # leaf path of that residual
+
+
+def extract_constraint_set(params, cfg, grouping: str = "auto") -> ConstraintSet:
+    """Stack the constrained leaves of ``params`` into a ConstraintSet —
+    the serving-side mirror of the training handoff (same leaf order as
+    ``ortho.label_tree`` + ``optim.partition``)."""
+    leaves = ortho.extract_constrained(params, cfg)
+    if not leaves:
+        raise ValueError(
+            f"config {cfg.name!r} has no constrained families "
+            f"(ortho_families={cfg.ortho_families!r})"
+        )
+    return ConstraintSet.from_tree(leaves, grouping)
+
+
+def fold_constraint_set(params, cfg, cs: ConstraintSet, *,
+                        atol: float = DEFAULT_ATOL) -> FoldResult:
+    """Write the trained stacks of ``cs`` back into ``params`` and verify
+    post-fold feasibility.
+
+    ``cs`` must have been built by :func:`extract_constraint_set` (or over
+    the identical flat-leaf tuple): its ``to_tree()`` order is zipped back
+    onto the ``label_tree``-selected positions. Raises
+    :class:`FoldFeasibilityError` when any folded leaf exceeds ``atol``.
+    """
+    folded = cs.to_tree()
+    if not isinstance(folded, tuple):
+        folded = tuple(folded)
+    merged = ortho.merge_constrained(params, cfg, folded)
+
+    worst = 0.0
+    worst_path = ""
+    infos = ortho.orthogonal_leaf_info(merged, cfg)
+    new_leaves = ortho.extract_constrained(merged, cfg)
+    for (path, _shape), leaf in zip(infos, new_leaves):
+        x = leaf.astype(jnp.float32)
+        if x.shape[-2] > x.shape[-1]:
+            x = jnp.swapaxes(x, -1, -2)
+        d = float(jnp.max(stiefel.manifold_distance(x)))
+        if d > worst:
+            worst, worst_path = d, path
+    if worst > atol:
+        raise FoldFeasibilityError(worst_path, worst, atol)
+    return FoldResult(
+        params=merged, n_leaves=len(new_leaves), max_distance=worst,
+        worst_path=worst_path,
+    )

@@ -1,0 +1,139 @@
+"""Paged KV-cache bookkeeping: block pool allocator, per-slot block tables,
+and layout-driven slot reset.
+
+The device side of the paged cache lives in ``models.transformer``
+(``init_paged_cache`` / ``paged_cache_layout``) and ``models.attention``
+(``PagedKVCache``, ``paged_attention_apply``). This module is the host
+side the engine programs against:
+
+  * :class:`BlockAllocator` — a free list over physical blocks
+    ``1 .. n_blocks-1``. Block 0 is the reserved null/scratch block:
+    masked writes (padding tokens, inactive decode rows) are redirected
+    there by the attention kernel and it is never handed to a request,
+    so a request's blocks are uniquely owned for their whole lifetime.
+  * :class:`BlockTables` — the host mirror of the ``(n_slots,
+    max_blocks)`` int32 operand mapping logical block index -> physical
+    block id per slot (0-padded past the allocation).
+  * :func:`reset_slot` — zero one slot's per-slot cache rows using the
+    explicit :class:`~repro.models.transformer.CacheLeafLayout` metadata
+    (replaces the old ndim/dtype axis guess). Pool leaves are never
+    reset: isolation comes from unique block ownership plus position
+    masking, not from zeroing.
+
+Capacity invariant the engine maintains: a request is admitted only after
+reserving ``ceil((prompt_len + max_new_tokens) / block_size)`` blocks, so
+a running request can never hit an out-of-blocks condition mid-flight
+(no preemption needed).
+"""
+
+from __future__ import annotations
+
+from typing import List, Optional, Sequence
+
+import jax
+import numpy as np
+
+NULL_BLOCK = 0
+
+
+def blocks_needed(n_tokens: int, block_size: int) -> int:
+    """Blocks required to hold ``n_tokens`` cache positions."""
+    return -(-n_tokens // block_size)
+
+
+class BlockAllocator:
+    """Free-list allocator over physical blocks ``1 .. n_blocks-1``.
+
+    ``alloc`` is all-or-nothing (returns None when the request cannot be
+    satisfied) so admission control can reserve a request's worst case
+    up front. Double frees and foreign frees raise.
+    """
+
+    def __init__(self, n_blocks: int):
+        if n_blocks < 2:
+            raise ValueError("need >= 2 blocks (block 0 is the null block)")
+        self.n_blocks = n_blocks
+        # LIFO free list: recently freed blocks are re-used first
+        self._free: List[int] = list(range(n_blocks - 1, 0, -1))
+        self._used: set[int] = set()
+
+    @property
+    def n_free(self) -> int:
+        return len(self._free)
+
+    @property
+    def n_used(self) -> int:
+        return len(self._used)
+
+    def alloc(self, k: int) -> Optional[List[int]]:
+        """Reserve ``k`` blocks; None if fewer than ``k`` are free."""
+        if k < 0:
+            raise ValueError(f"alloc({k})")
+        if k > len(self._free):
+            return None
+        out = [self._free.pop() for _ in range(k)]
+        self._used.update(out)
+        return out
+
+    def free(self, blocks: Sequence[int]) -> None:
+        for b in blocks:
+            if b not in self._used:
+                raise ValueError(f"free of unallocated block {b}")
+            self._used.remove(b)
+            self._free.append(b)
+
+
+class BlockTables:
+    """Host mirror of the per-slot block-table operand.
+
+    ``array`` is the ``(n_slots, max_blocks)`` int32 ndarray handed to the
+    jitted decode/prefill dispatches; rows are 0-padded (the null block)
+    past each slot's allocation, which the position mask makes unreadable.
+    """
+
+    def __init__(self, n_slots: int, max_blocks: int):
+        self.n_slots = n_slots
+        self.max_blocks = max_blocks
+        self.array = np.zeros((n_slots, max_blocks), np.int32)
+        self._owned: List[List[int]] = [[] for _ in range(n_slots)]
+
+    def assign(self, slot: int, blocks: Sequence[int]) -> None:
+        if len(blocks) > self.max_blocks:
+            raise ValueError(
+                f"{len(blocks)} blocks > table width {self.max_blocks}"
+            )
+        if self._owned[slot]:
+            raise ValueError(f"slot {slot} already holds blocks")
+        self._owned[slot] = list(blocks)
+        self.array[slot, :] = NULL_BLOCK
+        self.array[slot, : len(blocks)] = blocks
+
+    def release(self, slot: int) -> List[int]:
+        """Clear the slot's row; returns the blocks for the allocator."""
+        blocks = self._owned[slot]
+        self._owned[slot] = []
+        self.array[slot, :] = NULL_BLOCK
+        return blocks
+
+    def owned(self, slot: int) -> List[int]:
+        return list(self._owned[slot])
+
+
+def reset_slot(caches, layouts, slot: int):
+    """Zero slot ``slot``'s rows in every per-slot cache leaf.
+
+    ``layouts`` is the matching-treedef metadata from
+    ``transformer.cache_layout`` / ``transformer.paged_cache_layout``;
+    leaves whose layout has ``slot_axis is None`` (pool, shared index) are
+    returned unchanged. Unlike the retired ndim/dtype heuristic this
+    resets slot-indexed leaves of ANY dtype — including int32 state.
+    """
+
+    def reset(leaf, lay):
+        if lay.slot_axis is None:
+            return leaf
+        idx = [slice(None)] * leaf.ndim
+        idx[lay.slot_axis] = slot
+        return leaf.at[tuple(idx)].set(0)
+
+    return jax.tree.map(reset, caches, layouts)
