@@ -125,7 +125,7 @@ def compare(baseline: dict[str, dict], current: dict[str, dict],
         # trimmed smoke grid losing its big cells). Fail loudly so the
         # grid or the floor gets fixed, not discovered months later.
         regressions.append(
-            f"every matched baseline cell is below --min-gate-us "
+            "every matched baseline cell is below --min-gate-us "
             f"{min_gate_us:.0f} — the timing gate is vacuous (add a "
             "bigger cell to the current grid or lower the floor)"
         )

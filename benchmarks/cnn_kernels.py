@@ -19,7 +19,6 @@ import jax.numpy as jnp
 from repro import optim
 from repro.configs import pogo_paper
 from repro.core import orthogonal, stiefel
-from repro.kernels import ops as kops
 
 from .common import emit
 

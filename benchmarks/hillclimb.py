@@ -14,13 +14,11 @@ from __future__ import annotations
 import argparse
 import json
 import os
-import sys
 
 
 def _cost_for(arch, shape, mesh, overrides=None, train_overrides=None):
     import jax
 
-    from benchmarks import roofline as R
     from repro.configs import get_config
     from repro.distributed import shard_hints, sharding
     from repro.launch import dryrun as dr
@@ -98,7 +96,7 @@ def _cost_for(arch, shape, mesh, overrides=None, train_overrides=None):
     factor = (n_rep - 1) + len(tail) / len(unit)
     flops = f1 + factor * (f2 - f1)
     byts = b1 + factor * (b2 - b1)
-    from benchmarks.roofline import ICI_BW, PEAK_FLOPS, HBM_BW, _extrapolate_ops, collective_seconds
+    from benchmarks.roofline import PEAK_FLOPS, HBM_BW, _extrapolate_ops, collective_seconds
 
     ops_est = _extrapolate_ops(o1, o2, factor)
     return {

@@ -9,11 +9,8 @@ learning rates.
 
 from __future__ import annotations
 
-import jax
-import jax.numpy as jnp
-
 from repro import optim
-from repro.core import PogoConfig, orthogonal_from_config, stiefel
+from repro.core import PogoConfig, orthogonal_from_config
 
 from .common import emit, run_method
 from .pca import build_problem

@@ -270,7 +270,7 @@ def run_heterogeneous(full: bool = False, smoke: bool = False):
         p_groups = out["padded"][3]
         if not (a_groups >= 8 and p_groups <= 3):
             raise RuntimeError(
-                f"padded scheduler missed the dispatch-count target: "
+                "padded scheduler missed the dispatch-count target: "
                 f"auto={a_groups} (want >=8), padded={p_groups} (want <=3)"
             )
 

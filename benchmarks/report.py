@@ -7,7 +7,6 @@ Emits the §Dry-run and §Roofline tables; EXPERIMENTS.md embeds them.
 
 from __future__ import annotations
 
-import glob
 import json
 import os
 

@@ -29,7 +29,6 @@ other benches).
 from __future__ import annotations
 
 import argparse
-import dataclasses
 import json
 import os
 import sys

@@ -18,10 +18,9 @@ sys.path.insert(0, "src")
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro import optim
-from repro.core import orthogonal, stiefel
+from repro.core import orthogonal
 from repro.models import frontends, layers, ortho
 from repro.configs.base import ModelConfig
 from repro.models import attention

@@ -55,7 +55,7 @@ def main(argv=None):
     n_params = sum(x.size for x in jax.tree.leaves(params))
     n_ortho = len(ortho.orthogonal_leaf_info(params, cfg))
     print(f"model: {n_params/1e6:.1f}M params, {n_ortho} orthogonal leaves "
-          f"(stacked St(64, 768) per-head q/k projections)")
+          "(stacked St(64, 768) per-head q/k projections)")
 
     tc = TrainConfig(
         learning_rate=3e-3, pogo_learning_rate=0.4, warmup_steps=20,

@@ -1,0 +1,23 @@
+"""Static-analysis subsystem: program invariants + repo lint.
+
+Two passes over the codebase's performance contracts (DESIGN.md §Static
+analysis):
+
+* **Program analysis** (``lowering`` + ``rules``): lower real entry
+  points (constraint step, grouped update, paged decode, serve prefill,
+  train step) against ``ShapeDtypeStruct`` inputs — no allocation — and
+  run rule objects over the jaxpr and the optimized HLO: donation really
+  aliases, shard_map update bodies stay collective-free, kernel plans fit
+  VMEM, no silent dtype widening, no giant captured constants, one
+  compiled program per constraint group.
+* **Source lint** (``ast_rules``): repo-specific AST rules — unmasked
+  identities on ragged-reachable paths, ``block_until_ready`` inside hot
+  loops, step entry points without donation, Pallas calls outside
+  ``kernels/``.
+
+Findings are :class:`~repro.analysis.report.Finding` records rendered by
+``report`` and driven by ``python -m repro.analysis.cli``; CI hard-fails
+on any ``error``-severity finding.
+"""
+
+from .report import Finding, Severity  # noqa: F401  (public API)

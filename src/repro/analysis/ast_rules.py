@@ -1,0 +1,222 @@
+"""Source-level (AST) lint pass — repo-specific rules.
+
+These encode conventions the program pass can't see (it only analyzes
+what got traced): masked identities on ragged-reachable code paths,
+no host syncs inside hot loops, donation on jitted step entry points,
+Pallas confined to ``kernels/``.
+
+Waivers: a finding is suppressed by a ``# lint-ok: <rule-name> <reason>``
+comment on the offending line or the line directly above it. Waivers are
+for sites where the rule's premise doesn't apply (a timing loop whose
+JOB is to block; a whole-matrix oracle never fed padded operands) — not
+for silencing real violations.
+"""
+
+from __future__ import annotations
+
+import ast
+import os
+
+from .report import Finding
+
+# Modules a ragged (zero-padded megagroup) dispatch can reach: any
+# identity built here must mask its padded diagonal (stiefel.masked_eye
+# or an explicit pv guard). core/stiefel.py is the mask-primitive
+# provider itself and whole-matrix-only modules stay out of the list.
+RAGGED_MODULES = (
+    os.path.join("core", "api.py"),
+    os.path.join("core", "quartic.py"),
+    os.path.join("kernels", "ref.py"),
+    os.path.join("kernels", "ops.py"),
+    os.path.join("kernels", "fused_step.py"),
+)
+
+ALL_AST_RULES = (
+    "unmasked-eye", "block-in-loop", "jit-step-donation",
+    "pallas-outside-kernels",
+)
+
+
+def _has_waiver(lines: list[str], lineno: int, rule: str) -> bool:
+    """True when the offending line, or the contiguous comment block
+    directly above it, carries ``# lint-ok: <rule> ...``."""
+
+    def matches(text: str) -> bool:
+        return "lint-ok:" in text and rule in text.split("lint-ok:", 1)[1]
+
+    if 1 <= lineno <= len(lines) and matches(lines[lineno - 1]):
+        return True
+    ln = lineno - 1
+    while 1 <= ln <= len(lines) and lines[ln - 1].lstrip().startswith("#"):
+        if matches(lines[ln - 1]):
+            return True
+        ln -= 1
+    return False
+
+
+def _dotted(expr) -> str:
+    """Dotted name of an attribute/name expression ('' otherwise)."""
+    parts = []
+    while isinstance(expr, ast.Attribute):
+        parts.append(expr.attr)
+        expr = expr.value
+    if isinstance(expr, ast.Name):
+        parts.append(expr.id)
+        return ".".join(reversed(parts))
+    return ""
+
+
+def _is_jit(expr) -> bool:
+    name = _dotted(expr)
+    return name == "jit" or name.endswith(".jit")
+
+
+def _jit_decorator_kwargs(dec):
+    """kwarg names of a jit decorator, or None when ``dec`` isn't one.
+    Handles ``@jax.jit``, ``@jax.jit(...)`` and
+    ``@functools.partial(jax.jit, ...)``."""
+    if _is_jit(dec):
+        return set()
+    if isinstance(dec, ast.Call):
+        if _is_jit(dec.func):
+            return {kw.arg for kw in dec.keywords}
+        fname = _dotted(dec.func)
+        if (fname == "partial" or fname.endswith(".partial")) \
+                and dec.args and _is_jit(dec.args[0]):
+            return {kw.arg for kw in dec.keywords}
+    return None
+
+
+class _Visitor(ast.NodeVisitor):
+    """Single-pass walker tracking enclosing functions / loops / ifs."""
+
+    def __init__(self, rel: str, lines: list[str], rules):
+        self.rel = rel
+        self.lines = lines
+        self.rules = rules
+        self.func_stack: list[str] = []
+        self.loop_depth = 0
+        self.if_tests: list[str] = []
+        self.findings: list[Finding] = []
+
+    def emit(self, rule: str, severity: str, node, detail: str):
+        if _has_waiver(self.lines, node.lineno, rule):
+            return
+        self.findings.append(Finding(
+            rule, severity, f"{self.rel}:{node.lineno}", detail))
+
+    # --- context tracking
+    def visit_FunctionDef(self, node):
+        if "jit-step-donation" in self.rules and "step" in node.name:
+            for dec in node.decorator_list:
+                kwargs = _jit_decorator_kwargs(dec)
+                if kwargs is not None and not (
+                        kwargs & {"donate_argnums", "donate_argnames"}):
+                    self.emit(
+                        "jit-step-donation", "error", dec,
+                        f"jitted step entry point {node.name!r} without "
+                        "donate_argnums — steps must donate params/"
+                        "optimizer state (core/api.constraint_step is "
+                        "the pattern).",
+                    )
+        self.func_stack.append(node.name)
+        self.generic_visit(node)
+        self.func_stack.pop()
+
+    visit_AsyncFunctionDef = visit_FunctionDef
+
+    def _visit_loop(self, node):
+        self.loop_depth += 1
+        self.generic_visit(node)
+        self.loop_depth -= 1
+
+    visit_For = visit_While = visit_AsyncFor = _visit_loop
+
+    def visit_If(self, node):
+        self.if_tests.append(ast.unparse(node.test))
+        self.generic_visit(node)
+        self.if_tests.pop()
+
+    def visit_IfExp(self, node):
+        self.if_tests.append(ast.unparse(node.test))
+        self.generic_visit(node)
+        self.if_tests.pop()
+
+    # --- call-site rules
+    def visit_Call(self, node):
+        name = _dotted(node.func)
+
+        if "unmasked-eye" in self.rules and name.endswith("jnp.eye") \
+                and self.rel.endswith(RAGGED_MODULES):
+            allowed = (
+                any("masked" in f or "ragged" in f for f in self.func_stack)
+                or any("pv" in t for t in self.if_tests)
+            )
+            if not allowed:
+                self.emit(
+                    "unmasked-eye", "error", node,
+                    "unmasked jnp.eye in a ragged-reachable module: a "
+                    "zero-padded megagroup dispatch would subtract 1 on "
+                    "padded diagonal rows — use stiefel.masked_eye(p, pv) "
+                    "or guard on pv (DESIGN.md §Ragged scheduling).",
+                )
+
+        if "block-in-loop" in self.rules \
+                and name.endswith("block_until_ready") and self.loop_depth:
+            self.emit(
+                "block-in-loop", "warning", node,
+                "block_until_ready inside a loop serializes host and "
+                "device per iteration — hoist the sync out of the loop "
+                "(waive with lint-ok for intentional timing barriers).",
+            )
+
+        if "jit-step-donation" in self.rules and _is_jit(node.func) \
+                and node.args and isinstance(node.args[0], ast.Name) \
+                and "step" in node.args[0].id:
+            kwargs = {kw.arg for kw in node.keywords}
+            if not (kwargs & {"donate_argnums", "donate_argnames"}):
+                self.emit(
+                    "jit-step-donation", "error", node,
+                    f"jax.jit({node.args[0].id}) without donate_argnums — "
+                    "step entry points must donate params/optimizer state "
+                    "(core/api.constraint_step is the pattern).",
+                )
+
+        if "pallas-outside-kernels" in self.rules \
+                and name.endswith("pallas_call") \
+                and not self.rel.startswith("kernels" + os.sep):
+            self.emit(
+                "pallas-outside-kernels", "error", node,
+                "direct pl.pallas_call outside kernels/ — kernels carry "
+                "the padding/VMEM-planning contract (kernels/ops.py); "
+                "call the planned wrapper instead.",
+            )
+
+        self.generic_visit(node)
+
+
+def lint_file(path: str, root: str, rules=ALL_AST_RULES) -> list[Finding]:
+    with open(path) as f:
+        src = f.read()
+    rel = os.path.relpath(path, root)
+    try:
+        tree = ast.parse(src, filename=path)
+    except SyntaxError as e:
+        return [Finding(
+            "syntax", "error", f"{rel}:{e.lineno or 0}",
+            f"unparseable source: {e.msg}",
+        )]
+    v = _Visitor(rel, src.splitlines(), set(rules))
+    v.visit(tree)
+    return v.findings
+
+
+def lint_tree(root: str, rules=ALL_AST_RULES) -> list[Finding]:
+    """Lint every .py file under ``root`` (the src/repro package)."""
+    findings: list[Finding] = []
+    for dirpath, _, filenames in sorted(os.walk(root)):
+        for fn in sorted(filenames):
+            if fn.endswith(".py"):
+                findings.extend(
+                    lint_file(os.path.join(dirpath, fn), root, rules))
+    return findings

@@ -1,0 +1,97 @@
+"""orthocheck driver: lower entry points, run rules, render findings.
+
+Usage (the static-analysis CI job runs exactly this, on an 8-fake-device
+host mesh so the sharded group schedule is what gets analyzed):
+
+  PYTHONPATH=src python -m repro.analysis.cli --entrypoints all --rules all \
+      [--json results/analysis.json] [--fail-on error]
+
+``--rules`` takes program rules (DonationAliased, CollectiveFree, ...)
+and/or AST rules (unmasked-eye, block-in-loop, ...); ``all`` runs both
+passes. Exit status is 1 when any finding at or above ``--fail-on``
+severity survives, 0 otherwise.
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+
+
+def main(argv=None) -> int:
+    from . import ast_rules, lowering, report, rules
+
+    ap = argparse.ArgumentParser(prog="repro.analysis.cli")
+    ap.add_argument(
+        "--entrypoints", default="all",
+        help="comma-separated entry points to lower, or 'all' "
+             f"({', '.join(sorted(lowering.ENTRYPOINTS))})")
+    ap.add_argument(
+        "--rules", default="all",
+        help="comma-separated rule names, or 'all' (program rules: "
+             f"{', '.join(sorted(rules.PROGRAM_RULES))}; ast rules: "
+             f"{', '.join(ast_rules.ALL_AST_RULES)})")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="also write the findings as JSON (CI artifact)")
+    ap.add_argument("--fail-on", default="error",
+                    choices=report.SEVERITIES,
+                    help="exit 1 at or above this severity (default: error)")
+    ap.add_argument("--no-mesh", action="store_true",
+                    help="analyze single-device programs even when several "
+                         "devices are visible")
+    args = ap.parse_args(argv)
+
+    if args.entrypoints == "all":
+        entry_names = sorted(lowering.ENTRYPOINTS)
+    else:
+        entry_names = [e for e in args.entrypoints.split(",") if e]
+
+    if args.rules == "all":
+        prog_rules = sorted(rules.PROGRAM_RULES)
+        lint_rules = list(ast_rules.ALL_AST_RULES)
+    else:
+        asked = [r for r in args.rules.split(",") if r]
+        unknown = [r for r in asked
+                   if r not in rules.PROGRAM_RULES
+                   and r not in ast_rules.ALL_AST_RULES]
+        if unknown:
+            ap.error(f"unknown rule(s): {unknown}")
+        prog_rules = [r for r in asked if r in rules.PROGRAM_RULES]
+        lint_rules = [r for r in asked if r in ast_rules.ALL_AST_RULES]
+
+    findings = []
+
+    needs_entries = any(
+        rules.PROGRAM_RULES[r].kind == "entry" for r in prog_rules)
+    entries = []
+    if prog_rules and needs_entries:
+        mesh = None if args.no_mesh else "auto"
+        for name in entry_names:
+            print(f"lowering {name} ...", flush=True)
+            entries.append(lowering.lower_entry(name, mesh=mesh))
+    if prog_rules:
+        findings.extend(rules.run_rules(entries, prog_rules))
+
+    if lint_rules:
+        root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+        findings.extend(ast_rules.lint_tree(root, lint_rules))
+
+    print(report.render_text(findings))
+    if args.json:
+        d = os.path.dirname(args.json)
+        if d:
+            os.makedirs(d, exist_ok=True)
+        meta = {
+            "entrypoints": entry_names if needs_entries and prog_rules else [],
+            "program_rules": prog_rules,
+            "ast_rules": lint_rules,
+        }
+        with open(args.json, "w") as f:
+            f.write(report.to_json(findings, meta=meta))
+        print(f"wrote {args.json}")
+    return report.exit_code(findings, fail_on=args.fail_on)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,415 @@
+"""Abstract lowering of real entry points + shared HLO scanning helpers.
+
+Everything here works on ``ShapeDtypeStruct`` inputs — entry points are
+traced, lowered and compiled but never executed, so the full config grid
+is analyzable on a laptop CPU. ``parse_collectives`` (previously in
+``launch/dryrun.py``, which now re-exports it) is the single collective
+scanner shared by the dryrun CLI, the roofline bench and the
+``CollectiveBudget`` rule.
+
+A :class:`LoweredEntry` bundles what the rules in ``analysis.rules``
+consume: the closed jaxpr (with sub-jaxprs for shard_map/pjit bodies
+intact), the optimized HLO text, the flat donated/input/output avals,
+and a ``trace_probe`` for the entries where the one-program-per-group
+gate is checkable by running two concrete steps (see ``RetraceGate``).
+"""
+
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import re
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+# --------------------------------------------------------------- HLO scanning
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8": 1,
+    "s64": 8, "s32": 4, "s16": 2, "s8": 1, "u64": 8, "u32": 4, "u16": 2,
+    "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all", "collective-permute")
+
+
+def parse_collectives(hlo_text: str):
+    """Sum per-device operand bytes of every collective op in (post-SPMD)
+    HLO, keyed by op kind; also capture replica-group sizes."""
+    out = {k: {"bytes": 0, "count": 0, "ops": []} for k in _COLLECTIVES}
+    # e.g.:  %ag = bf16[4,128]{1,0} all-gather(...), replica_groups={{0,1,..}}
+    pat = re.compile(
+        r"=\s*(?:\()?((?:[a-z0-9]+\[[0-9,]*\][^ ]*(?:,\s*)?)+)\)?\s+"
+        r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    )
+    shape_pat = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+    # legacy explicit groups: replica_groups={{0,1,...},...}
+    group_pat = re.compile(r"replica_groups=\{\{([0-9, ]+)\}")
+    # iota groups: replica_groups=[n_groups,group_size]<=[...]
+    iota_pat = re.compile(r"replica_groups=\[(\d+),(\d+)\]<=")
+    for line in hlo_text.splitlines():
+        m = pat.search(line)
+        if not m:
+            continue
+        kind = m.group(2)
+        # NOTE: the LHS shape is the op's OUTPUT (per-device); the
+        # link-traffic factors in benchmarks/roofline.py assume output bytes
+        nbytes = 0
+        for dt, dims in shape_pat.findall(m.group(1)):
+            if dt not in _DTYPE_BYTES:
+                continue
+            n = 1
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+            nbytes += n * _DTYPE_BYTES[dt]
+        gm = group_pat.search(line)
+        if gm:
+            gsize = len(gm.group(1).split(","))
+        else:
+            im = iota_pat.search(line)
+            gsize = int(im.group(2)) if im else 0
+        out[kind]["bytes"] += nbytes
+        out[kind]["count"] += 1
+        out[kind]["ops"].append({"bytes": nbytes, "group": gsize})
+    return out
+
+
+_SHORT_DTYPE = {
+    "float64": "f64", "float32": "f32", "bfloat16": "bf16", "float16": "f16",
+    "int64": "s64", "int32": "s32", "int16": "s16", "int8": "s8",
+    "uint64": "u64", "uint32": "u32", "uint16": "u16", "uint8": "u8",
+    "bool": "pred", "complex64": "c64", "complex128": "c128",
+}
+
+
+def hlo_shape_str(aval) -> str:
+    """The shape string XLA prints for an aval: ``f32[64,16,256]``."""
+    short = _SHORT_DTYPE.get(str(jnp.dtype(aval.dtype)))
+    if short is None:
+        raise ValueError(f"no HLO shape name for dtype {aval.dtype}")
+    return f"{short}[{','.join(str(d) for d in aval.shape)}]"
+
+
+def find_copies_of(hlo_text: str, shape_strs) -> list[str]:
+    """HLO lines copying a buffer of any of the given shapes — donated
+    buffers must be rewritten in place, so a param-stack-sized ``copy``
+    means the aliasing silently failed (the shared implementation behind
+    ``DonationAliased`` and tests/test_distributed.py's donation scan)."""
+    wanted = tuple(shape_strs)
+    return [
+        ln for ln in hlo_text.splitlines()
+        if "copy(" in ln and any(s in ln for s in wanted)
+    ]
+
+
+# ------------------------------------------------------------- lowered entries
+
+
+@dataclasses.dataclass
+class LoweredEntry:
+    """One entry point, lowered abstractly, ready for rule evaluation."""
+
+    name: str
+    jaxpr: object                  # ClosedJaxpr (pjit/shard_map bodies inside)
+    hlo: str                       # optimized (post-SPMD) HLO text
+    donated: tuple                 # flat donated-input avals (may be empty)
+    in_avals: tuple                # flat input avals
+    out_avals: tuple               # flat output avals
+    n_devices: int = 1
+    # Runs the entry concretely (tiny shapes) twice and returns the
+    # api.trace_events() log — only set where the retrace gate applies.
+    trace_probe: Optional[Callable[[], list]] = None
+    meta: dict = dataclasses.field(default_factory=dict)
+
+
+def _flat_avals(tree):
+    return tuple(
+        jax.ShapeDtypeStruct(leaf.shape, leaf.dtype)
+        for leaf in jax.tree.leaves(tree)
+    )
+
+
+def lower_fn(name: str, fn, args, *, donate_argnums=(), mesh=None,
+             trace_probe=None, meta=None) -> LoweredEntry:
+    """Lower ``fn`` against ShapeDtypeStruct ``args`` and capture jaxpr +
+    optimized HLO. No arrays are allocated."""
+    jitted = jax.jit(fn, donate_argnums=donate_argnums)
+    ctx = mesh if mesh is not None else contextlib.nullcontext()
+    with ctx:
+        hlo = jitted.lower(*args).compile().as_text()
+    closed = jax.make_jaxpr(fn)(*args)
+    out_sds = jax.eval_shape(fn, *args)
+    donated = ()
+    for i in donate_argnums:
+        donated += _flat_avals(args[i])
+    return LoweredEntry(
+        name=name,
+        jaxpr=closed,
+        hlo=hlo,
+        donated=donated,
+        in_avals=_flat_avals(args),
+        out_avals=_flat_avals(out_sds),
+        n_devices=mesh.size if mesh is not None else 1,
+        trace_probe=trace_probe,
+        meta=meta or {},
+    )
+
+
+def _data_mesh():
+    """All-device ("data",) mesh, or None on a single-device process —
+    the CI job forces 8 host devices so the sharded group schedule (and
+    its shard_map bodies) are what gets analyzed there."""
+    n = len(jax.devices())
+    if n < 2:
+        return None
+    from ..launch.mesh import make_mesh
+
+    return make_mesh((n,), ("data",))
+
+
+def _shard_stacks(cs_sds, mesh):
+    """Re-attach batch shardings to an abstract ConstraintSet's stacks."""
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    from ..core import api
+
+    sh = tuple(
+        jax.ShapeDtypeStruct(
+            s.shape, s.dtype,
+            sharding=NamedSharding(mesh, P("data", *([None] * (s.ndim - 1)))),
+        )
+        for s in cs_sds.stacks
+    )
+    return api.ConstraintSet(cs_sds.plan, sh)
+
+
+def _shard_state(state_sds, mesh, batch_sizes):
+    """Batch-shard any state leaf whose leading dim is a group batch
+    (moments, per-group distances) — mirrors what a real sharded init
+    produces, so donation analysis sees production layouts."""
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    def attach(leaf):
+        if leaf.ndim >= 1 and leaf.shape[0] in batch_sizes \
+                and leaf.shape[0] % mesh.size == 0:
+            sharding = NamedSharding(
+                mesh, P("data", *([None] * (leaf.ndim - 1))))
+            return jax.ShapeDtypeStruct(leaf.shape, leaf.dtype,
+                                        sharding=sharding)
+        return leaf
+
+    return jax.tree.map(attach, state_sds)
+
+
+# The heterogeneous tree used by the group-step entries: three leaf
+# shapes that bucket into distinct groups under "auto" and merge into one
+# ragged megagroup under "padded" (same family as tests/test_groups.py).
+_HET_TREE_SHAPES = {
+    "a": (4, 8, 128),
+    "b": (3, 4, 96),
+    "d": (8, 120),
+}
+
+
+def _het_tree_sds():
+    return {
+        k: jax.ShapeDtypeStruct(s, jnp.float32)
+        for k, s in _HET_TREE_SHAPES.items()
+    }
+
+
+def _het_tree_zeros():
+    import numpy as np
+
+    return {k: np.zeros(s, np.float32) for k, s in _HET_TREE_SHAPES.items()}
+
+
+def _group_trace_probe(grouping: str):
+    """Run two concrete jitted update steps and return the trace log —
+    every group must have traced exactly one program (RetraceGate)."""
+
+    def probe():
+        import numpy as np
+
+        from .. import optim
+        from ..core import api
+
+        params = _het_tree_zeros()
+        grads = {
+            k: 0.1 * np.ones(s, np.float32)
+            for k, s in _HET_TREE_SHAPES.items()
+        }
+        opt = api.orthogonal(
+            "pogo", learning_rate=0.1, grouping=grouping,
+            base_optimizer=optim.chain(optim.trace(0.3)),
+        )
+        state = opt.init(params)
+        step = jax.jit(opt.update)
+        api.clear_trace_events()
+        try:
+            _, state = step(grads, state, params)
+            step(grads, state, params)
+            return api.trace_events()
+        finally:
+            api.clear_trace_events()
+
+    return probe
+
+
+def _entry_constraint_step(mesh) -> LoweredEntry:
+    """The donated resting-state step over stacked ConstraintSets — the
+    paper's at-scale path (PR 3/4): B matrices, one fused group, params +
+    optimizer state donated."""
+    from .. import optim
+    from ..core import api
+
+    b = 64 if (mesh is None or 64 % mesh.size == 0) else 8 * mesh.size
+    tree = {"w": jax.ShapeDtypeStruct((b, 16, 256), jnp.float32)}
+    params = jax.eval_shape(lambda t: api.ConstraintSet.from_tree(t), tree)
+    grads = jax.eval_shape(lambda t: api.ConstraintSet.from_tree(t), tree)
+    opt = api.orthogonal(
+        "pogo", learning_rate=0.1, use_kernel=True,
+        base_optimizer=optim.chain(optim.trace(0.3)),
+    )
+    state = jax.eval_shape(opt.init, params)
+    if mesh is not None:
+        params = _shard_stacks(params, mesh)
+        grads = _shard_stacks(grads, mesh)
+        state = _shard_state(state, mesh, {b})
+
+    def step(p, s, g):
+        updates, s2 = opt.update(g, s, p)
+        return p.apply(updates), s2
+
+    return lower_fn(
+        "constraint_step", step, (params, state, grads),
+        donate_argnums=(0, 1), mesh=mesh,
+        meta={"kind": "train", "grouping": "auto"},
+    )
+
+
+def _entry_group_step(grouping: str, mesh) -> LoweredEntry:
+    """The grouped update over a heterogeneous param tree — "auto"
+    buckets per shape, "padded" merges everything into one ragged
+    megagroup. Gradients are not donated (callers reuse grad buffers)."""
+    from .. import optim
+    from ..core import api
+
+    tree = _het_tree_sds()
+    opt = api.orthogonal(
+        "pogo", learning_rate=0.1, grouping=grouping,
+        base_optimizer=optim.chain(optim.trace(0.3)),
+    )
+    state = jax.eval_shape(opt.init, tree)
+    return lower_fn(
+        f"group_step_{grouping}",
+        lambda g, s, p: opt.update(g, s, p),
+        (tree, state, tree),
+        mesh=mesh,
+        trace_probe=_group_trace_probe(grouping),
+        meta={"kind": "train", "grouping": grouping},
+    )
+
+
+def _serve_cfg():
+    import dataclasses as _dc
+
+    from ..configs import get_config
+
+    # fp32 like the serve parity suite: the analysis grid must not trip
+    # the widening rule on the engine's own f32 logit contract
+    return _dc.replace(
+        get_config("smollm-360m", smoke=True), compute_dtype="float32"
+    )
+
+
+def _serve_shapes(cfg, n_slots=4, n_blocks=17, block_size=4, max_blocks=8):
+    from ..models import transformer as tfm
+
+    params = jax.eval_shape(
+        lambda: tfm.init_params(jax.random.PRNGKey(0), cfg))
+    caches = jax.eval_shape(
+        lambda: tfm.init_paged_cache(cfg, n_slots, n_blocks, block_size))
+    return params, caches, n_slots, max_blocks
+
+
+def _entry_decode_step_paged(mesh) -> LoweredEntry:
+    from ..models import transformer as tfm
+
+    cfg = _serve_cfg()
+    params, caches, n_slots, max_blocks = _serve_shapes(cfg)
+
+    def fn(p, tok, c, bt, lengths, mask):
+        return tfm.decode_step_paged(
+            p, cfg, tok, c, block_tables=bt, lengths=lengths, write_mask=mask)
+
+    args = (
+        params,
+        jax.ShapeDtypeStruct((n_slots, 1), jnp.int32),
+        caches,
+        jax.ShapeDtypeStruct((n_slots, max_blocks), jnp.int32),
+        jax.ShapeDtypeStruct((n_slots,), jnp.int32),
+        jax.ShapeDtypeStruct((n_slots,), jnp.bool_),
+    )
+    # No donation: mirrors serve/engine._decode_callable, which holds the
+    # paged pools across calls without donate_argnums (scan-boundary
+    # copies make cache donation a non-trivial follow-up).
+    return lower_fn("decode_step_paged", fn, args, meta={"kind": "serve"})
+
+
+def _entry_serve_prefill(mesh) -> LoweredEntry:
+    from ..models import transformer as tfm
+
+    cfg = _serve_cfg()
+    params, caches, _, max_blocks = _serve_shapes(cfg)
+    chunk = 8
+
+    def fn(p, tok, c, bt, start, n_valid, slot):
+        return tfm.prefill_chunk(
+            p, cfg, tok, c, block_table=bt, start=start, n_valid=n_valid,
+            slot=slot)
+
+    args = (
+        params,
+        jax.ShapeDtypeStruct((1, chunk), jnp.int32),
+        caches,
+        jax.ShapeDtypeStruct((1, max_blocks), jnp.int32),
+        jax.ShapeDtypeStruct((), jnp.int32),
+        jax.ShapeDtypeStruct((), jnp.int32),
+        jax.ShapeDtypeStruct((), jnp.int32),
+    )
+    # No donation — see _entry_decode_step_paged.
+    return lower_fn("serve_prefill", fn, args, meta={"kind": "serve"})
+
+
+# name -> builder(mesh); meshed entries go through the sharded group
+# schedule when >= 2 devices are visible (the static-analysis CI job
+# forces 8) and degrade to single-device analysis locally.
+ENTRYPOINTS: dict = {
+    "constraint_step": _entry_constraint_step,
+    "group_step_auto": lambda mesh: _entry_group_step("auto", mesh),
+    "group_step_padded": lambda mesh: _entry_group_step("padded", mesh),
+    "decode_step_paged": lambda mesh: _entry_decode_step_paged(None),
+    "serve_prefill": lambda mesh: _entry_serve_prefill(None),
+}
+
+
+def lower_entry(name: str, mesh="auto") -> LoweredEntry:
+    """Build one registered entry. ``mesh="auto"`` uses an all-device
+    ("data",) mesh when more than one device is visible."""
+    if name not in ENTRYPOINTS:
+        raise KeyError(f"unknown entry point {name!r}; have {sorted(ENTRYPOINTS)}")
+    if mesh == "auto":
+        mesh = _data_mesh()
+    from ..distributed import shard_hints
+
+    if mesh is not None:
+        shard_hints.set_mesh(mesh)
+    try:
+        return ENTRYPOINTS[name](mesh)
+    finally:
+        if mesh is not None:
+            shard_hints.set_mesh(None)

@@ -1,0 +1,95 @@
+"""Structured findings and their renderings.
+
+Every rule — program rules over lowered entry points and AST lint rules
+over source files — reports :class:`Finding` records. The severity
+contract (DESIGN.md §Static analysis):
+
+* ``error``   — a broken performance/correctness invariant; CI hard-fails.
+* ``warning`` — suspicious but sometimes intentional; waivable in source
+  with a ``lint-ok`` comment, reported but not gating.
+* ``info``    — measurement/telemetry (e.g. collective byte counts under
+  budget); never gates.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+
+SEVERITIES = ("error", "warning", "info")
+
+
+class Severity:
+    ERROR = "error"
+    WARNING = "warning"
+    INFO = "info"
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    """One rule violation (or measurement) at one location.
+
+    ``location`` is either a source position (``path:lineno``) or an
+    entry-point anchor (``entry:<name>``); ``detail`` is the full
+    human-readable explanation including the observed values."""
+
+    rule: str
+    severity: str
+    location: str
+    detail: str
+
+    def __post_init__(self):
+        if self.severity not in SEVERITIES:
+            raise ValueError(
+                f"severity must be one of {SEVERITIES}, got {self.severity!r}"
+            )
+
+
+def worst_severity(findings) -> str | None:
+    """Most severe level present, or None for a clean run."""
+    for level in SEVERITIES:
+        if any(f.severity == level for f in findings):
+            return level
+    return None
+
+
+def counts(findings) -> dict:
+    out = {level: 0 for level in SEVERITIES}
+    for f in findings:
+        out[f.severity] += 1
+    return out
+
+
+def render_text(findings, *, header: str = "orthocheck") -> str:
+    """Human-readable report: findings grouped by severity, then rule."""
+    lines = []
+    c = counts(findings)
+    lines.append(
+        f"{header}: {c['error']} error(s), {c['warning']} warning(s), "
+        f"{c['info']} info"
+    )
+    order = {level: i for i, level in enumerate(SEVERITIES)}
+    for f in sorted(findings, key=lambda f: (order[f.severity], f.rule, f.location)):
+        lines.append(f"  [{f.severity:7s}] {f.rule:24s} {f.location}")
+        for ln in f.detail.splitlines():
+            lines.append(f"            {ln}")
+    if not findings:
+        lines.append("  clean: no findings")
+    return "\n".join(lines)
+
+
+def to_json(findings, *, meta: dict | None = None) -> str:
+    """Machine-readable artifact (uploaded by the static-analysis CI job)."""
+    payload = {
+        "counts": counts(findings),
+        "findings": [dataclasses.asdict(f) for f in findings],
+    }
+    if meta:
+        payload["meta"] = meta
+    return json.dumps(payload, indent=2, sort_keys=True)
+
+
+def exit_code(findings, *, fail_on: str = "error") -> int:
+    """1 if any finding at or above ``fail_on`` severity, else 0."""
+    gate = SEVERITIES.index(fail_on)
+    return int(any(SEVERITIES.index(f.severity) <= gate for f in findings))

@@ -1,0 +1,426 @@
+"""Program-analysis rules over lowered entry points.
+
+Each rule is a small object with a ``name`` and either
+
+* ``check_entry(entry) -> [Finding]`` — evaluated once per
+  :class:`~repro.analysis.lowering.LoweredEntry` (``kind = "entry"``), or
+* ``check() -> [Finding]`` — evaluated once per run over global state
+  like the autotune plan cache and the config grid (``kind = "global"``).
+
+Severity contract: see ``analysis.report``. A rule returns ``[]`` when
+the invariant holds; it never raises on a violation — raising is reserved
+for analysis bugs (unknown entry, malformed cache key).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from . import lowering
+from .report import Finding
+
+# ----------------------------------------------------------- jaxpr walking
+
+_COLLECTIVE_PRIMS = (
+    "psum", "pmin", "pmax", "ppermute", "pbroadcast",
+    "all_gather", "all_to_all", "reduce_scatter",
+)
+
+
+def _is_collective(prim_name: str) -> bool:
+    return any(prim_name.startswith(c) for c in _COLLECTIVE_PRIMS)
+
+
+def _sub_jaxprs(eqn):
+    """(jaxpr, consts) pairs nested in one equation's params — pjit and
+    shard_map bodies, scan/cond branches, custom_jvp callables stay out
+    (their jaxprs are reachable only through tracing-time closures)."""
+    out = []
+    for val in eqn.params.values():
+        vals = val if isinstance(val, (list, tuple)) else (val,)
+        for v in vals:
+            if hasattr(v, "jaxpr") and hasattr(v, "consts"):   # ClosedJaxpr
+                out.append((v.jaxpr, v.consts))
+            elif hasattr(v, "eqns") and hasattr(v, "invars"):  # open Jaxpr
+                out.append((v, ()))
+    return out
+
+
+def walk_eqns(closed_jaxpr):
+    """Yield ``(eqn, in_shard_map)`` over every equation, recursing into
+    sub-jaxprs; ``in_shard_map`` is True once any ancestor is a
+    shard_map body (that's the per-shard update code)."""
+
+    def rec(jaxpr, in_sm):
+        for eqn in jaxpr.eqns:
+            yield eqn, in_sm
+            inner = in_sm or eqn.primitive.name == "shard_map"
+            for sub, _ in _sub_jaxprs(eqn):
+                yield from rec(sub, inner)
+
+    yield from rec(closed_jaxpr.jaxpr, False)
+
+
+def iter_consts(closed_jaxpr):
+    """Every constant captured by the jaxpr or any sub-jaxpr."""
+    seen = set()
+
+    def rec(jaxpr, consts):
+        for c in consts:
+            if id(c) not in seen:
+                seen.add(id(c))
+                yield c
+        for eqn in jaxpr.eqns:
+            for sub, sub_consts in _sub_jaxprs(eqn):
+                yield from rec(sub, sub_consts)
+
+    yield from rec(closed_jaxpr.jaxpr, closed_jaxpr.consts)
+
+
+def _float_bits(dtype) -> int | None:
+    # jnp.issubdtype, not np.dtype(...).kind: the ml_dtypes floats
+    # (bfloat16, f8) register as kind "V" and would silently fall out
+    # of the widening analysis otherwise.
+    import jax.numpy as jnp
+
+    dt = np.dtype(dtype)
+    if jnp.issubdtype(dt, jnp.complexfloating):
+        return dt.itemsize * 4  # component width: c64 -> 32
+    if jnp.issubdtype(dt, jnp.floating):
+        return dt.itemsize * 8
+    return None
+
+
+# ------------------------------------------------------------------ the rules
+
+
+class DonationAliased:
+    """Donated operands must be aliased input->output in the optimized
+    HLO, and no copy of a donated-buffer shape may survive — donation
+    means the step rewrites the stacks in place (DESIGN.md §Donation)."""
+
+    name = "DonationAliased"
+    kind = "entry"
+
+    def check_entry(self, entry) -> list[Finding]:
+        if not entry.donated:
+            return []
+        loc = f"entry:{entry.name}"
+        if "input_output_alias" not in entry.hlo:
+            return [Finding(
+                self.name, "error", loc,
+                f"{len(entry.donated)} operand(s) are donated but the "
+                "optimized HLO has no input_output_alias — donation was "
+                "dropped (check donate_argnums on the jit).",
+            )]
+        shapes = set()
+        for aval in entry.donated:
+            shapes.add(lowering.hlo_shape_str(aval))
+            # the per-device local shard under the batch-sharded schedule
+            if (entry.n_devices > 1 and aval.ndim >= 1
+                    and aval.shape[0] % entry.n_devices == 0):
+                local = aval.shape[0] // entry.n_devices
+                shapes.add(lowering.hlo_shape_str(
+                    type(aval)((local, *aval.shape[1:]), aval.dtype)))
+        bad = lowering.find_copies_of(entry.hlo, shapes)
+        if bad:
+            return [Finding(
+                self.name, "error", loc,
+                "donated-buffer-sized copy in optimized HLO "
+                "(in-place rewrite failed):\n"
+                + "\n".join(ln.strip()[:160] for ln in bad[:4]),
+            )]
+        return []
+
+
+class CollectiveFree:
+    """No collective primitive inside any shard_map body: constraint
+    matrices are independent, so the per-shard group update must not
+    communicate (the whole point of the batch-sharded schedule)."""
+
+    name = "CollectiveFree"
+    kind = "entry"
+
+    def check_entry(self, entry) -> list[Finding]:
+        hits = [
+            eqn.primitive.name
+            for eqn, in_sm in walk_eqns(entry.jaxpr)
+            if in_sm and _is_collective(eqn.primitive.name)
+        ]
+        if hits:
+            return [Finding(
+                self.name, "error", f"entry:{entry.name}",
+                "collective primitive(s) inside a shard_map body: "
+                f"{sorted(set(hits))} — the per-shard group update must "
+                "be collective-free.",
+            )]
+        return []
+
+
+class CollectiveBudget:
+    """Collective traffic of the whole program, from the shared
+    ``parse_collectives`` HLO scan. Reported as info; an entry may pin a
+    hard budget via ``meta['collective_budget_bytes']`` (exceeding it is
+    an error — e.g. a resting-state step that should move ~nothing)."""
+
+    name = "CollectiveBudget"
+    kind = "entry"
+
+    def check_entry(self, entry) -> list[Finding]:
+        colls = lowering.parse_collectives(entry.hlo)
+        total = sum(v["bytes"] for v in colls.values())
+        count = sum(v["count"] for v in colls.values())
+        loc = f"entry:{entry.name}"
+        budget = entry.meta.get("collective_budget_bytes")
+        if budget is not None and total > budget:
+            return [Finding(
+                self.name, "error", loc,
+                f"collective traffic {total} B exceeds the entry's budget "
+                f"{budget} B ({count} op(s): "
+                + ", ".join(f"{k}={v['count']}" for k, v in colls.items()
+                            if v["count"]) + ")",
+            )]
+        if count:
+            return [Finding(
+                self.name, "info", loc,
+                f"{count} collective op(s), {total} B/device: "
+                + ", ".join(f"{k}: {v['count']} op(s) {v['bytes']} B"
+                            for k, v in colls.items() if v["count"]),
+            )]
+        return []
+
+
+class NoWideningPromotion:
+    """No silent dtype widening through the hot path: no output may be
+    a wider float than the widest floating input, and no 64-bit float /
+    complex value may appear anywhere in the jaxpr unless a 64-bit input
+    asked for it (catches x64/weak-type drift)."""
+
+    name = "NoWideningPromotion"
+    kind = "entry"
+
+    def check_entry(self, entry) -> list[Finding]:
+        loc = f"entry:{entry.name}"
+        in_bits = [b for a in entry.in_avals
+                   if (b := _float_bits(a.dtype)) is not None]
+        max_in = max(in_bits, default=32)
+        findings = []
+        widened = {
+            str(np.dtype(a.dtype)) for a in entry.out_avals
+            if (b := _float_bits(a.dtype)) is not None and b > max_in
+        }
+        if widened:
+            findings.append(Finding(
+                self.name, "error", loc,
+                f"output dtype(s) {sorted(widened)} are wider than the "
+                f"widest floating input ({max_in}-bit) — silent upcast "
+                "on the hot path.",
+            ))
+        if max_in < 64:
+            wide_prims = set()
+            for eqn, _ in walk_eqns(entry.jaxpr):
+                for var in eqn.outvars:
+                    aval = getattr(var, "aval", None)
+                    dt = getattr(aval, "dtype", None)
+                    if dt is not None and (_float_bits(dt) or 0) >= 64:
+                        wide_prims.add(eqn.primitive.name)
+            if wide_prims:
+                findings.append(Finding(
+                    self.name, "error", loc,
+                    "64-bit float/complex intermediates (via "
+                    f"{sorted(wide_prims)[:6]}) with only {max_in}-bit "
+                    "inputs — x64 drift.",
+                ))
+        return findings
+
+
+class NoCapturedConstants:
+    """No large array baked into the jaxpr as a constant: captured
+    weights/tables bloat every compiled executable, defeat donation, and
+    re-hash on every dispatch. Inputs must arrive as arguments."""
+
+    name = "NoCapturedConstants"
+    kind = "entry"
+    limit_bytes = 1 << 20  # 1 MiB: far above legit captured scalars/tables
+
+    def check_entry(self, entry) -> list[Finding]:
+        big = []
+        for c in iter_consts(entry.jaxpr):
+            nbytes = getattr(c, "nbytes", None)
+            if nbytes is None and hasattr(c, "shape") and hasattr(c, "dtype"):
+                nbytes = int(np.prod(c.shape or (1,))) * np.dtype(c.dtype).itemsize
+            if nbytes is not None and nbytes > self.limit_bytes:
+                big.append((tuple(getattr(c, "shape", ())),
+                            str(getattr(c, "dtype", "?")), int(nbytes)))
+        if big:
+            return [Finding(
+                self.name, "error", f"entry:{entry.name}",
+                "large constant(s) captured by the traced program: "
+                + ", ".join(f"{s} {d} ({b} B)" for s, d, b in big[:5])
+                + f" (limit {self.limit_bytes} B per constant)",
+            )]
+        return []
+
+
+class RetraceGate:
+    """Exactly one compiled program per constraint group: the entry's
+    trace probe runs two concrete steps and every group signature must
+    appear once in the api trace log (a second appearance means the
+    group re-traced — the silent-slowdown failure mode)."""
+
+    name = "RetraceGate"
+    kind = "entry"
+
+    def check_entry(self, entry) -> list[Finding]:
+        if entry.trace_probe is None:
+            return []
+        loc = f"entry:{entry.name}"
+        events = entry.trace_probe()
+        if not events:
+            return [Finding(
+                self.name, "warning", loc,
+                "trace probe recorded no group-trace events — the "
+                "api._record_group_trace hook is not firing, so the "
+                "one-program-per-group gate is unverified.",
+            )]
+        counts: dict = {}
+        for ev in events:
+            sig = tuple(sorted(ev.items()))
+            counts[sig] = counts.get(sig, 0) + 1
+        bad = {sig: n for sig, n in counts.items() if n > 1}
+        if bad:
+            lines = [
+                f"{dict(sig)} traced {n} programs" for sig, n in bad.items()
+            ]
+            return [Finding(
+                self.name, "error", loc,
+                "group(s) traced more than one program across two "
+                "fixed-shape steps:\n" + "\n".join(lines[:4]),
+            )]
+        return []
+
+
+class VMEMFits:
+    """Every kernel plan — each candidate the planner can emit for the
+    real config grid, and each plan cached by the autotuner — must fit
+    the VMEM budget, using the autotuner's own accounting
+    (``autotune.plan_vmem_bytes`` over ``ops.whole/tiled_vmem_bytes``).
+    The known-degenerate huge-p fallback (ops.plan_candidates returns a
+    best-effort 128-tile when nothing fits) is a warning, not an error."""
+
+    name = "VMEMFits"
+    kind = "global"
+    # stage sets actually dispatched by the driver (see kernels/ops.py)
+    stages = ("pogo", "landing", "ns", "fused_pogo+trace",
+              "fused_landing+none")
+
+    def grid(self):
+        """(arch, p, n, total_batch) for every constrained family across
+        the real configs — from ``eval_shape`` of each arch's params and
+        the ortho label tree, so the grid IS what training constrains."""
+        import jax
+
+        from ..configs import ARCHS, get_config
+        from ..models import ortho
+        from ..models import transformer as tfm
+
+        out = []
+        for arch in sorted(ARCHS):
+            cfg = get_config(arch)
+            sds = jax.eval_shape(
+                lambda cfg=cfg: tfm.init_params(jax.random.PRNGKey(0), cfg))
+            labels = ortho.label_tree(sds, cfg)
+            shapes: dict = {}
+            for leaf, lab in zip(jax.tree.leaves(sds), jax.tree.leaves(labels)):
+                if lab != "orthogonal":
+                    continue
+                *lead, a, b = leaf.shape
+                p, n = (a, b) if a <= b else (b, a)  # tall constrains X^T
+                bsz = 1
+                for d in lead:
+                    bsz *= d
+                shapes[(p, n)] = shapes.get((p, n), 0) + bsz
+            out.extend((arch, p, n, bsz) for (p, n), bsz in sorted(shapes.items()))
+        return out
+
+    def check(self) -> list[Finding]:
+        from ..kernels import autotune, ops
+
+        findings = []
+        n_points = n_plans = n_best_effort = 0
+        for arch, p, n, bsz in self.grid():
+            for stages in self.stages:
+                cands = ops.plan_candidates(p, n, bsz, stages)
+                n_points += 1
+                for cand in cands:
+                    n_plans += 1
+                    nbytes = autotune.plan_vmem_bytes(cand, p, n, stages)
+                    if nbytes <= ops.VMEM_BUDGET_BYTES:
+                        continue
+                    loc = f"grid:{arch}:p={p},n={n},b={bsz},stages={stages}"
+                    degenerate = (len(cands) == 1
+                                  and cand.get("kind") == "tiled"
+                                  and cand.get("tile_n") == 128)
+                    if degenerate:
+                        n_best_effort += 1
+                        findings.append(Finding(
+                            self.name, "warning", loc,
+                            "no VMEM-feasible plan: best-effort 128-tile "
+                            f"needs {nbytes} B "
+                            f"(budget {ops.VMEM_BUDGET_BYTES} B) — this "
+                            "shape runs, but spills.",
+                        ))
+                    else:
+                        findings.append(Finding(
+                            self.name, "error", loc,
+                            f"planner candidate {cand} needs {nbytes} B of "
+                            f"VMEM (budget {ops.VMEM_BUDGET_BYTES} B) — "
+                            "plan accounting and candidate generation "
+                            "disagree.",
+                        ))
+        cache = autotune.get_cache()
+        cache._load_disk()
+        for key, plan in sorted(cache._mem.items()):
+            info = autotune.parse_plan_key(key)
+            nbytes = autotune.plan_vmem_bytes(
+                plan, info["p"], info["n"], info["stages"])
+            if nbytes > ops.VMEM_BUDGET_BYTES:
+                findings.append(Finding(
+                    self.name, "error", f"plan-cache:{key}",
+                    f"cached plan {plan} needs {nbytes} B of VMEM "
+                    f"(budget {ops.VMEM_BUDGET_BYTES} B) — stale or "
+                    "corrupt autotune entry; drop it from the cache file.",
+                ))
+        findings.append(Finding(
+            self.name, "info", "grid:*",
+            f"validated {n_plans} candidate plan(s) over {n_points} "
+            f"(shape, stage) grid points and {len(cache._mem)} cached "
+            f"plan(s); {n_best_effort} best-effort shape(s).",
+        ))
+        return findings
+
+
+PROGRAM_RULES = {
+    r.name: r for r in (
+        DonationAliased(), CollectiveFree(), CollectiveBudget(),
+        NoWideningPromotion(), NoCapturedConstants(), RetraceGate(),
+        VMEMFits(),
+    )
+}
+
+
+def run_rules(entries, rule_names=None) -> list[Finding]:
+    """Evaluate the selected rules: entry rules per entry, global rules
+    once. ``rule_names=None`` runs everything."""
+    selected = [
+        PROGRAM_RULES[n]
+        for n in (rule_names or PROGRAM_RULES)
+    ]
+    findings: list[Finding] = []
+    for rule in selected:
+        if rule.kind == "entry":
+            for entry in entries:
+                findings.extend(rule.check_entry(entry))
+        else:
+            findings.extend(rule.check())
+    return findings

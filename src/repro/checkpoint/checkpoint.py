@@ -120,7 +120,8 @@ def _is_valid(path: str) -> bool:
         with open(man) as f:
             m = json.load(f)
         return all(
-            os.path.exists(os.path.join(path, l["file"])) for l in m["leaves"]
+            os.path.exists(os.path.join(path, leaf["file"]))
+            for leaf in m["leaves"]
         )
     except (json.JSONDecodeError, KeyError, OSError):
         return False

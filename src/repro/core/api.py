@@ -223,6 +223,41 @@ def constraint_step(opt):
     return step
 
 
+# ----------------------------------------------------------- trace accounting
+#
+# One entry per (group, update-function trace): the Python body of the
+# driver's ``update`` runs once per jit trace, so appending inside its
+# per-group loop records exactly how many XLA programs each constraint
+# group costs. The one-program-per-group guarantee (DESIGN.md §Constraint
+# groups) becomes checkable: run a jitted step twice with fixed shapes and
+# assert every group signature appears ONCE (analysis.rules.RetraceGate).
+# Eager (un-jitted) update calls append on every call — the gate is only
+# meaningful under jit, like the guarantee itself.
+
+_TRACE_EVENTS: list = []
+
+
+def trace_events() -> list:
+    """Snapshot of the per-group trace log (see ``analysis`` RetraceGate)."""
+    return list(_TRACE_EVENTS)
+
+
+def clear_trace_events() -> None:
+    _TRACE_EVENTS.clear()
+
+
+def _record_group_trace(method_name: str, group: "GroupSpec", fused: bool):
+    _TRACE_EVENTS.append({
+        "method": method_name,
+        "p": group.p,
+        "n": group.n,
+        "batch": group.batch,
+        "dtype": str(jnp.dtype(group.dtype)),
+        "ragged": bool(group.ragged),
+        "fused": bool(fused),
+    })
+
+
 # --------------------------------------------------------------------- state
 
 
@@ -660,6 +695,8 @@ class Rsdm(Method):
         r = u.shape[-2]
         uh = jnp.conj(jnp.swapaxes(u, -1, -2))
         w = u @ omega @ uh  # (..., r, r) skew
+        # lint-ok: unmasked-eye (r, r) submanifold identity; RSDM is not
+        # ragged_ready, so padded megagroups never route here
         eye_r = jnp.eye(r, dtype=x.dtype)
         s = -ctx.eta * w
         o = jnp.linalg.solve(eye_r - 0.5 * s, eye_r + 0.5 * s)  # Cayley
@@ -1093,6 +1130,7 @@ def _build(method: Method, cfg: OrthoConfig) -> GradientTransformation:
         # its replication: batch-leading operands shard, scalars replicate.
         eta32 = jnp.asarray(eta0, jnp.float32)
         for group in plan.groups:
+            _record_group_trace(method.name, group, fused_now)
             xg = _gather_group(group, leaves)
             gg = _gather_group(group, gleaves)
             # Ragged megagroups carry their per-matrix true shapes as

@@ -199,18 +199,18 @@ def optimal_lambda(
     cands = jnp.where(jnp.isfinite(cands), cands, fallback)
     n4, n3, n2, n1, n0 = (c[..., None] for c in norm)
 
-    def p_of(l):
-        return (((n4 * l + n3) * l + n2) * l + n1) * l + n0
+    def p_of(lam):
+        return (((n4 * lam + n3) * lam + n2) * lam + n1) * lam + n0
 
-    def dp_of(l):
-        return ((4 * n4 * l + 3 * n3) * l + 2 * n2) * l + n1
+    def dp_of(lam):
+        return ((4 * n4 * lam + 3 * n3) * lam + 2 * n2) * lam + n1
 
-    def newton(_, l):
-        dp = dp_of(l)
+    def newton(_, lam):
+        dp = dp_of(lam)
         dp = jnp.where(jnp.abs(dp) < 1e-20, jnp.where(dp >= 0, 1e-20, -1e-20), dp)
-        step = p_of(l) / dp
+        step = p_of(lam) / dp
         step = jnp.clip(step, -1.0, 1.0)  # damped: roots live near [0, 1]
-        return l - step
+        return lam - step
 
     cands = jax.lax.fori_loop(0, newton_iters, newton, cands)
     cands = jnp.where(jnp.isfinite(cands), cands, fallback)

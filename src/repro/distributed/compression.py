@@ -14,7 +14,6 @@ Scales are psum-maxed first so the quantization grid is shared.
 
 from __future__ import annotations
 
-import functools
 from typing import NamedTuple
 
 import jax

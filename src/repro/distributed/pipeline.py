@@ -17,7 +17,6 @@ to the next via a single collective-permute.
 
 from __future__ import annotations
 
-import functools
 from typing import Callable
 
 import jax

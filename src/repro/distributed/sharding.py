@@ -17,7 +17,7 @@ hard-fail, they just shard less.
 from __future__ import annotations
 
 import re
-from typing import Any, Optional
+from typing import Any
 
 import jax
 import jax.numpy as jnp
@@ -314,7 +314,7 @@ def input_specs_shardings(specs: PyTree, mesh: Mesh, cfg=None, mode: str = "2d")
         return NamedSharding(mesh, P(*entries))
 
     flat, treedef = jax.tree_util.tree_flatten_with_path(specs)
-    return jax.tree.unflatten(treedef, [assign(p, l) for p, l in flat])
+    return jax.tree.unflatten(treedef, [assign(p, leaf) for p, leaf in flat])
 
 
 def token_sharding(mesh: Mesh, batch: int, mode: str = "2d") -> NamedSharding:

@@ -12,7 +12,8 @@ the planner times each once and keeps the fastest. Results are cached
     benchmark runs reuse tuned plans across processes.
 
 Cache file format (versioned; unknown versions are ignored, corrupt
-files are treated as empty):
+files/entries are treated as empty — and NAMED in a RuntimeWarning, so a
+cache that silently stopped caching is visible):
 
     {"version": 2,
      "plans": {"<key>": {"kind": "whole", "block_b": 64, "tile_n": 0,
@@ -46,10 +47,14 @@ import json
 import os
 import tempfile
 import time
+import warnings
 from typing import Callable, Optional
 
 # Process-wide counters, exposed for tests and diagnostics.
-STATS = {"timing_runs": 0, "hits_mem": 0, "hits_disk": 0, "misses": 0}
+STATS = {
+    "timing_runs": 0, "hits_mem": 0, "hits_disk": 0, "misses": 0,
+    "corrupt_dropped": 0,
+}
 
 
 def default_cache_path() -> str:
@@ -97,6 +102,50 @@ def plan_key(p: int, n: int, bsz: int, dtype, stages: str, *,
     return key + ",ragged=1" if ragged else key
 
 
+def parse_plan_key(key: str) -> dict:
+    """Inverse of :func:`plan_key` (pure): parse a cache key back into its
+    fields. Ints for ``p``/``n``/``b``; ``interp``/``ragged`` as bools.
+    Raises ``ValueError`` on keys that do not carry the p/n/stages triple —
+    the static analyzer treats those as corrupt."""
+    out: dict = {"ragged": False}
+    for part in key.split(","):
+        name, sep, val = part.partition("=")
+        if not sep:
+            raise ValueError(f"malformed plan-key fragment {part!r} in {key!r}")
+        if name in ("p", "n", "b"):
+            out[name] = int(val)
+        elif name == "interp":
+            out[name] = val not in ("0", "")
+        elif name == "ragged":
+            out[name] = val == "1"
+        else:
+            out[name] = val
+    missing = {"p", "n", "stages"} - out.keys()
+    if missing:
+        raise ValueError(f"plan key {key!r} is missing {sorted(missing)}")
+    return out
+
+
+def plan_vmem_bytes(plan: dict, p: int, n: int, stages: str) -> int:
+    """Static VMEM working set (bytes) of one cached or candidate kernel
+    plan — the same accounting the planner's feasibility gate applies
+    (``ops.whole_vmem_bytes`` x the batch block for whole-matrix plans,
+    ``ops.tiled_vmem_bytes`` for tiled ones), exposed as a pure function
+    so the static analyzer (``analysis.rules.VMEMFits``) can validate
+    every plan across the config grid without executing a kernel."""
+    from . import ops  # lazy: ops imports this module at load time
+
+    p_pad = (p + 7) // 8 * 8
+    n_pad = (n + 127) // 128 * 128
+    if plan.get("kind") == "whole":
+        per_matrix = ops.whole_vmem_bytes(p_pad, n_pad, stages)
+        return per_matrix * max(1, int(plan.get("block_b") or 1))
+    if plan.get("kind") == "tiled":
+        tile_n = int(plan.get("tile_n") or 128)
+        return ops.tiled_vmem_bytes(p_pad, min(tile_n, n_pad), stages)
+    raise ValueError(f"unknown plan kind {plan.get('kind')!r}")
+
+
 class PlanCache:
     """Two-level (memory + JSON file) plan cache, multi-process tolerant:
     writes re-read the file and replace it atomically, so concurrent
@@ -114,18 +163,67 @@ class PlanCache:
         self._mem: dict[str, dict] = {}
         self._disk_loaded = False
 
+    def _read_file_plans(self, context: str) -> dict:
+        """Read ``self.path`` and return its version-matching plans dict.
+
+        Corruption is tolerated (the cache is an optimization) but never
+        silent: every dropped file or entry is NAMED in a RuntimeWarning —
+        a corrupt cache that quietly re-times every plan on every restart
+        is exactly the invisible slowdown the static-analysis layer exists
+        to surface. A missing file and a well-formed other-version file
+        (expected across schema bumps) stay quiet."""
+        try:
+            with open(self.path) as f:
+                payload = json.load(f)
+        except FileNotFoundError:
+            return {}
+        except OSError as e:
+            warnings.warn(
+                f"autotune cache {self.path!r} unreadable while {context} "
+                f"({e}); treating it as empty",
+                RuntimeWarning, stacklevel=3,
+            )
+            return {}
+        except ValueError as e:
+            STATS["corrupt_dropped"] += 1
+            warnings.warn(
+                f"autotune cache {self.path!r} is corrupt JSON ({e}); "
+                f"dropping the whole file while {context} (the next store "
+                "rewrites it)",
+                RuntimeWarning, stacklevel=3,
+            )
+            return {}
+        if not isinstance(payload, dict) or not isinstance(
+            payload.get("plans", {}), dict
+        ):
+            STATS["corrupt_dropped"] += 1
+            warnings.warn(
+                f"autotune cache {self.path!r} has a malformed payload "
+                f"({type(payload).__name__}); dropping it while {context}",
+                RuntimeWarning, stacklevel=3,
+            )
+            return {}
+        if payload.get("version") != self.VERSION:
+            return {}  # schema bump: expected, invalidated wholesale
+        plans = {}
+        for k, v in payload.get("plans", {}).items():
+            if not (isinstance(v, dict) and v.get("kind") in ("whole", "tiled")):
+                STATS["corrupt_dropped"] += 1
+                warnings.warn(
+                    f"autotune cache {self.path!r}: dropping corrupt entry "
+                    f"for key {k!r} ({v!r})",
+                    RuntimeWarning, stacklevel=3,
+                )
+                continue
+            plans[k] = dict(v)
+        return plans
+
     def _load_disk(self) -> None:
         if self._disk_loaded:
             return
         self._disk_loaded = True
-        try:
-            with open(self.path) as f:
-                payload = json.load(f)
-            if payload.get("version") == self.VERSION:
-                for k, v in payload.get("plans", {}).items():
-                    self._mem.setdefault(k, dict(v))
-        except (OSError, ValueError):
-            pass
+        for k, v in self._read_file_plans("loading").items():
+            self._mem.setdefault(k, v)
 
     def lookup(self, key: str) -> Optional[dict]:
         if key in self._mem:
@@ -143,14 +241,7 @@ class PlanCache:
         if not persist:
             return
         try:
-            current: dict[str, dict] = {}
-            try:
-                with open(self.path) as f:
-                    payload = json.load(f)
-                if payload.get("version") == self.VERSION:
-                    current = payload.get("plans", {})
-            except (OSError, ValueError):
-                pass
+            current = self._read_file_plans("merging a store")
             current[key] = dict(plan)
             d = os.path.dirname(self.path) or "."
             os.makedirs(d, exist_ok=True)
@@ -281,6 +372,6 @@ def _bench(fn, *args, reps: int = 2) -> float:
         for _ in range(reps):
             t0 = time.perf_counter()
             out = fn(*args)
-            jax.block_until_ready(out)
+            jax.block_until_ready(out)  # lint-ok: block-in-loop timing barrier
             best = min(best, time.perf_counter() - t0)
         return best

@@ -26,8 +26,6 @@ valid region is untouched (tests verify bit-consistency vs the oracle).
 
 from __future__ import annotations
 
-import functools
-
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl

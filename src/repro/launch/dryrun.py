@@ -21,65 +21,18 @@ restartable. Usage:
 
 import argparse
 import json
-import re
 import sys
 import time
 import traceback
 
 import jax
-import jax.numpy as jnp
+
+# The HLO collective scanner moved to the shared static-analysis layer
+# (analysis/lowering.py); re-exported here because the roofline and
+# hillclimb benches consume it as ``dryrun.parse_collectives``.
+from ..analysis.lowering import parse_collectives  # noqa: F401,E402
 
 RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..", "results", "dryrun")
-
-_DTYPE_BYTES = {
-    "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8": 1,
-    "s64": 8, "s32": 4, "s16": 2, "s8": 1, "u64": 8, "u32": 4, "u16": 2,
-    "u8": 1, "pred": 1, "c64": 8, "c128": 16,
-}
-
-_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all", "collective-permute")
-
-
-def parse_collectives(hlo_text: str):
-    """Sum per-device operand bytes of every collective op in (post-SPMD)
-    HLO, keyed by op kind; also capture replica-group sizes."""
-    out = {k: {"bytes": 0, "count": 0, "ops": []} for k in _COLLECTIVES}
-    # e.g.:  %ag = bf16[4,128]{1,0} all-gather(...), replica_groups={{0,1,..}}
-    pat = re.compile(
-        r"=\s*(?:\()?((?:[a-z0-9]+\[[0-9,]*\][^ ]*(?:,\s*)?)+)\)?\s+"
-        r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
-    )
-    shape_pat = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
-    # legacy explicit groups: replica_groups={{0,1,...},...}
-    group_pat = re.compile(r"replica_groups=\{\{([0-9, ]+)\}")
-    # iota groups: replica_groups=[n_groups,group_size]<=[...]
-    iota_pat = re.compile(r"replica_groups=\[(\d+),(\d+)\]<=")
-    for line in hlo_text.splitlines():
-        m = pat.search(line)
-        if not m:
-            continue
-        kind = m.group(2)
-        # NOTE: the LHS shape is the op's OUTPUT (per-device); the
-        # link-traffic factors in benchmarks/roofline.py assume output bytes
-        nbytes = 0
-        for dt, dims in shape_pat.findall(m.group(1)):
-            if dt not in _DTYPE_BYTES:
-                continue
-            n = 1
-            for d in dims.split(","):
-                if d:
-                    n *= int(d)
-            nbytes += n * _DTYPE_BYTES[dt]
-        gm = group_pat.search(line)
-        if gm:
-            gsize = len(gm.group(1).split(","))
-        else:
-            im = iota_pat.search(line)
-            gsize = int(im.group(2)) if im else 0
-        out[kind]["bytes"] += nbytes
-        out[kind]["count"] += 1
-        out[kind]["ops"].append({"bytes": nbytes, "group": gsize})
-    return out
 
 
 def build_entry(cfg, shape_name: str, dp: int = 16):

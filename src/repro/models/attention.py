@@ -231,7 +231,6 @@ def attention_apply(
         q_pos = positions[:, None, None, :, None]
         if window is not None:
             # ring buffer: slot t holds absolute position computed from index
-            n_written = jnp.minimum(new_cache.index, cache_len)
             # absolute position of slot t: the most recent cache_len entries
             newest = new_cache.index - 1
             slot_age = jnp.mod(write_pos - t_pos, cache_len)

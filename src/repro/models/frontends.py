@@ -10,9 +10,6 @@ embeddings.
 
 from __future__ import annotations
 
-import jax
-import jax.numpy as jnp
-
 from . import layers
 
 

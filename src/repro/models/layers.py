@@ -164,8 +164,8 @@ def chunked_cross_entropy(
 
         def body(carry, xs):
             h, y = xs  # (b, chunk, d), (b, chunk)
-            l, m = chunk_loss(h, y)
-            return (carry[0] + l, carry[1] + m), None
+            t, m = chunk_loss(h, y)
+            return (carry[0] + t, carry[1] + m), None
 
         (total, count), _ = jax.lax.scan(
             body,
@@ -177,7 +177,7 @@ def chunked_cross_entropy(
         total = jnp.zeros([], jnp.float32)
         count = jnp.zeros([], jnp.float32)
     if rem:
-        l, m = chunk_loss(hidden[:, n_chunks * chunk :], labels[:, n_chunks * chunk :])
-        total = total + l
+        t, m = chunk_loss(hidden[:, n_chunks * chunk :], labels[:, n_chunks * chunk :])
+        total = total + t
         count = count + m
     return total / jnp.maximum(count, 1.0)

@@ -21,7 +21,6 @@ Entry points: ``init_params``, ``forward``, ``loss_fn``, ``prefill``,
 from __future__ import annotations
 
 import dataclasses
-import functools
 from typing import Any, Optional
 
 import jax
@@ -81,7 +80,6 @@ def init_params(key, cfg):
         )
     params["final_norm"] = layers.rmsnorm_init(cfg.d_model)
     if cfg.encoder_layers:
-        enc_params = []
         ks = jax.random.split(k_enc, cfg.encoder_layers)
         enc_cfg = cfg  # same dims; bidirectional handled at apply time
         enc_unit = jax.vmap(
@@ -375,7 +373,8 @@ def _build_caches(cfg, batch: int, cache_len: int, make):
     unit, n_rep, tail = cfg.layer_plan()
     out: dict[str, Any] = {}
     if n_rep > 0:
-        make_stacked = lambda s, d: make((n_rep, *s), d)
+        def make_stacked(s, d):
+            return make((n_rep, *s), d)
         out["unit"] = tuple(
             _materialize(_block_cache_shape(kind, cfg, batch, cache_len), make_stacked)
             for kind in unit
@@ -476,10 +475,13 @@ def init_paged_cache(cfg, n_slots: int, n_blocks: int, block_size: int):
         shape_map = _block_cache_shape(kind, cfg, n_slots, block_size)
         return (make(*shape_map["h"]), make(*shape_map["conv"]))
 
-    make = lambda s, d: jnp.zeros(s, d)
+    def make(s, d):
+        return jnp.zeros(s, d)
+
     out: dict[str, Any] = {}
     if n_rep > 0:
-        make_stacked = lambda s, d: make((n_rep, *s), d)
+        def make_stacked(s, d):
+            return make((n_rep, *s), d)
         out["unit"] = tuple(build(kind, make_stacked) for kind in unit)
     if tail:
         out["tail"] = tuple(build(kind, make) for kind in tail)

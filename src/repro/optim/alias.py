@@ -14,13 +14,12 @@ the input dtype's field.
 
 from __future__ import annotations
 
-from typing import NamedTuple, Optional
+from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
 
 from .transform import (
-    EmptyState,
     GradientTransformation,
     chain,
     scale_by_learning_rate,

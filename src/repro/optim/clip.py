@@ -8,8 +8,6 @@ run with lambda fixed at 1/2.
 
 from __future__ import annotations
 
-from typing import NamedTuple
-
 import jax
 import jax.numpy as jnp
 

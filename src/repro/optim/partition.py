@@ -41,9 +41,10 @@ def _resolve(labels, params, transforms):
     p_flat, p_def = jax.tree.flatten(params)
     if lab_def != p_def:
         raise ValueError(f"label structure {lab_def} != param structure {p_def}")
-    for l in lab_flat:
-        if l not in transforms:
-            raise ValueError(f"label {l!r} has no transform (have {list(transforms)})")
+    for lab_name in lab_flat:
+        if lab_name not in transforms:
+            raise ValueError(
+                f"label {lab_name!r} has no transform (have {list(transforms)})")
     return lab_flat, p_flat, p_def
 
 
@@ -57,7 +58,7 @@ def partition(
         lab_flat, p_flat, _ = _resolve(labels, params, transforms)
         states = {}
         for name in names:
-            sub = tuple(p for p, l in zip(p_flat, lab_flat) if l == name)
+            sub = tuple(p for p, lab in zip(p_flat, lab_flat) if lab == name)
             states[name] = transforms[name].init(sub)
         return PartitionState(inner_states=states)
 
@@ -69,7 +70,7 @@ def partition(
         out_flat = list(g_flat)
         new_states = {}
         for name in names:
-            idx = [i for i, l in enumerate(lab_flat) if l == name]
+            idx = [i for i, lab in enumerate(lab_flat) if lab == name]
             sub_g = tuple(g_flat[i] for i in idx)
             sub_p = tuple(p_flat[i] for i in idx) if p_flat is not None else None
             upd, new_states[name] = transforms[name].update(

@@ -22,7 +22,6 @@ loudly with the worst offender named instead.
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional
 
 import jax.numpy as jnp
 

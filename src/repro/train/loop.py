@@ -98,6 +98,8 @@ def train(
                 t0 = time.monotonic()
                 batch = next(data_iter)
                 params, opt_state, metrics = train_step(params, opt_state, batch)
+                # lint-ok: block-in-loop deliberate per-step sync: the
+                # straggler detector times wall-clock per step
                 jax.block_until_ready(metrics["loss"])
                 dt = time.monotonic() - t0
                 times.append(dt)

@@ -99,12 +99,12 @@ def test_input_specs_cover_all_cells(arch, shape):
         assert "cache" in specs
         # SWA archs must bound the decode cache by their window
         if cfg.attention_window:
-            for l in jax.tree.leaves(specs["cache"]):
-                if l.ndim >= 3:
+            for leaf in jax.tree.leaves(specs["cache"]):
+                if leaf.ndim >= 3:
                     assert all(
                         d <= max(cfg.attention_window, SHAPES[shape]["global_batch"],
                                  cfg.num_layers, 4096)
-                        for d in l.shape[:2]
+                        for d in leaf.shape[:2]
                     )
 
 

@@ -1,8 +1,6 @@
 """Checkpointing: roundtrip, atomic commit, corruption recovery, GC."""
 
-import json
 import os
-import shutil
 
 import jax
 import jax.numpy as jnp

@@ -73,7 +73,8 @@ def test_flash_kernel_bf16():
 def test_flat_layout_oracle_consistency():
     """The (BH, S, hd) kernel oracle matches the model-layout oracle."""
     q, k, v = _qkv(2, 64, 2, 2, 16)
-    flat = lambda x: jnp.moveaxis(x, 2, 1).reshape(-1, x.shape[1], x.shape[3])
+    def flat(x):
+        return jnp.moveaxis(x, 2, 1).reshape(-1, x.shape[1], x.shape[3])
     out_flat = ref.flash_attention_fwd_ref(flat(q), flat(k), flat(v), causal=True)
     out_model = attention._flash_attend(
         q, k, v, causal=True, window=None, block_q=32, block_k=32

@@ -28,7 +28,6 @@ def _cfg(**kw):
 
 
 def test_flash_attention_matches_naive():
-    cfg = _cfg()
     b, s = 2, 48
     q = jax.random.normal(KEY, (b, s, 4, 16))
     k = jax.random.normal(jax.random.PRNGKey(1), (b, s, 2, 16))

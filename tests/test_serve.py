@@ -246,17 +246,17 @@ def test_prefill_does_not_touch_neighbor_blocks(smollm_f32):
             if lay.role == "pool"
         ]
 
-    before = [np.asarray(l[..., victim_blocks, :, :, :].copy())
-              if l.ndim > 4 else np.asarray(l[victim_blocks].copy())
-              for l in pool_leaves(eng.caches)]
+    before = [np.asarray(leaf[..., victim_blocks, :, :, :].copy())
+              if leaf.ndim > 4 else np.asarray(leaf[victim_blocks].copy())
+              for leaf in pool_leaves(eng.caches)]
     # admit + chunk-prefill a second request while slot 0 sits in decode
     eng.submit(Request(uid=1, prompt=_prompt(rng, 9, 9), max_new_tokens=2))
     eng._admit()
     assert eng.slot_state[1] == "prefill"
     eng._prefill_tick()
-    after = [np.asarray(l[..., victim_blocks, :, :, :])
-             if l.ndim > 4 else np.asarray(l[victim_blocks])
-             for l in pool_leaves(eng.caches)]
+    after = [np.asarray(leaf[..., victim_blocks, :, :, :])
+             if leaf.ndim > 4 else np.asarray(leaf[victim_blocks])
+             for leaf in pool_leaves(eng.caches)]
     for b, a in zip(before, after):
         np.testing.assert_array_equal(b, a)
 
@@ -358,7 +358,7 @@ class TestFold:
         params = ortho.project_init(params, cfg)
         leaves = ortho.extract_constrained(params, cfg)
         bad = ortho.merge_constrained(params, cfg,
-                                      tuple(2.0 * l for l in leaves))
+                                      tuple(2.0 * leaf for leaf in leaves))
         cs = extract_constraint_set(bad, cfg)
         with pytest.raises(FoldFeasibilityError) as e:
             fold_constraint_set(params, cfg, cs)

@@ -1,10 +1,7 @@
 """Training-loop fault tolerance: resume, crash checkpoint, data replay,
 end-to-end loss decrease with POGO-constrained weights."""
 
-import os
-
 import jax
-import jax.numpy as jnp
 import numpy as np
 import pytest
 
