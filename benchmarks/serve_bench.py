@@ -17,6 +17,13 @@ What it measures, all through ``common.RECORDS`` so
                           whole-prompt dispatch.
   serve/prefill/stall_ratio   whole/chunked p99 gap ratio (the headline:
                           chunking bounds decode stall by one chunk).
+  serve/overload/preempt_on   burst whose aggregate block demand is
+  serve/overload/preempt_off  ``--offered-load``x the pool (default 3x),
+                          tick deadlines armed, with swap-preemption on
+                          vs off: us_per_call = p99 TTFT; extras carry
+                          goodput (tokens of FINISHED requests only),
+                          finished/expired/preempted counts and
+                          swap-in/out totals.
 
 Smoke mode shrinks sizes but emits the SAME record names, so the CI
 ``serve-smoke`` job can pin the name contract against the committed
@@ -44,17 +51,20 @@ def _sizes(full: bool, smoke: bool) -> dict:
             n_requests=12, max_new=8, n_slots=4, n_blocks=64, block_size=8,
             prompt_lo=4, prompt_hi=24, prefill_chunk=8, max_queue=16,
             long_prompt=512, stall_decode_tokens=32, stall_long_new=4,
+            overload_deadline=400,
         )
     if full:
         return dict(
             n_requests=64, max_new=24, n_slots=8, n_blocks=192, block_size=16,
             prompt_lo=8, prompt_hi=96, prefill_chunk=16, max_queue=32,
             long_prompt=4096, stall_decode_tokens=64, stall_long_new=4,
+            overload_deadline=2000,
         )
     return dict(
         n_requests=32, max_new=16, n_slots=8, n_blocks=128, block_size=16,
         prompt_lo=8, prompt_hi=48, prefill_chunk=16, max_queue=24,
         long_prompt=2048, stall_decode_tokens=48, stall_long_new=4,
+        overload_deadline=1200,
     )
 
 
@@ -234,7 +244,67 @@ def _stall_scenario(params, cfg, S, chunked: bool) -> float:
     return p99
 
 
-def run(full: bool = False, smoke: bool = False):
+def _overload_scenario(params, cfg, S, offered_load: float, preempt: bool):
+    """Burst whose aggregate KV-block demand is ``offered_load``x the
+    device pool, every request carrying a tick deadline. Preemption OFF is
+    the control: long decoders pin the pool and head-of-line requests
+    expire. Preemption ON (swap) should convert those expiries into
+    finished requests — the goodput delta is what this row measures."""
+    from repro.serve import Request, RequestState, blocks_needed
+
+    rng = np.random.default_rng(3)
+    prompts = _prompts(S, S["n_requests"], rng)
+    # a few block-hungry long decoders create the head-of-line pressure
+    new_tokens = [
+        4 * S["max_new"] if i % 5 == 0 else S["max_new"]
+        for i in range(len(prompts))
+    ]
+    bs = S["block_size"]
+    demand = sum(blocks_needed(len(p) + n, bs)
+                 for p, n in zip(prompts, new_tokens))
+    biggest = max(blocks_needed(len(p) + n, bs)
+                  for p, n in zip(prompts, new_tokens))
+    n_blocks = max(int(demand / offered_load), S["n_slots"] * biggest) + 1
+    deadline = S["overload_deadline"]
+    eng = _make_engine(
+        params, cfg, S, n_blocks=n_blocks, max_queue=None,
+        max_model_len=(n_blocks - 1) * bs,
+        preemption="swap" if preempt else "off",
+        preempt_after_ticks=2,
+    )
+    for uid, (p, n) in enumerate(zip(prompts, new_tokens)):
+        eng.submit(Request(uid=uid, prompt=p, max_new_tokens=n,
+                           deadline_ticks=deadline))
+    t0 = time.perf_counter()
+    terminal = eng.run(max_ticks=deadline + 100)
+    wall = time.perf_counter() - t0
+
+    fin = [r for r in terminal if r.state is RequestState.FINISHED]
+    good_tokens = sum(len(r.out_tokens) for r in fin)
+    ttfts = np.asarray([r.t_first - r.t_submit for r in fin]) \
+        if fin else np.asarray([0.0])
+    ttft_ticks = np.asarray([r.first_tick - r.submit_tick for r in fin]) \
+        if fin else np.asarray([0.0])
+    st = eng.stats
+    mode = "preempt_on" if preempt else "preempt_off"
+    p99_ttft = float(np.percentile(ttfts, 99))
+    common.emit(
+        f"serve/overload/{mode}", 1e6 * p99_ttft,
+        f"goodput={good_tokens / wall:.1f}tok/s fin={len(fin)} "
+        f"exp={st['expired']} pre={st['preemptions']}",
+        offered_load=float(offered_load),
+        goodput_tokens_per_s=float(good_tokens / wall),
+        p99_ttft_ms=float(1e3 * p99_ttft),
+        p99_ttft_ticks=float(np.percentile(ttft_ticks, 99)),
+        finished=len(fin), expired=int(st["expired"]),
+        preempted=int(st["preempted"]), preemptions=int(st["preemptions"]),
+        swapped_out=int(st["swapped_out"]), swapped_in=int(st["swapped_in"]),
+        deadline_ticks=deadline, n_blocks=n_blocks,
+        n_requests=S["n_requests"],
+    )
+
+
+def run(full: bool = False, smoke: bool = False, offered_load: float = 3.0):
     S = _sizes(full, smoke)
     params, cfg = _setup()
 
@@ -243,6 +313,9 @@ def run(full: bool = False, smoke: bool = False):
           flush=True)
     for frac, label in ((0.3, "x030"), (0.7, "x070"), (1.5, "x150")):
         _run_load(params, cfg, S, frac * cap_req_s, label)
+
+    _overload_scenario(params, cfg, S, offered_load, preempt=False)
+    _overload_scenario(params, cfg, S, offered_load, preempt=True)
 
     p99_chunked = _stall_scenario(params, cfg, S, chunked=True)
     p99_whole = _stall_scenario(params, cfg, S, chunked=False)
@@ -261,11 +334,16 @@ def main(argv=None):
     ap.add_argument("--full", action="store_true")
     ap.add_argument("--smoke", action="store_true")
     ap.add_argument("--json", default=None, metavar="OUT.json")
+    ap.add_argument(
+        "--offered-load", type=float, default=3.0, metavar="X",
+        help="overload scenario block-demand multiple of the pool "
+             "(default 3.0 = 3x overload)",
+    )
     args = ap.parse_args(argv)
 
     print("name,us_per_call,derived", flush=True)
     common.CURRENT_SUITE = "serve"
-    run(full=args.full, smoke=args.smoke)
+    run(full=args.full, smoke=args.smoke, offered_load=args.offered_load)
     common.CURRENT_SUITE = None
     if args.json:
         payload = {

@@ -44,6 +44,31 @@ PyTree = Any
 _SAVE_LOCK = threading.Lock()
 
 
+class CheckpointCorruptError(RuntimeError):
+    """A checkpoint payload file (or manifest) cannot be deserialized.
+
+    Raised instead of numpy/json's raw traceback so callers can route on
+    it (skip to an older step, alert) and the message names the offending
+    ``path`` plus ``expected_bytes`` (manifest shape x itemsize) vs
+    ``actual_bytes`` (file size on disk) — a truncated write and a
+    garbage file are immediately distinguishable from the sizes alone.
+    """
+
+    def __init__(self, path: str, msg: str,
+                 expected_bytes: Optional[int] = None,
+                 actual_bytes: Optional[int] = None):
+        detail = f"corrupt checkpoint file {path!r}: {msg}"
+        if expected_bytes is not None:
+            detail += (
+                f" (expected {expected_bytes} payload bytes, "
+                f"file holds {actual_bytes})"
+            )
+        super().__init__(detail)
+        self.path = path
+        self.expected_bytes = expected_bytes
+        self.actual_bytes = actual_bytes
+
+
 def _leaf_to_numpy(leaf) -> np.ndarray:
     if isinstance(leaf, jax.Array) and not leaf.is_fully_addressable:
         # multi-host: gather addressable shards only; full assembly happens
@@ -164,7 +189,26 @@ def _distance_runs(like: PyTree) -> list:
 
 
 def _load_leaf(path: str, meta: dict) -> np.ndarray:
-    arr = np.load(os.path.join(path, meta["file"]))
+    fpath = os.path.join(path, meta["file"])
+    stored = (
+        np.dtype(np.uint16) if meta["dtype"] in _VIEW_DTYPES
+        else np.dtype(meta["dtype"])
+    )
+    expected = int(np.prod(meta["shape"], dtype=np.int64)) * stored.itemsize
+    try:
+        arr = np.load(fpath)
+    except (ValueError, EOFError, OSError, KeyError) as e:
+        try:
+            actual = os.path.getsize(fpath)
+        except OSError:
+            actual = 0
+        raise CheckpointCorruptError(fpath, str(e), expected, actual) from e
+    if tuple(arr.shape) != tuple(meta["shape"]):
+        raise CheckpointCorruptError(
+            fpath,
+            f"payload shape {tuple(arr.shape)} != manifest {meta['shape']}",
+            expected, os.path.getsize(fpath),
+        )
     if meta["dtype"] in _VIEW_DTYPES:
         arr = arr.view(_VIEW_DTYPES[meta["dtype"]])
     return arr
@@ -185,8 +229,18 @@ def restore(directory: str, step: int, like: PyTree, *, shardings: PyTree = None
     orthoptimizer state per checkpoint tree); anything else still raises.
     """
     path = os.path.join(directory, f"step_{step:09d}")
-    with open(os.path.join(path, "manifest.json")) as f:
-        manifest = json.load(f)
+    man = os.path.join(path, "manifest.json")
+    try:
+        with open(man) as f:
+            manifest = json.load(f)
+    except ValueError as e:
+        try:
+            size = os.path.getsize(man)
+        except OSError:
+            size = 0
+        raise CheckpointCorruptError(
+            man, f"manifest is not valid JSON: {e}", None, size
+        ) from e
     leaves_like, treedef = jax.tree.flatten(like)
     runs = _distance_runs(like)
     n_like, n_ckpt = len(leaves_like), manifest["n_leaves"]

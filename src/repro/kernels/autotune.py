@@ -45,6 +45,7 @@ from __future__ import annotations
 
 import json
 import os
+import random
 import tempfile
 import time
 import warnings
@@ -53,7 +54,7 @@ from typing import Callable, Optional
 # Process-wide counters, exposed for tests and diagnostics.
 STATS = {
     "timing_runs": 0, "hits_mem": 0, "hits_disk": 0, "misses": 0,
-    "corrupt_dropped": 0,
+    "corrupt_dropped": 0, "merge_retries": 0, "merge_lock_failures": 0,
 }
 
 
@@ -236,20 +237,64 @@ class PlanCache:
         STATS["misses"] += 1
         return None
 
+    # Cross-process merge locking: read-merge-replace is atomic per file
+    # operation but not as a sequence — two stores can read the same base,
+    # each merge its own key, and the second ``os.replace`` silently drops
+    # the first writer's timings. A lockfile (O_CREAT|O_EXCL) serializes
+    # the sequence; contention is retried with jittered exponential
+    # backoff (counted in ``STATS["merge_retries"]``). If the lock never
+    # frees (``STATS["merge_lock_failures"]``) the store falls back to an
+    # unlocked merge — the cache is an optimization, losing one timing to
+    # a pathological race beats deadlocking a trainer.
+    LOCK_RETRIES = 6
+    LOCK_BACKOFF_S = 0.005
+    LOCK_STALE_S = 10.0
+
+    def _acquire_lock(self, lock_path: str) -> bool:
+        for attempt in range(self.LOCK_RETRIES):
+            try:
+                fd = os.open(lock_path, os.O_CREAT | os.O_EXCL | os.O_WRONLY)
+                os.close(fd)
+                return True
+            except FileExistsError:
+                STATS["merge_retries"] += 1
+                delay = self.LOCK_BACKOFF_S * (2 ** attempt)
+                time.sleep(delay * (0.5 + random.random()))
+            except OSError:
+                return False  # unlockable filesystem: proceed unlocked
+        # a crashed holder leaves the lockfile behind forever; break a
+        # provably stale lock so one dead process can't wedge every store
+        try:
+            if time.time() - os.path.getmtime(lock_path) > self.LOCK_STALE_S:
+                os.unlink(lock_path)
+        except OSError:
+            pass
+        STATS["merge_lock_failures"] += 1
+        return False
+
     def store(self, key: str, plan: dict, persist: bool = True) -> None:
         self._mem[key] = dict(plan)
         if not persist:
             return
         try:
-            current = self._read_file_plans("merging a store")
-            current[key] = dict(plan)
             d = os.path.dirname(self.path) or "."
             os.makedirs(d, exist_ok=True)
-            fd, tmp = tempfile.mkstemp(dir=d, suffix=".tmp")
-            with os.fdopen(fd, "w") as f:
-                json.dump({"version": self.VERSION, "plans": current}, f,
-                          indent=1, sort_keys=True)
-            os.replace(tmp, self.path)
+            lock = self.path + ".lock"
+            locked = self._acquire_lock(lock)
+            try:
+                current = self._read_file_plans("merging a store")
+                current[key] = dict(plan)
+                fd, tmp = tempfile.mkstemp(dir=d, suffix=".tmp")
+                with os.fdopen(fd, "w") as f:
+                    json.dump({"version": self.VERSION, "plans": current}, f,
+                              indent=1, sort_keys=True)
+                os.replace(tmp, self.path)
+            finally:
+                if locked:
+                    try:
+                        os.unlink(lock)
+                    except OSError:
+                        pass
         except OSError:
             pass  # cache is an optimization; never fail the step over it
 

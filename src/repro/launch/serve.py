@@ -26,6 +26,17 @@ def main(argv=None):
     ap.add_argument("--prefill-chunk", type=int, default=16)
     ap.add_argument("--no-fold", action="store_true",
                     help="skip the constraint-set fold (serve raw params)")
+    ap.add_argument("--preemption", choices=["off", "swap", "kill"],
+                    default="off",
+                    help="evict a victim when the queue head starves: "
+                    "'swap' keeps it restorable host-side, 'kill' fails it")
+    ap.add_argument("--preempt-after", type=int, default=4,
+                    help="consecutive starved ticks before preempting")
+    ap.add_argument("--deadline-ticks", type=int, default=None,
+                    help="per-request deadline (engine ticks); expired "
+                    "requests get terminal state EXPIRED")
+    ap.add_argument("--ttft-budget-ticks", type=int, default=None,
+                    help="per-request first-token budget (engine ticks)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
@@ -36,6 +47,7 @@ def main(argv=None):
     from ..models import ortho, transformer as tfm
     from ..serve import (
         Request,
+        RequestState,
         ServeEngine,
         extract_constraint_set,
         fold_constraint_set,
@@ -56,26 +68,33 @@ def main(argv=None):
     engine = ServeEngine(
         params, cfg, n_slots=args.slots, n_blocks=args.blocks,
         block_size=args.block_size, prefill_chunk=args.prefill_chunk,
+        preemption=args.preemption, preempt_after_ticks=args.preempt_after,
     )
     rng = np.random.default_rng(args.seed)
     for uid in range(args.requests):
         prompt = rng.integers(0, cfg.vocab_size, size=(args.prompt_len,)).astype(
             np.int32
         )
-        engine.submit(Request(uid=uid, prompt=prompt, max_new_tokens=args.max_new))
+        engine.submit(Request(
+            uid=uid, prompt=prompt, max_new_tokens=args.max_new,
+            deadline_ticks=args.deadline_ticks,
+            ttft_budget_ticks=args.ttft_budget_ticks,
+        ))
 
     t0 = time.time()
-    finished = engine.run()
+    terminal = engine.run()
     dt = time.time() - t0
-    n_tokens = sum(len(r.out_tokens) for r in finished)
+    done = [r for r in terminal if r.state is RequestState.FINISHED]
+    n_tokens = sum(len(r.out_tokens) for r in done)
     s = engine.stats
     print(
-        f"served {len(finished)} requests, {n_tokens} tokens in {dt:.2f}s "
-        f"({n_tokens / max(dt, 1e-9):.1f} tok/s; "
+        f"served {len(done)}/{len(terminal)} requests, {n_tokens} tokens "
+        f"in {dt:.2f}s ({n_tokens / max(dt, 1e-9):.1f} tok/s; "
         f"{s['n_prefill_dispatches']} prefill chunks, "
-        f"{s['n_decode_dispatches']} decode steps)"
+        f"{s['n_decode_dispatches']} decode steps, "
+        f"{s['preemptions']} preemptions, {s['expired']} expired)"
     )
-    for r in finished[:4]:
+    for r in done[:4]:
         print(f"  req {r.uid}: {r.out_tokens[:8]}...")
     return 0
 

@@ -521,13 +521,23 @@ def decode_step(params, cfg, tokens, caches, *, encoder_memory=None):
 
 
 def decode_step_paged(params, cfg, tokens, caches, *, block_tables, lengths,
-                      write_mask):
+                      write_mask, poison_mask=None):
     """One-token decode over the paged cache. tokens: (B, 1); ``lengths``:
     (B,) int32, the number of cached positions per slot (the new token is
     written at position ``lengths[b]``); ``write_mask``: (B,) bool —
     False rows (free / still-prefilling slots riding in the fixed-shape
     batch) have their K/V writes redirected to the null block so they can
-    never perturb a neighbour's stream."""
+    never perturb a neighbour's stream.
+
+    Returns ``(logits, new_caches, health)`` where ``health`` is a (B,)
+    bool mask — True iff the row's logits are all finite. The reduction
+    runs in-graph so the serving watchdog gets a per-slot verdict without
+    a second device round trip. ``poison_mask`` ((B,) bool, optional) is
+    the fault-injection hook: True rows have their logits forced to NaN
+    *before* the health reduction, exercising the same detection path a
+    real divergence would take. The engine only compiles a poison variant
+    when a fault plan contains ``nan_logits`` events, so the production
+    program never carries the extra operand."""
     if cfg.encoder_layers:
         raise NotImplementedError("paged serving does not support enc-dec archs")
     positions = lengths.astype(jnp.int32)[:, None]
@@ -536,6 +546,12 @@ def decode_step_paged(params, cfg, tokens, caches, *, block_tables, lengths,
         paged=(block_tables, write_mask[:, None]),
     )
     logits = logits_from_hidden(params, cfg, hidden)
+    if poison_mask is not None:
+        logits = jnp.where(
+            poison_mask[:, None, None], jnp.float32(jnp.nan).astype(logits.dtype),
+            logits,
+        )
+    health = jnp.isfinite(logits).all(axis=tuple(range(1, logits.ndim)))
 
     # masked rows must not advance per-slot recurrent state either — the
     # pool writes are null-block-redirected inside the attention kernel,
@@ -551,7 +567,7 @@ def decode_step_paged(params, cfg, tokens, caches, *, block_tables, lengths,
         return jnp.where(write_mask.reshape(shape), new, old)
 
     new_caches = jax.tree.map(keep_masked, caches, new_caches, layouts)
-    return logits, new_caches
+    return logits, new_caches, health
 
 
 def prefill_chunk(params, cfg, tokens, caches, *, block_table, start, n_valid,
@@ -567,8 +583,10 @@ def prefill_chunk(params, cfg, tokens, caches, *, block_table, start, n_valid,
     dispatch exact-size chunks (``n_valid == C``) because pad tokens would
     pollute the recurrent scan.
 
-    Returns (last_logits, new_caches): logits at prompt position
-    ``start + n_valid - 1`` (shape (1, 1, V)) and the updated cache.
+    Returns (last_logits, new_caches, health): logits at prompt position
+    ``start + n_valid - 1`` (shape (1, 1, V)), the updated cache, and a
+    scalar bool health verdict (all chunk logits finite) for the serving
+    watchdog.
     """
     if cfg.encoder_layers:
         raise NotImplementedError("paged serving does not support enc-dec archs")
@@ -591,6 +609,7 @@ def prefill_chunk(params, cfg, tokens, caches, *, block_table, start, n_valid,
     )
     last = jax.lax.dynamic_slice_in_dim(hidden, n_valid - 1, 1, axis=1)
     logits = logits_from_hidden(params, cfg, last)
+    health = jnp.isfinite(logits).all()
 
     def put(old, new, lay):
         if lay.role == "state":
@@ -600,7 +619,7 @@ def prefill_chunk(params, cfg, tokens, caches, *, block_table, start, n_valid,
         return new
 
     new_caches = jax.tree.map(put, caches, new_sliced, layouts)
-    return logits, new_caches
+    return logits, new_caches, health
 
 
 def _find_cache_index(caches, unit, tail):

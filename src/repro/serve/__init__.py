@@ -1,9 +1,14 @@
 """Serving subsystem: paged continuous batching + orthogonal weight folding.
 
-  engine    ServeEngine (paged KV, chunked prefill, admission control),
-            Request, generate_reference oracle
-  kv_cache  BlockAllocator / BlockTables / reset_slot (layout-driven)
-  fold      fold trained ConstraintSet stacks into inference params
+  engine     ServeEngine (paged KV, chunked prefill, admission control,
+             preemption + swap-out, deadlines, divergence watchdog),
+             Request, generate_reference oracle
+  lifecycle  RequestState machine, typed terminal errors, Rejection
+  faults     deterministic seeded FaultPlan (chaos testing)
+  kv_cache   BlockAllocator (refcounted) / BlockTables / reset_slot /
+             SwapPool + bit-exact gather/scatter swap round trip
+  fold       fold trained ConstraintSet stacks into inference params,
+             feasibility_distance (serve-time drift watchdog)
 """
 
 from .engine import (  # noqa: F401
@@ -12,11 +17,35 @@ from .engine import (  # noqa: F401
     Request,
     ServeEngine,
     generate_reference,
+    youngest_by_decode_progress,
 )
+from .faults import FAULT_KINDS, FaultEvent, FaultPlan  # noqa: F401
 from .fold import (  # noqa: F401
     FoldFeasibilityError,
     FoldResult,
     extract_constraint_set,
+    feasibility_distance,
     fold_constraint_set,
 )
-from .kv_cache import BlockAllocator, BlockTables, blocks_needed, reset_slot  # noqa: F401
+from .kv_cache import (  # noqa: F401
+    BlockAllocator,
+    BlockTables,
+    SwapPool,
+    SwapRecord,
+    blocks_needed,
+    gather_slot_kv,
+    reset_slot,
+    scatter_slot_kv,
+    snapshot_checksum,
+)
+from .lifecycle import (  # noqa: F401
+    TERMINAL_STATES,
+    DeadlineExceededError,
+    DivergenceError,
+    PreemptedError,
+    Rejection,
+    RequestState,
+    ServeError,
+    SwapCorruptError,
+    is_terminal,
+)

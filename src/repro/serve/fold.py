@@ -66,6 +66,30 @@ def extract_constraint_set(params, cfg, grouping: str = "auto") -> ConstraintSet
     return ConstraintSet.from_tree(leaves, grouping)
 
 
+def feasibility_distance(params, cfg):
+    """Worst off-manifold residual over the constrained leaves of
+    ``params``: returns ``(max_distance, worst_path)``.
+
+    This is the measurement half of the fold feasibility gate, factored
+    out so the serving watchdog can re-check a *live* engine's folded
+    weights against the same ``atol`` contract the fold enforced at load
+    time (POGO's invariant is feasibility at all times — serve-time drift
+    means the parameter buffers were corrupted after folding).
+    """
+    worst = 0.0
+    worst_path = ""
+    infos = ortho.orthogonal_leaf_info(params, cfg)
+    leaves = ortho.extract_constrained(params, cfg)
+    for (path, _shape), leaf in zip(infos, leaves):
+        x = leaf.astype(jnp.float32)
+        if x.shape[-2] > x.shape[-1]:
+            x = jnp.swapaxes(x, -1, -2)
+        d = float(jnp.max(stiefel.manifold_distance(x)))
+        if d > worst:
+            worst, worst_path = d, path
+    return worst, worst_path
+
+
 def fold_constraint_set(params, cfg, cs: ConstraintSet, *,
                         atol: float = DEFAULT_ATOL) -> FoldResult:
     """Write the trained stacks of ``cs`` back into ``params`` and verify
@@ -81,20 +105,11 @@ def fold_constraint_set(params, cfg, cs: ConstraintSet, *,
         folded = tuple(folded)
     merged = ortho.merge_constrained(params, cfg, folded)
 
-    worst = 0.0
-    worst_path = ""
-    infos = ortho.orthogonal_leaf_info(merged, cfg)
-    new_leaves = ortho.extract_constrained(merged, cfg)
-    for (path, _shape), leaf in zip(infos, new_leaves):
-        x = leaf.astype(jnp.float32)
-        if x.shape[-2] > x.shape[-1]:
-            x = jnp.swapaxes(x, -1, -2)
-        d = float(jnp.max(stiefel.manifold_distance(x)))
-        if d > worst:
-            worst, worst_path = d, path
+    worst, worst_path = feasibility_distance(merged, cfg)
     if worst > atol:
         raise FoldFeasibilityError(worst_path, worst, atol)
+    n_leaves = len(ortho.extract_constrained(merged, cfg))
     return FoldResult(
-        params=merged, n_leaves=len(new_leaves), max_distance=worst,
+        params=merged, n_leaves=n_leaves, max_distance=worst,
         worst_path=worst_path,
     )

@@ -1,16 +1,19 @@
-"""Paged KV-cache bookkeeping: block pool allocator, per-slot block tables,
-and layout-driven slot reset.
+"""Paged KV-cache bookkeeping: refcounted block pool, per-slot block
+tables, layout-driven slot reset, and host-side swap-out.
 
 The device side of the paged cache lives in ``models.transformer``
 (``init_paged_cache`` / ``paged_cache_layout``) and ``models.attention``
 (``PagedKVCache``, ``paged_attention_apply``). This module is the host
 side the engine programs against:
 
-  * :class:`BlockAllocator` — a free list over physical blocks
-    ``1 .. n_blocks-1``. Block 0 is the reserved null/scratch block:
-    masked writes (padding tokens, inactive decode rows) are redirected
-    there by the attention kernel and it is never handed to a request,
-    so a request's blocks are uniquely owned for their whole lifetime.
+  * :class:`BlockAllocator` — a refcounted free list over physical
+    blocks ``1 .. n_blocks-1``. Block 0 is the reserved null/scratch
+    block: masked writes (padding tokens, inactive decode rows) are
+    redirected there by the attention kernel and it is never handed to
+    a request. ``alloc`` hands out blocks at refcount 1; ``incref``
+    lets future aliasing readers (prefix caching) share a block, and
+    ``free`` decrements — a block returns to the pool only when its
+    count hits zero. Double frees and foreign frees raise.
   * :class:`BlockTables` — the host mirror of the ``(n_slots,
     max_blocks)`` int32 operand mapping logical block index -> physical
     block id per slot (0-padded past the allocation).
@@ -19,19 +22,36 @@ side the engine programs against:
     (replaces the old ndim/dtype axis guess). Pool leaves are never
     reset: isolation comes from unique block ownership plus position
     masking, not from zeroing.
+  * :class:`SwapPool` + :func:`gather_slot_kv` / :func:`scatter_slot_kv`
+    — preemption support. Swap-out gathers a victim slot's physical
+    block contents (every ``pool`` leaf, block axis ``ndim - 4``) and
+    its per-slot ``state`` rows into host numpy buffers, checksums the
+    snapshot, and frees the device blocks; restore scatters the same
+    bytes into freshly allocated blocks. Because attention reads the
+    pool *through the block table*, the physical ids may differ across
+    the round trip — only the logical order matters — and the restore
+    is bit-exact (pinned in ``tests/test_faults.py``). The checksum is
+    verified before any device write, so a corrupted snapshot fails
+    only the victim request (:class:`~repro.serve.lifecycle.SwapCorruptError`).
 
-Capacity invariant the engine maintains: a request is admitted only after
-reserving ``ceil((prompt_len + max_new_tokens) / block_size)`` blocks, so
-a running request can never hit an out-of-blocks condition mid-flight
-(no preemption needed).
+Capacity invariant the engine maintains: a request is admitted only
+after reserving ``ceil((prompt_len + max_new_tokens) / block_size)``
+blocks, so a *running* request can never hit an out-of-blocks condition
+mid-flight; under overload the scheduler reclaims reserved blocks by
+swapping whole victims out, never by starving a running one.
 """
 
 from __future__ import annotations
 
-from typing import List, Optional, Sequence
+import dataclasses
+import zlib
+from typing import Dict, List, Optional, Sequence
 
 import jax
+import jax.numpy as jnp
 import numpy as np
+
+from .lifecycle import SwapCorruptError
 
 NULL_BLOCK = 0
 
@@ -42,11 +62,13 @@ def blocks_needed(n_tokens: int, block_size: int) -> int:
 
 
 class BlockAllocator:
-    """Free-list allocator over physical blocks ``1 .. n_blocks-1``.
+    """Refcounted free-list allocator over physical blocks ``1 .. n_blocks-1``.
 
     ``alloc`` is all-or-nothing (returns None when the request cannot be
     satisfied) so admission control can reserve a request's worst case
-    up front. Double frees and foreign frees raise.
+    up front. Blocks come back at refcount 1; ``incref`` adds sharers
+    (aliasing readers — the prefix-caching hook), ``free`` decrements
+    and recycles at zero. Double frees and foreign frees raise.
     """
 
     def __init__(self, n_blocks: int):
@@ -55,7 +77,7 @@ class BlockAllocator:
         self.n_blocks = n_blocks
         # LIFO free list: recently freed blocks are re-used first
         self._free: List[int] = list(range(n_blocks - 1, 0, -1))
-        self._used: set[int] = set()
+        self._ref: Dict[int, int] = {}
 
     @property
     def n_free(self) -> int:
@@ -63,24 +85,38 @@ class BlockAllocator:
 
     @property
     def n_used(self) -> int:
-        return len(self._used)
+        return len(self._ref)
+
+    def refcount(self, block: int) -> int:
+        return self._ref.get(block, 0)
 
     def alloc(self, k: int) -> Optional[List[int]]:
-        """Reserve ``k`` blocks; None if fewer than ``k`` are free."""
+        """Reserve ``k`` blocks at refcount 1; None if fewer are free."""
         if k < 0:
             raise ValueError(f"alloc({k})")
         if k > len(self._free):
             return None
         out = [self._free.pop() for _ in range(k)]
-        self._used.update(out)
+        for b in out:
+            self._ref[b] = 1
         return out
+
+    def incref(self, blocks: Sequence[int]) -> None:
+        """Add a sharer to already-allocated blocks (aliasing reads)."""
+        for b in blocks:
+            if b not in self._ref:
+                raise ValueError(f"incref of unallocated block {b}")
+        for b in blocks:
+            self._ref[b] += 1
 
     def free(self, blocks: Sequence[int]) -> None:
         for b in blocks:
-            if b not in self._used:
+            if b not in self._ref:
                 raise ValueError(f"free of unallocated block {b}")
-            self._used.remove(b)
-            self._free.append(b)
+            self._ref[b] -= 1
+            if self._ref[b] == 0:
+                del self._ref[b]
+                self._free.append(b)
 
 
 class BlockTables:
@@ -137,3 +173,139 @@ def reset_slot(caches, layouts, slot: int):
         return leaf.at[tuple(idx)].set(0)
 
     return jax.tree.map(reset, caches, layouts)
+
+
+# ------------------------------------------------------------------ swap-out
+
+
+def _pool_block_axis(leaf) -> int:
+    """Block axis of a pool leaf: the trailing dims are always
+    ``(n_blocks, block_size, kv_heads, head_dim)`` (stacked layers add
+    leading repeat axes), so the block axis is ``ndim - 4``."""
+    return leaf.ndim - 4
+
+
+def gather_slot_kv(caches, layouts, slot: int, phys_blocks: Sequence[int]):
+    """Host numpy snapshot of one slot: ``(pool_rows, state_rows)``.
+
+    ``pool_rows`` holds, per pool leaf, the contents of the slot's
+    physical blocks in logical (block-table) order; ``state_rows`` holds
+    each per-slot recurrent-state leaf's row for ``slot``. Both are
+    dtype-preserving copies, so scattering them back is bit-exact.
+    """
+    idx = jnp.asarray(np.asarray(phys_blocks, np.int32))
+    pool_rows, state_rows = [], []
+    for leaf, lay in zip(jax.tree.leaves(caches), jax.tree.leaves(layouts)):
+        if lay.role == "pool":
+            pool_rows.append(
+                np.array(jnp.take(leaf, idx, axis=_pool_block_axis(leaf)))
+            )
+        elif lay.role == "state":
+            sl = [slice(None)] * leaf.ndim
+            sl[lay.slot_axis] = slot
+            state_rows.append(np.array(leaf[tuple(sl)]))
+    return pool_rows, state_rows
+
+
+def scatter_slot_kv(caches, layouts, slot: int, phys_blocks: Sequence[int],
+                    pool_rows: List[np.ndarray],
+                    state_rows: List[np.ndarray]):
+    """Inverse of :func:`gather_slot_kv` onto (possibly different)
+    physical blocks: writes each pool snapshot at ``phys_blocks`` in
+    logical order and each state row at ``slot``. Returns new caches."""
+    idx = np.asarray(phys_blocks, np.int32)
+    flat, treedef = jax.tree.flatten(caches)
+    lays = jax.tree.leaves(layouts)
+    pi = si = 0
+    out = []
+    for leaf, lay in zip(flat, lays):
+        if lay.role == "pool":
+            ax = _pool_block_axis(leaf)
+            sl = (slice(None),) * ax + (idx,)
+            out.append(leaf.at[sl].set(jnp.asarray(pool_rows[pi])))
+            pi += 1
+        elif lay.role == "state":
+            sl = [slice(None)] * leaf.ndim
+            sl[lay.slot_axis] = slot
+            out.append(leaf.at[tuple(sl)].set(jnp.asarray(state_rows[si])))
+            si += 1
+        else:
+            out.append(leaf)
+    return jax.tree.unflatten(treedef, out)
+
+
+def snapshot_checksum(buffers: Sequence[np.ndarray]) -> int:
+    """CRC32 over the concatenated raw bytes of the snapshot buffers."""
+    crc = 0
+    for b in buffers:
+        crc = zlib.crc32(np.ascontiguousarray(b).tobytes(), crc)
+    return crc
+
+
+@dataclasses.dataclass
+class SwapRecord:
+    """One preempted request's restorable host-side snapshot."""
+
+    uid: int
+    n_blocks: int                  # blocks to re-allocate on restore
+    pool_rows: List[np.ndarray]    # per pool leaf, logical block order
+    state_rows: List[np.ndarray]   # per state leaf, the slot's row
+    checksum: int                  # CRC over pool_rows + state_rows
+    # engine progress snapshot
+    slot_len: int
+    prefill_pos: int
+    remaining: int
+    phase: str                     # "prefill" | "decode"
+
+    def verify(self) -> None:
+        """Raise :class:`SwapCorruptError` if the snapshot no longer
+        matches its recorded checksum (called BEFORE any device write)."""
+        actual = snapshot_checksum(self.pool_rows + self.state_rows)
+        if actual != self.checksum:
+            raise SwapCorruptError(self.uid, self.checksum, actual)
+
+
+class SwapPool:
+    """Bounded, insertion-ordered store of :class:`SwapRecord`.
+
+    The engine restores in FIFO order (same strict-FIFO discipline as
+    admission); a full pool makes the next preemption fall back to
+    kill-mode (terminal ``PREEMPTED``) instead of growing host memory
+    without bound.
+    """
+
+    def __init__(self, max_records: Optional[int] = None):
+        self.max_records = max_records
+        self._records: Dict[int, SwapRecord] = {}
+
+    def __len__(self) -> int:
+        return len(self._records)
+
+    def __contains__(self, uid: int) -> bool:
+        return uid in self._records
+
+    @property
+    def full(self) -> bool:
+        return self.max_records is not None and len(self) >= self.max_records
+
+    def put(self, rec: SwapRecord) -> None:
+        if self.full:
+            raise RuntimeError(f"swap pool full ({self.max_records} records)")
+        if rec.uid in self._records:
+            raise ValueError(f"request {rec.uid} already swapped")
+        self._records[rec.uid] = rec
+
+    def peek_first(self) -> Optional[SwapRecord]:
+        for rec in self._records.values():
+            return rec
+        return None
+
+    def pop(self, uid: int) -> SwapRecord:
+        return self._records.pop(uid)
+
+    def host_bytes(self) -> int:
+        return sum(
+            b.nbytes
+            for rec in self._records.values()
+            for b in rec.pool_rows + rec.state_rows
+        )

@@ -240,3 +240,53 @@ def test_version1_cache_entries_are_invalidated(tmp_path):
     assert payload["version"] == autotune.PlanCache.VERSION == 2
     assert key not in payload["plans"]
     assert "k_new" in payload["plans"]
+
+
+# ------------------------------------------------ multi-process merge lock
+
+
+def test_store_merges_and_releases_lock(tmp_path):
+    """Two caches over the same file must both land their keys (the
+    lockfile serializes read-merge-replace) and leave no lock behind."""
+    path = str(tmp_path / "autotune.json")
+    a, b = autotune.PlanCache(path=path), autotune.PlanCache(path=path)
+    a.store("k_a", {"kind": "whole", "block_b": 2, "tile_n": 0})
+    b.store("k_b", {"kind": "tiled", "block_b": 0, "tile_n": 128})
+    payload = json.load(open(path))
+    assert set(payload["plans"]) == {"k_a", "k_b"}
+    assert not (tmp_path / "autotune.json.lock").exists()
+
+
+def test_store_retries_on_held_lock_and_counts(tmp_path, monkeypatch):
+    """A held lock makes the store back off (counted in STATS) and, once
+    every retry is exhausted, fall back to an unlocked merge rather than
+    dropping the plan or deadlocking."""
+    monkeypatch.setattr(autotune.PlanCache, "LOCK_BACKOFF_S", 1e-4)
+    path = str(tmp_path / "autotune.json")
+    lock = tmp_path / "autotune.json.lock"
+    lock.write_text("")  # someone else holds the lock, forever
+    cache = autotune.PlanCache(path=path)
+    before = dict(autotune.STATS)
+    cache.store("k", {"kind": "whole", "block_b": 1, "tile_n": 0})
+    assert (autotune.STATS["merge_retries"] - before["merge_retries"]
+            == autotune.PlanCache.LOCK_RETRIES)
+    assert (autotune.STATS["merge_lock_failures"]
+            - before["merge_lock_failures"] == 1)
+    # the plan still landed (best-effort unlocked merge)...
+    assert "k" in json.load(open(path))["plans"]
+    # ...and the foreign lock was not deleted (it is not provably stale)
+    assert lock.exists()
+
+
+def test_stale_lock_is_broken(tmp_path, monkeypatch):
+    """A lockfile whose holder died long ago must not wedge every future
+    store: after the retry budget it is unlinked once provably stale."""
+    monkeypatch.setattr(autotune.PlanCache, "LOCK_BACKOFF_S", 1e-4)
+    monkeypatch.setattr(autotune.PlanCache, "LOCK_STALE_S", 0.0)
+    path = str(tmp_path / "autotune.json")
+    lock = tmp_path / "autotune.json.lock"
+    lock.write_text("")
+    cache = autotune.PlanCache(path=path)
+    cache.store("k", {"kind": "whole", "block_b": 1, "tile_n": 0})
+    assert not lock.exists()  # stale lock broken for the next store
+    assert "k" in json.load(open(path))["plans"]

@@ -201,3 +201,48 @@ def test_elastic_restore_resharding(tmp_path, tree):
     assert step == 1
     for leaf in jax.tree.leaves(restored):
         assert leaf.sharding is not None
+
+
+# ------------------------------------------------- typed corruption errors
+
+
+def test_truncated_leaf_raises_typed_error(tmp_path, tree):
+    """A leaf file cut short mid-write must surface as
+    CheckpointCorruptError naming the path and expected/actual payload
+    size — not a raw numpy traceback."""
+    ckpt.save(str(tmp_path), 4, tree)
+    victim = os.path.join(str(tmp_path), "step_000000004", "leaf_00000.npy")
+    full = os.path.getsize(victim)
+    with open(victim, "r+b") as f:
+        f.truncate(full // 2)
+    with pytest.raises(ckpt.CheckpointCorruptError) as e:
+        ckpt.restore(str(tmp_path), 4, tree)
+    err = e.value
+    assert err.path == victim
+    assert err.expected_bytes == 12 * 4  # tree["a"]: (3, 4) float32
+    assert err.actual_bytes == full // 2
+    assert "expected" in str(err) and victim in str(err)
+
+
+def test_garbage_leaf_raises_typed_error(tmp_path, tree):
+    ckpt.save(str(tmp_path), 5, tree)
+    victim = os.path.join(str(tmp_path), "step_000000005", "leaf_00001.npy")
+    with open(victim, "wb") as f:
+        f.write(b"\x93NUMPY-not-really" + os.urandom(64))
+    with pytest.raises(ckpt.CheckpointCorruptError) as e:
+        ckpt.restore(str(tmp_path), 5, tree)
+    assert e.value.path == victim
+    assert e.value.actual_bytes == os.path.getsize(victim)
+
+
+def test_garbage_manifest_raises_typed_error(tmp_path, tree):
+    ckpt.save(str(tmp_path), 6, tree)
+    man = os.path.join(str(tmp_path), "step_000000006", "manifest.json")
+    with open(man, "w") as f:
+        f.write("{not json")
+    with pytest.raises(ckpt.CheckpointCorruptError):
+        ckpt.restore(str(tmp_path), 6, tree)
+    # restore_latest still degrades gracefully: the corrupt step is skipped
+    ckpt.save(str(tmp_path), 2, tree)
+    step, restored = ckpt.restore_latest(str(tmp_path), tree)
+    assert step == 2 and restored is not None

@@ -1,0 +1,454 @@
+"""Overload and fault-path coverage for the serving engine.
+
+The no-fault engine is pinned token-identical to the sequential oracle in
+``test_serve.py``; this file pins what happens when things go wrong:
+preemption + swap-out under block-pool pressure (restored requests must
+STAY token-identical — the swap round trip is bit-exact), tick-granular
+deadlines, client cancel, the divergence watchdog, and all four seeded
+``FaultPlan`` kinds — each deterministic, each failing exactly the
+requests it should and nobody else.
+"""
+
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.models import ortho
+from repro.models import transformer as tfm
+from repro.serve import (
+    DeadlineExceededError,
+    DivergenceError,
+    FaultEvent,
+    FaultPlan,
+    PreemptedError,
+    RejectReason,
+    Request,
+    RequestState,
+    ServeEngine,
+    SwapCorruptError,
+    gather_slot_kv,
+    generate_reference,
+    is_terminal,
+    scatter_slot_kv,
+    snapshot_checksum,
+)
+
+KEY = jax.random.PRNGKey(0)
+
+
+@pytest.fixture(scope="module")
+def smollm_f32():
+    cfg = dataclasses.replace(
+        get_config("smollm-360m", smoke=True), compute_dtype="float32"
+    )
+    params = tfm.init_params(KEY, cfg)
+    return params, cfg
+
+
+def _prompt(rng, lo=3, hi=10):
+    return rng.integers(0, 100, size=(int(rng.integers(lo, hi + 1)),)).astype(
+        np.int32
+    )
+
+
+# ---------------------------------------------------------------- FaultPlan
+
+
+class TestFaultPlan:
+    def test_unknown_kind_rejected(self):
+        with pytest.raises(ValueError):
+            FaultEvent("segfault", tick=1)
+
+    def test_random_is_seed_deterministic(self):
+        a = FaultPlan.random(7, n_events=6, max_tick=40, n_slots=4)
+        b = FaultPlan.random(7, n_events=6, max_tick=40, n_slots=4)
+        assert a.events == b.events
+        c = FaultPlan.random(8, n_events=6, max_tick=40, n_slots=4)
+        assert a.events != c.events
+
+    def test_window_semantics(self):
+        plan = FaultPlan((FaultEvent("alloc_exhaust", tick=3, duration=2),))
+        assert not plan.alloc_blocked(2)
+        assert plan.alloc_blocked(3) and plan.alloc_blocked(4)
+        assert not plan.alloc_blocked(5)
+        assert plan.fired == [(3, "alloc_exhaust", None),
+                              (4, "alloc_exhaust", None)]
+
+    def test_corrupt_swap_is_one_shot(self):
+        plan = FaultPlan((FaultEvent("corrupt_swap", tick=0),))
+        buf = np.zeros(16, np.uint8)
+        assert plan.corrupt_swap(1, uid=5, buffers=[buf])
+        assert buf.sum() == 0xFF  # exactly one byte flipped
+        assert not plan.corrupt_swap(2, uid=6, buffers=[buf])  # spent
+
+
+# -------------------------------------------------------- swap bit-exactness
+
+
+def test_swap_gather_scatter_roundtrip_is_bit_exact(smollm_f32):
+    """Dedicated pin for the swap obligation: gather a mid-decode slot's
+    KV to host, scatter it into DIFFERENT physical blocks, gather again —
+    every buffer must be byte-identical (dtype-preserving, no fp detour)."""
+    params, cfg = smollm_f32
+    eng = ServeEngine(params, cfg, n_slots=2, n_blocks=17, block_size=4)
+    eng.submit(Request(uid=0, prompt=np.arange(7, dtype=np.int32),
+                       max_new_tokens=8))
+    for _ in range(4):  # into decode with a few tokens cached
+        eng.step()
+    assert eng.slot_state[0] == "decode"
+    phys = eng.tables.owned(0)
+    pool1, state1 = gather_slot_kv(eng.caches, eng.layouts, 0, phys)
+    crc1 = snapshot_checksum(pool1 + state1)
+    relocated = eng.allocator.alloc(len(phys))  # different physical ids
+    assert relocated is not None and set(relocated) != set(phys)
+    caches2 = scatter_slot_kv(
+        eng.caches, eng.layouts, 0, relocated, pool1, state1
+    )
+    pool2, state2 = gather_slot_kv(caches2, eng.layouts, 0, relocated)
+    assert snapshot_checksum(pool2 + state2) == crc1
+    for a, b in zip(pool1 + state1, pool2 + state2):
+        assert a.dtype == b.dtype
+        np.testing.assert_array_equal(
+            a.view(np.uint8), b.view(np.uint8)
+        )
+
+
+def test_swap_out_restore_through_engine_matches_oracle(smollm_f32):
+    """Force a mid-decode swap-out through the engine's own path; the
+    restored request must finish token-identical to the oracle."""
+    params, cfg = smollm_f32
+    eng = ServeEngine(params, cfg, n_slots=2, n_blocks=17, block_size=4,
+                      preemption="swap")
+    req = Request(uid=0, prompt=np.arange(6, dtype=np.int32), max_new_tokens=8)
+    eng.submit(req)
+    for _ in range(4):
+        eng.step()
+    assert eng.slot_state[0] == "decode" and len(req.out_tokens) >= 2
+    eng._swap_out(0)
+    assert req.state is RequestState.SWAPPED
+    assert eng.allocator.n_used == 0  # device blocks reclaimed
+    eng.run()
+    assert req.state is RequestState.FINISHED
+    assert eng.stats["swapped_out"] == 1 and eng.stats["swapped_in"] == 1
+    assert req.out_tokens == generate_reference(params, cfg, req.prompt, 8)
+
+
+# ------------------------------------------------------------ overload burst
+
+
+def test_overload_burst_preemption_drains_with_oracle_identity(smollm_f32):
+    """Acceptance: 32 requests against a pool sized ~1/3 of peak demand
+    (3x overload), preemption on. The burst must drain with every request
+    in a typed terminal state, preemption/swap must actually fire, p99
+    TTFT must respect the deadline, and every FINISHED request — the
+    preempted/swapped/restored ones included — must be token-identical to
+    the sequential oracle."""
+    params, cfg = smollm_f32
+    rng = np.random.default_rng(11)
+    deadline = 600
+    reqs = [
+        Request(uid=i, prompt=_prompt(rng, 3, 12),
+                max_new_tokens=int(rng.integers(2, 9)),
+                deadline_ticks=deadline)
+        for i in range(32)
+    ]
+    # a few block-hungry long decoders to pin the pool and trigger
+    # head-of-line starvation for the shorter requests behind them
+    for i in (0, 5, 9):
+        reqs[i] = Request(uid=i, prompt=_prompt(rng, 4, 8),
+                          max_new_tokens=24, deadline_ticks=deadline)
+    peak_blocks = sum(
+        -(-(len(r.prompt) + r.max_new_tokens) // 4) for r in reqs[:8]
+    )
+    eng = ServeEngine(params, cfg, n_slots=4, block_size=4,
+                      n_blocks=max(9, peak_blocks // 3) + 1,
+                      prefill_chunk=5, preemption="swap",
+                      preempt_after_ticks=2, max_preemptions=2)
+    for r in reqs:
+        eng.submit(r)
+    terminal = eng.run(max_ticks=deadline + 50)
+    assert len(terminal) == 32
+    assert all(is_terminal(r.state) for r in reqs)
+    s = eng.stats
+    assert s["preemptions"] > 0 and s["swapped_out"] > 0
+    assert s["swapped_in"] > 0, "no swapped request was ever restored"
+    finished = [r for r in reqs if r.state is RequestState.FINISHED]
+    assert len(finished) >= 28  # overload may expire a few, not starve many
+    restored = [r for r in finished if r.n_preemptions > 0]
+    assert restored, "no finished request went through swap+restore"
+    for r in finished:
+        ref = generate_reference(params, cfg, r.prompt, r.max_new_tokens)
+        assert r.out_tokens == ref, (
+            f"request {r.uid} (preemptions={r.n_preemptions}) diverged"
+        )
+    ttfts = np.array([r.first_tick - r.submit_tick for r in finished])
+    assert float(np.percentile(ttfts, 99)) <= deadline
+    # accounting closes: pool fully drained, nothing left swapped
+    assert eng.allocator.n_used == 0 and len(eng.swap_pool) == 0
+
+
+def test_kill_mode_preemption_is_typed(smollm_f32):
+    """kill-mode: victims get terminal PREEMPTED with a typed error, and
+    the requests that do finish are still oracle-identical."""
+    params, cfg = smollm_f32
+    rng = np.random.default_rng(12)
+    long_req = Request(uid=0, prompt=_prompt(rng, 4, 6), max_new_tokens=20)
+    shorts = [
+        Request(uid=i, prompt=_prompt(rng, 3, 6), max_new_tokens=3)
+        for i in range(1, 8)
+    ]
+    eng = ServeEngine(params, cfg, n_slots=2, n_blocks=9, block_size=4,
+                      preemption="kill", preempt_after_ticks=2,
+                      max_preemptions=1)
+    eng.submit(long_req)
+    for r in shorts:
+        eng.submit(r)
+    eng.run()
+    assert all(is_terminal(r.state) for r in [long_req] + shorts)
+    preempted = [r for r in [long_req] + shorts
+                 if r.state is RequestState.PREEMPTED]
+    assert preempted and eng.stats["preempted"] == len(preempted)
+    for r in preempted:
+        assert isinstance(r.error, PreemptedError)
+    for r in [long_req] + shorts:
+        if r.state is RequestState.FINISHED:
+            assert r.out_tokens == generate_reference(
+                params, cfg, r.prompt, r.max_new_tokens
+            )
+
+
+# --------------------------------------------------------- deadlines/cancel
+
+
+def test_queued_request_expires_at_deadline(smollm_f32):
+    params, cfg = smollm_f32
+    eng = ServeEngine(params, cfg, n_slots=1, n_blocks=9, block_size=4)
+    blocker = Request(uid=0, prompt=np.arange(4, dtype=np.int32),
+                      max_new_tokens=24)
+    doomed = Request(uid=1, prompt=np.arange(20, dtype=np.int32),
+                     max_new_tokens=8, deadline_ticks=3)
+    eng.submit(blocker)
+    eng.submit(doomed)  # needs 7 of 8 blocks: starves behind the blocker
+    eng.run()
+    assert blocker.state is RequestState.FINISHED
+    assert doomed.state is RequestState.EXPIRED
+    assert isinstance(doomed.error, DeadlineExceededError)
+    assert doomed.error.budget == "deadline"
+    assert eng.stats["expired"] == 1
+
+
+def test_ttft_budget_expires_via_delayed_prefill(smollm_f32):
+    """delay_prefill fault + TTFT budget: the engine holds the slot's
+    prefill, the request misses its first-token budget and expires with a
+    typed ttft error — deterministic, tick-granular."""
+    params, cfg = smollm_f32
+    plan = FaultPlan((FaultEvent("delay_prefill", tick=0, duration=8),))
+    eng = ServeEngine(params, cfg, n_slots=1, n_blocks=9, block_size=4,
+                      fault_plan=plan)
+    req = Request(uid=0, prompt=np.arange(5, dtype=np.int32),
+                  max_new_tokens=4, ttft_budget_ticks=4)
+    eng.submit(req)
+    eng.run(max_ticks=20)
+    assert req.state is RequestState.EXPIRED
+    assert isinstance(req.error, DeadlineExceededError)
+    assert req.error.budget == "ttft"
+    assert any(k == "delay_prefill" for _, k, _ in plan.fired)
+    # same engine without the fault finishes well inside the budget
+    eng2 = ServeEngine(params, cfg, n_slots=1, n_blocks=9, block_size=4)
+    req2 = Request(uid=0, prompt=np.arange(5, dtype=np.int32),
+                   max_new_tokens=4, ttft_budget_ticks=4)
+    eng2.submit(req2)
+    eng2.run(max_ticks=20)
+    assert req2.state is RequestState.FINISHED
+
+
+def test_cancel_in_every_nonterminal_state(smollm_f32):
+    params, cfg = smollm_f32
+    eng = ServeEngine(params, cfg, n_slots=2, n_blocks=17, block_size=4,
+                      preemption="swap")
+    queued = Request(uid=0, prompt=np.arange(4, dtype=np.int32),
+                     max_new_tokens=4)
+    eng.submit(queued)
+    assert eng.cancel(0)
+    assert queued.state is RequestState.CANCELLED
+
+    running = Request(uid=1, prompt=np.arange(4, dtype=np.int32),
+                      max_new_tokens=8)
+    eng.submit(running)
+    for _ in range(3):
+        eng.step()
+    assert running.state is RequestState.DECODE
+    assert eng.cancel(1)
+    assert running.state is RequestState.CANCELLED
+    assert eng.allocator.n_used == 0  # blocks reclaimed on cancel
+
+    swapped = Request(uid=2, prompt=np.arange(4, dtype=np.int32),
+                      max_new_tokens=8)
+    eng.submit(swapped)
+    for _ in range(3):
+        eng.step()
+    eng._swap_out([s for s, r in enumerate(eng.slot_req)
+                   if r is swapped][0])
+    assert swapped.state is RequestState.SWAPPED
+    assert eng.cancel(2)
+    assert swapped.state is RequestState.CANCELLED
+    assert len(eng.swap_pool) == 0
+
+    assert not eng.cancel(2)   # already terminal
+    assert not eng.cancel(99)  # unknown uid
+    assert eng.stats["cancelled"] == 3
+    assert not eng.has_work()
+
+
+# ------------------------------------------------------------ fault kinds
+
+
+def test_alloc_exhaust_delays_admission_then_drains(smollm_f32):
+    params, cfg = smollm_f32
+    plan = FaultPlan((FaultEvent("alloc_exhaust", tick=0, duration=3),))
+    eng = ServeEngine(params, cfg, n_slots=2, n_blocks=17, block_size=4,
+                      fault_plan=plan)
+    req = Request(uid=0, prompt=np.arange(5, dtype=np.int32),
+                  max_new_tokens=4)
+    eng.submit(req)
+    eng.run(max_ticks=40)
+    assert req.state is RequestState.FINISHED
+    assert req.admit_tick >= 3, "admission ran during the exhaustion window"
+    assert req.out_tokens == generate_reference(params, cfg, req.prompt, 4)
+    assert plan.fired[0][1] == "alloc_exhaust"
+
+
+def test_nan_fault_quarantines_only_the_victim(smollm_f32):
+    """nan_logits poisons ONE slot in-graph; the watchdog must fail that
+    request with DivergenceError and leave the neighbour token-identical
+    to a no-fault run of the same workload."""
+    params, cfg = smollm_f32
+    rng = np.random.default_rng(13)
+    prompts = [_prompt(rng, 4, 6) for _ in range(2)]
+
+    def build(plan):
+        reqs = [Request(uid=i, prompt=p, max_new_tokens=8)
+                for i, p in enumerate(prompts)]
+        eng = ServeEngine(params, cfg, n_slots=2, n_blocks=17, block_size=4,
+                          fault_plan=plan)
+        for r in reqs:
+            eng.submit(r)
+        eng.run(max_ticks=40)
+        return eng, reqs
+
+    base_eng, base = build(None)
+    assert all(r.state is RequestState.FINISHED for r in base)
+    assert base_eng._poison_fn is None  # zero-cost: no poison program
+
+    plan = FaultPlan((FaultEvent("nan_logits", tick=3, slot=0),))
+    eng, reqs = build(plan)
+    assert eng._poison_fn is not None
+    victims = [r for r in reqs if r.state is RequestState.FAILED]
+    assert len(victims) == 1
+    err = victims[0].error
+    assert isinstance(err, DivergenceError) and err.slot == 0
+    assert eng.stats["watchdog_trips"] == 1 and eng.stats["failed"] == 1
+    # the sick slot's NaN token was never appended
+    survivor = [r for r in reqs if r is not victims[0]][0]
+    assert survivor.state is RequestState.FINISHED
+    assert survivor.out_tokens == base[survivor.uid].out_tokens
+    assert all(np.isfinite(t) for t in victims[0].out_tokens)
+
+
+def test_corrupt_swap_fails_only_the_victim(smollm_f32):
+    """Acceptance: a corrupted swapped-out block fails EXACTLY the victim
+    request (typed SwapCorruptError at restore, before any device write);
+    every other request finishes oracle-identical."""
+    params, cfg = smollm_f32
+    rng = np.random.default_rng(14)
+    long_req = Request(uid=0, prompt=_prompt(rng, 4, 6), max_new_tokens=20)
+    shorts = [
+        Request(uid=i, prompt=_prompt(rng, 3, 6), max_new_tokens=3)
+        for i in range(1, 8)
+    ]
+    plan = FaultPlan((FaultEvent("corrupt_swap", tick=0),))
+    eng = ServeEngine(params, cfg, n_slots=2, n_blocks=9, block_size=4,
+                      preemption="swap", preempt_after_ticks=2,
+                      fault_plan=plan)
+    eng.submit(long_req)
+    for r in shorts:
+        eng.submit(r)
+    eng.run(max_ticks=400)
+    allreqs = [long_req] + shorts
+    assert all(is_terminal(r.state) for r in allreqs)
+    failed = [r for r in allreqs if r.state is RequestState.FAILED]
+    assert len(failed) == 1, "corruption must fail exactly the victim"
+    assert isinstance(failed[0].error, SwapCorruptError)
+    assert failed[0].n_preemptions == 1
+    corrupt_fires = [f for f in plan.fired if f[1] == "corrupt_swap"]
+    assert len(corrupt_fires) == 1 and corrupt_fires[0][2] == failed[0].uid
+    for r in allreqs:
+        if r.state is RequestState.FINISHED:
+            assert r.out_tokens == generate_reference(
+                params, cfg, r.prompt, r.max_new_tokens
+            )
+    assert eng.allocator.n_used == 0
+
+
+def test_random_chaos_plan_every_request_terminal(smollm_f32):
+    """Seeded chaos: a random plan mixing all four kinds over a burst.
+    Whatever fires, the engine must drain with every request typed
+    terminal and the pool fully reclaimed — twice, identically."""
+    params, cfg = smollm_f32
+
+    def run_once():
+        rng = np.random.default_rng(15)
+        plan = FaultPlan.random(21, n_events=8, max_tick=30, n_slots=2)
+        reqs = [
+            Request(uid=i, prompt=_prompt(rng, 3, 8),
+                    max_new_tokens=int(rng.integers(2, 7)),
+                    deadline_ticks=300)
+            for i in range(10)
+        ]
+        eng = ServeEngine(params, cfg, n_slots=2, n_blocks=9, block_size=4,
+                          preemption="swap", preempt_after_ticks=2,
+                          fault_plan=plan)
+        for r in reqs:
+            eng.submit(r)
+        eng.run(max_ticks=400)
+        assert all(is_terminal(r.state) for r in reqs)
+        assert eng.allocator.n_used == 0
+        return [(r.uid, r.state.value, tuple(r.out_tokens or ())) for r in reqs], plan.fired
+
+    out1, fired1 = run_once()
+    out2, fired2 = run_once()
+    assert out1 == out2, "chaos run is not deterministic"
+    assert fired1 == fired2
+
+
+# ------------------------------------------------------------ weight drift
+
+
+def test_weight_drift_trips_watchdog_and_rejects_submissions(smollm_f32):
+    params, cfg = smollm_f32
+    params = ortho.project_init(params, cfg)
+    eng = ServeEngine(params, cfg, n_slots=1, n_blocks=9, block_size=4,
+                      weight_check_interval=1)
+    req = Request(uid=0, prompt=np.arange(4, dtype=np.int32),
+                  max_new_tokens=6)
+    eng.submit(req)
+    eng.run()
+    assert req.state is RequestState.FINISHED
+    assert eng.weight_healthy and eng.stats["weight_checks"] >= 1
+    assert eng.stats["weight_drift_trips"] == 0
+    # corrupt the live folded weights (2x scale: grossly off-manifold)
+    leaves = ortho.extract_constrained(eng.params, cfg)
+    eng.params = ortho.merge_constrained(
+        eng.params, cfg, tuple(2.0 * leaf for leaf in leaves)
+    )
+    eng.submit(Request(uid=1, prompt=np.arange(4, dtype=np.int32),
+                       max_new_tokens=2))
+    eng.run()
+    assert not eng.weight_healthy
+    assert eng.stats["weight_drift_trips"] >= 1
+    rej = eng.try_submit(Request(uid=2, prompt=np.arange(4, dtype=np.int32),
+                                 max_new_tokens=2))
+    assert rej is not None and rej.reason is RejectReason.UNHEALTHY

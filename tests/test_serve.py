@@ -26,6 +26,7 @@ from repro.serve import (
     FoldFeasibilityError,
     RejectReason,
     Request,
+    RequestState,
     ServeEngine,
     blocks_needed,
     extract_constraint_set,
@@ -161,18 +162,77 @@ class TestAdmission:
     def test_too_long_rejected(self, smollm_f32):
         eng = self._engine(smollm_f32)  # 8 usable blocks * 4 = 32 positions
         prompt = np.zeros((40,), np.int32)
-        assert eng.try_submit(
-            Request(uid=0, prompt=prompt, max_new_tokens=4)
-        ) is RejectReason.TOO_LONG
+        rej = eng.try_submit(Request(uid=0, prompt=prompt, max_new_tokens=4))
+        assert rej.reason is RejectReason.TOO_LONG
+        assert rej.retry_after_ticks is None  # permanent for this shape
+
+    def test_too_long_boundary_exact_capacity(self, smollm_f32):
+        """Boundary pin: prompt+max_new == usable capacity is admissible;
+        one more position (== n_blocks * block_size, counting the reserved
+        null block) is TOO_LONG."""
+        eng = self._engine(smollm_f32)  # n_blocks=9, block_size=4
+        cap = (9 - 1) * 4  # usable positions (block 0 reserved)
+        ok = Request(uid=0, prompt=np.zeros((cap - 4,), np.int32),
+                     max_new_tokens=4)
+        assert eng.try_submit(ok) is None
+        over = Request(uid=1, prompt=np.zeros((9 * 4 - 4,), np.int32),
+                       max_new_tokens=4)
+        rej = eng.try_submit(over)
+        assert rej is not None and rej.reason is RejectReason.TOO_LONG
+
+    def test_zero_max_new_tokens_rejected(self, smollm_f32):
+        """Pinned: max_new_tokens < 1 is a typed rejection, not silent
+        one-token generation (the pre-robustness engine emitted 1 token)."""
+        eng = self._engine(smollm_f32)
+        rej = eng.try_submit(
+            Request(uid=0, prompt=np.arange(4, dtype=np.int32),
+                    max_new_tokens=0)
+        )
+        assert rej is not None and rej.reason is RejectReason.ZERO_NEW_TOKENS
+        with pytest.raises(AdmissionError) as e:
+            eng.submit(Request(uid=1, prompt=np.arange(4, dtype=np.int32),
+                               max_new_tokens=-1))
+        assert e.value.reason is RejectReason.ZERO_NEW_TOKENS
 
     def test_queue_full_rejected_and_counted(self, smollm_f32):
         eng = self._engine(smollm_f32, max_queue=1)
         rng = np.random.default_rng(0)
         eng.submit(Request(uid=0, prompt=_prompt(rng)))
-        assert eng.try_submit(
-            Request(uid=1, prompt=_prompt(rng))
-        ) is RejectReason.QUEUE_FULL
+        rej = eng.try_submit(Request(uid=1, prompt=_prompt(rng)))
+        assert rej.reason is RejectReason.QUEUE_FULL
+        assert rej.retry_after_ticks >= 1  # backpressure hint always set
         assert eng.stats["rejected"] == {"queue_full": 1}
+
+    def test_queue_full_then_drain_admits_resubmit(self, smollm_f32):
+        """A full queue that drains between submits must accept the retry
+        within the hinted tick budget."""
+        eng = self._engine(smollm_f32, max_queue=2, n_blocks=17)
+        rng = np.random.default_rng(7)
+        for uid in range(2):
+            eng.submit(Request(uid=uid, prompt=_prompt(rng, 3, 4),
+                               max_new_tokens=2))
+        eng.step()  # both into slots, freeing the queue
+        for uid in range(2, 4):  # refill the queue to capacity
+            eng.submit(Request(uid=uid, prompt=_prompt(rng, 3, 4),
+                               max_new_tokens=2))
+        late = Request(uid=99, prompt=_prompt(rng, 3, 4), max_new_tokens=2)
+        rej = eng.try_submit(late)
+        assert rej is not None and rej.reason is RejectReason.QUEUE_FULL
+        assert rej.retry_after_ticks >= 1
+        # drive the engine the hinted number of ticks and retry until the
+        # queue drains; the engine must accept before it goes idle
+        for _ in range(200):
+            for _ in range(rej.retry_after_ticks):
+                eng.step()
+            rej = eng.try_submit(late)
+            if rej is None:
+                break
+            assert rej.reason is RejectReason.QUEUE_FULL
+        assert rej is None, "queue never drained enough to admit the retry"
+        eng.run()
+        assert late.out_tokens == generate_reference(
+            *smollm_f32, late.prompt, late.max_new_tokens
+        )
 
     def test_fifo_head_of_line_blocks(self, smollm_f32):
         """A big head request waiting for blocks must not be overtaken by
@@ -284,6 +344,14 @@ def test_burst_32_requests_token_identical_to_sequential_reference(smollm_f32):
         assert r.out_tokens == ref, (
             f"request {r.uid} diverged from the sequential reference"
         )
+    # recovery-path telemetry must exist and stay silent on the happy path
+    s = eng.stats
+    assert s["finished"] == 32
+    assert all(r.state is RequestState.FINISHED for r in reqs)
+    for k in ("preemptions", "swapped_out", "swapped_in", "preempted",
+              "expired", "cancelled", "failed", "watchdog_trips",
+              "weight_drift_trips"):
+        assert s[k] == 0, f"stats[{k!r}] nonzero on a no-fault burst"
 
 
 def test_chunked_and_whole_prefill_are_equivalent(smollm_f32):
