@@ -336,14 +336,14 @@ def _sharded_worker(n_mat: int, p: int, n: int, steps: int) -> None:
     # Timing run (first call is the real trace+compile: .lower() above
     # does not populate the jit dispatch cache).
     t0 = time.perf_counter()
-    params, state = step(params, state, grads)
+    params, state, _health = step(params, state, grads)
     jax.block_until_ready(params.stacks[0])
     trace_s = time.perf_counter() - t0
 
     def run_steps(k):
         nonlocal params, state
         for _ in range(k):
-            params, state = step(params, state, grads)
+            params, state, _health = step(params, state, grads)
         jax.block_until_ready(params.stacks[0])
 
     us = min_window_us(run_steps, steps)
@@ -353,7 +353,7 @@ def _sharded_worker(n_mat: int, p: int, n: int, steps: int) -> None:
     # parent asserts every device count lands on the same digest.
     params, state = fresh()
     for _ in range(2):
-        params, state = step(params, state, grads)
+        params, state, _health = step(params, state, grads)
     digest = hashlib.md5(
         np.asarray(params.stacks[0]).tobytes()
     ).hexdigest()

@@ -1,0 +1,238 @@
+"""Robustness benchmark — the self-healing runtime's overhead budget
+(BENCH_robustness.json).
+
+What it measures, all through ``common.RECORDS``:
+
+  robustness/step/watchdog_off   steady constraint_step over stacked
+  robustness/step/watchdog_on    ConstraintSet storage, feasibility
+                                 watchdog disabled vs enabled: the ISSUE
+                                 gate is <2% steady overhead. The health
+                                 signal is derived from telemetry the
+                                 step already computes, and on the
+                                 two-stage pogo path escalation + repair
+                                 fold into a per-matrix land-lambda
+                                 blend (a ``jnp.where`` on a (B,)
+                                 vector) — the only lax.cond moves (B,
+                                 p, p) gram operands, never the (B, p,
+                                 n) stack, because XLA:CPU charges
+                                 operand/result copies at every cond
+                                 boundary (~0.3-0.5ms per 3MB stack even
+                                 when the branch never fires).
+  robustness/step/overhead       the on/off ratio, machine-readable
+                                 (``overhead_frac``); ``--max-overhead``
+                                 turns it into an exit-code gate.
+  robustness/repair/drift        one step on a 1.5x-scaled (off-manifold)
+                                 stack with the watchdog armed: wall time
+                                 of the step in which the in-step repair
+                                 (blended lambda-root land on this path)
+                                 actually fires, plus the residual it
+                                 restores.
+  robustness/rollback/restore    checkpoint save + ``restore_latest``
+                                 wall time at the bench problem size —
+                                 the recovery cost a divergence rollback
+                                 pays.
+
+CPU caveat: 2-core CI runners jitter far beyond the 2% claim, so the CI
+smoke gate runs ``--max-overhead 0.25`` as a gross-regression tripwire;
+the committed BENCH_robustness.json documents the real margin measured
+on an idle machine.
+
+Standalone:  python -m benchmarks.robustness_bench [--smoke] [--json OUT]
+                 [--max-overhead FRAC]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import tempfile
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro import optim
+from repro.checkpoint import checkpoint as ckpt
+from repro.core import api, stiefel
+
+from .common import emit
+
+
+def _sizes(smoke: bool) -> dict:
+    if smoke:
+        return dict(n_mat=16, p=32, n=64, steps=10)
+    return dict(n_mat=48, p=64, n=256, steps=20)
+
+
+def _problem(S):
+    base = stiefel.random_stiefel(
+        jax.random.PRNGKey(0), (S["n_mat"], S["p"], S["n"])
+    )
+    gbase = 0.1 * jax.random.normal(
+        jax.random.PRNGKey(1), (S["n_mat"], S["p"], S["n"])
+    )
+    params = api.ConstraintSet.from_tree({"w": base})
+    grads = api.ConstraintSet.from_tree({"w": gbase})
+    return params, grads
+
+
+def _make_step(watchdog):
+    # lr kept small so steady iterates sit far below the soft threshold:
+    # the off/on pair measures the idle watchdog machinery (at lr=0.1
+    # pogo's residual legitimately crosses soft and the escalated branch
+    # becomes part of "steady", which is a different — and real — cost)
+    opt = api.orthogonal(
+        "pogo", learning_rate=0.01,
+        base_optimizer=optim.chain(optim.trace(0.3)),
+        watchdog=watchdog,
+    )
+    return opt, api.constraint_step(opt)
+
+
+def _warm(S, watchdog):
+    """Compiled step + live (params, state, grads) after one warm step."""
+    params, grads = _problem(S)
+    opt, step = _make_step(watchdog)
+    state = opt.init(params)
+    t0 = time.perf_counter()
+    params, state, health = step(params, state, grads)
+    jax.block_until_ready(health.finite)
+    trace_s = time.perf_counter() - t0
+    return step, [params, state], grads, trace_s
+
+
+def _time_pair(S, wd):
+    """Steady us/step for watchdog off vs on, timed in INTERLEAVED
+    windows (off, on, off, on, ...) so machine load spikes hit both
+    variants alike — the overhead ratio is what the bench gates, and an
+    unlucky burst on one side would otherwise swamp a ~1% effect."""
+    step_off, live_off, grads, trace_off = _warm(S, None)
+    step_on, live_on, _, trace_on = _warm(S, wd)
+
+    def window(step, live, k):
+        last = None
+        t0 = time.perf_counter()
+        for _ in range(k):
+            live[0], live[1], last = step(live[0], live[1], grads)
+        jax.block_until_ready(last.finite)
+        return (time.perf_counter() - t0) / k
+
+    k = max(1, S["steps"] // 4)
+    best_off = best_on = float("inf")
+    for _ in range(20):
+        best_off = min(best_off, window(step_off, live_off, k))
+        best_on = min(best_on, window(step_on, live_on, k))
+    return trace_off, 1e6 * best_off, trace_on, 1e6 * best_on
+
+
+def run(smoke: bool = False) -> float:
+    """Emit all records; returns the steady watchdog overhead fraction."""
+    S = _sizes(smoke)
+    wd = api.WatchdogConfig()
+
+    trace_off, us_off, trace_on, us_on = _time_pair(S, wd)
+    emit(
+        "robustness/step/watchdog_off", us_off,
+        f"n={S['n_mat']}x({S['p']},{S['n']}) trace={trace_off:.2f}s",
+        trace_s=trace_off, n_mat=S["n_mat"], p=S["p"], n=S["n"],
+    )
+    emit(
+        "robustness/step/watchdog_on", us_on,
+        f"n={S['n_mat']}x({S['p']},{S['n']}) trace={trace_on:.2f}s",
+        trace_s=trace_on, n_mat=S["n_mat"], p=S["p"], n=S["n"],
+    )
+    overhead = us_on / us_off - 1.0
+    emit(
+        "robustness/step/overhead", us_on - us_off,
+        f"watchdog steady overhead {100 * overhead:+.2f}%",
+        overhead_frac=float(overhead),
+    )
+
+    # a step in which the in-step Newton-Schulz repair actually fires:
+    # scale the stack 1.5x off the manifold (residual >> hard threshold)
+    params, grads = _problem(S)
+    opt, step = _make_step(wd)
+    state = opt.init(params)
+    params, state, _h = step(params, state, grads)  # warm the program
+    drifted = api.ConstraintSet(
+        params.plan, tuple(1.5 * s for s in params.stacks)
+    )
+    t0 = time.perf_counter()
+    repaired, state, health = step(drifted, state, grads)
+    jax.block_until_ready(health.finite)
+    repair_s = time.perf_counter() - t0
+    summary = api.watchdog_summary(state) or {}
+    # the blended lambda-root repair is a contraction, not a one-shot
+    # projection: the first step pulls the ~10 drift residual back near
+    # the attraction region, hysteresis keeps the group escalated, and
+    # the follow-up careful step finishes the heal — record both.
+    repaired, state, health2 = step(repaired, state, grads)
+    jax.block_until_ready(health2.finite)
+    emit(
+        "robustness/repair/drift", 1e6 * repair_s,
+        f"repairs={summary.get('repairs', 0)} "
+        f"residual_after={float(jnp.max(health.residual)):.2e} "
+        f"next_step={float(jnp.max(health2.residual)):.2e}",
+        repairs=int(summary.get("repairs", 0)),
+        residual_after=float(jnp.max(health.residual)),
+        residual_next_step=float(jnp.max(health2.residual)),
+    )
+
+    # divergence-rollback recovery cost: sync save + restore_latest of
+    # the bench-sized (params, state) at this problem size
+    with tempfile.TemporaryDirectory() as d:
+        t0 = time.perf_counter()
+        ckpt.save(d, 1, (repaired, state))
+        save_s = time.perf_counter() - t0
+        t0 = time.perf_counter()
+        step_found, _restored = ckpt.restore_latest(d, (repaired, state))
+        restore_s = time.perf_counter() - t0
+    assert step_found == 1
+    emit(
+        "robustness/rollback/restore", 1e6 * restore_s,
+        f"save={1e3 * save_s:.1f}ms restore={1e3 * restore_s:.1f}ms",
+        save_s=save_s, restore_s=restore_s,
+    )
+    return overhead
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--json", default=None, metavar="OUT.json")
+    ap.add_argument(
+        "--max-overhead", type=float, default=None, metavar="FRAC",
+        help="fail (exit 1) when the steady watchdog-on overhead exceeds "
+             "FRAC (CI smoke uses 0.25 — a gross-regression tripwire; "
+             "the real margin on idle hardware is <0.02)",
+    )
+    args = ap.parse_args(argv)
+
+    print("name,us_per_call,derived", flush=True)
+    from . import common
+
+    common.CURRENT_SUITE = "robustness"
+    overhead = run(smoke=args.smoke)
+    common.CURRENT_SUITE = None
+    if args.json:
+        payload = {
+            "suites": ["robustness"],
+            "smoke": args.smoke,
+            "records": common.RECORDS,
+        }
+        with open(args.json, "w") as f:
+            json.dump(payload, f, indent=2)
+        print(f"# wrote {len(common.RECORDS)} records to {args.json}",
+              flush=True)
+    if args.max_overhead is not None and overhead > args.max_overhead:
+        print(
+            f"# FAIL: watchdog steady overhead {overhead:.3f} > "
+            f"--max-overhead {args.max_overhead:.3f}", flush=True,
+        )
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -33,8 +33,15 @@ RAGGED_MODULES = (
 
 ALL_AST_RULES = (
     "unmasked-eye", "block-in-loop", "jit-step-donation",
-    "pallas-outside-kernels",
+    "pallas-outside-kernels", "unguarded-step-health",
 )
+
+# Modules where dropping a StepHealth verdict is a policy bug: the
+# training loop's rollback and the serving engine's quarantine both key
+# off it, so a discarded verdict silently disables the recovery path.
+HEALTH_MODULES = ("train" + os.sep, "serve" + os.sep)
+# Direct calls whose return tuple carries a StepHealth last element.
+HEALTH_CALLS = ("decode_step_paged", "prefill_chunk")
 
 
 def _has_waiver(lines: list[str], lineno: int, rule: str) -> bool:
@@ -98,6 +105,9 @@ class _Visitor(ast.NodeVisitor):
         self.loop_depth = 0
         self.if_tests: list[str] = []
         self.findings: list[Finding] = []
+        # names bound from core.constraint_step(...): calling them yields
+        # (params, state, StepHealth)
+        self.step_names: set[str] = set()
 
     def emit(self, rule: str, severity: str, node, detail: str):
         if _has_waiver(self.lines, node.lineno, rule):
@@ -141,6 +151,55 @@ class _Visitor(ast.NodeVisitor):
         self.if_tests.append(ast.unparse(node.test))
         self.generic_visit(node)
         self.if_tests.pop()
+
+    # --- StepHealth drop detection (train/ and serve/ only)
+    def _in_health_scope(self) -> bool:
+        return self.rel.startswith(HEALTH_MODULES)
+
+    def _health_call(self, node) -> bool:
+        """Whether ``node`` is a call that returns a StepHealth element:
+        either a name bound from ``constraint_step(...)`` or one of the
+        known health-returning model entry points."""
+        if not isinstance(node, ast.Call):
+            return False
+        name = _dotted(node.func)
+        if name in self.step_names:
+            return True
+        return any(name == c or name.endswith("." + c) for c in HEALTH_CALLS)
+
+    def visit_Assign(self, node):
+        if "unguarded-step-health" in self.rules and self._in_health_scope():
+            value = node.value
+            # track `step = core.constraint_step(opt)` bindings
+            if (isinstance(value, ast.Call)
+                    and _dotted(value.func).split(".")[-1] == "constraint_step"
+                    and len(node.targets) == 1
+                    and isinstance(node.targets[0], ast.Name)):
+                self.step_names.add(node.targets[0].id)
+            elif self._health_call(value) and len(node.targets) == 1 \
+                    and isinstance(node.targets[0], (ast.Tuple, ast.List)):
+                elts = node.targets[0].elts
+                last = elts[-1] if elts else None
+                if isinstance(last, ast.Name) and last.id.startswith("_"):
+                    self.emit(
+                        "unguarded-step-health", "error", node,
+                        "StepHealth output of a constraint step discarded "
+                        "— the rollback/quarantine policy keys off this "
+                        "verdict; consume it (or waive a site that "
+                        "re-checks health elsewhere with lint-ok).",
+                    )
+        self.generic_visit(node)
+
+    def visit_Expr(self, node):
+        if "unguarded-step-health" in self.rules and self._in_health_scope() \
+                and self._health_call(node.value):
+            self.emit(
+                "unguarded-step-health", "error", node,
+                "constraint-step call whose (params, state, StepHealth) "
+                "result is dropped entirely — the health verdict must "
+                "reach the rollback/quarantine policy.",
+            )
+        self.generic_visit(node)
 
     # --- call-site rules
     def visit_Call(self, node):

@@ -28,6 +28,7 @@ import os
 import shutil
 import threading
 import warnings
+import zlib
 from typing import Any, Optional
 
 import jax
@@ -104,7 +105,16 @@ def save(directory: str, step: int, tree: PyTree, *, keep_last: int = 3,
             fname = f"leaf_{i:05d}.npy"
             np.save(os.path.join(tmp, fname), arr)
             manifest["leaves"].append(
-                {"file": fname, "shape": list(arr.shape), "dtype": dtype_name}
+                {
+                    "file": fname,
+                    "shape": list(arr.shape),
+                    "dtype": dtype_name,
+                    # crc over the stored payload bytes (post view
+                    # conversion): a bit flip anywhere in the file body is
+                    # caught at load even when numpy deserializes it
+                    # without complaint (same shape, garbage values)
+                    "crc32": zlib.crc32(np.ascontiguousarray(arr).tobytes()),
+                }
             )
         with open(os.path.join(tmp, "manifest.json"), "w") as f:
             json.dump(manifest, f)
@@ -144,12 +154,26 @@ def _is_valid(path: str) -> bool:
     try:
         with open(man) as f:
             m = json.load(f)
-        return all(
-            os.path.exists(os.path.join(path, leaf["file"]))
-            for leaf in m["leaves"]
-        )
-    except (json.JSONDecodeError, KeyError, OSError):
+        missing = [
+            leaf["file"] for leaf in m["leaves"]
+            if not os.path.exists(os.path.join(path, leaf["file"]))
+        ]
+    except (json.JSONDecodeError, KeyError, OSError, TypeError):
         return False
+    if missing:
+        # A parseable manifest referencing absent payloads is a
+        # half-deleted or tampered commit, not an in-progress one (commits
+        # are atomic renames) — name the step so the operator can see
+        # exactly which checkpoint was skipped and why.
+        warnings.warn(
+            f"checkpoint step {m.get('step', '?')} at {path!r} has a "
+            f"parseable manifest but {len(missing)} missing payload "
+            f"file(s) (first: {missing[0]!r}); skipping it",
+            RuntimeWarning,
+            stacklevel=2,
+        )
+        return False
+    return True
 
 
 def latest_step(directory: str) -> Optional[int]:
@@ -209,6 +233,15 @@ def _load_leaf(path: str, meta: dict) -> np.ndarray:
             f"payload shape {tuple(arr.shape)} != manifest {meta['shape']}",
             expected, os.path.getsize(fpath),
         )
+    if "crc32" in meta:  # absent in pre-crc checkpoints: restore normally
+        crc = zlib.crc32(np.ascontiguousarray(arr).tobytes())
+        if crc != meta["crc32"]:
+            raise CheckpointCorruptError(
+                fpath,
+                f"crc32 mismatch: payload {crc:#010x} != manifest "
+                f"{meta['crc32']:#010x} (bytes flipped after commit)",
+                expected, os.path.getsize(fpath),
+            )
     if meta["dtype"] in _VIEW_DTYPES:
         arr = arr.view(_VIEW_DTYPES[meta["dtype"]])
     return arr
@@ -317,8 +350,42 @@ def restore(directory: str, step: int, like: PyTree, *, shardings: PyTree = None
 
 
 def restore_latest(directory: str, like: PyTree, *, shardings: PyTree = None):
-    """(step, tree) from the newest valid checkpoint, or (None, None)."""
-    step = latest_step(directory)
-    if step is None:
+    """(step, tree) from the newest *restorable* checkpoint, or (None, None).
+
+    Walks newest -> oldest. Two distinct degradation layers:
+
+      * a directory that fails :func:`_is_valid` (unparseable manifest,
+        missing payload files) is skipped up front, with a warning naming
+        the bad step;
+      * a directory that LOOKS valid but whose payload fails to
+        deserialize or fails its crc (:class:`CheckpointCorruptError`
+        from :func:`restore` — truncated write, garbage bytes, post-commit
+        bit flip) is also skipped with a pointed warning, and the walk
+        falls back to the next-older commit.
+
+    Structure mismatches (``ValueError``: wrong leaf count/shape vs
+    ``like``) still raise — an incompatible ``like`` is a caller bug,
+    not disk corruption, and silently skipping it would mask it.
+    """
+    if not os.path.isdir(directory):
         return None, None
-    return step, restore(directory, step, like, shardings=shardings)
+    names = sorted(
+        (d for d in os.listdir(directory)
+         if d.startswith("step_") and not d.endswith(".tmp")),
+        reverse=True,
+    )
+    for d in names:
+        path = os.path.join(directory, d)
+        if not _is_valid(path):
+            continue
+        step = int(d.split("_")[1])
+        try:
+            return step, restore(directory, step, like, shardings=shardings)
+        except CheckpointCorruptError as e:
+            warnings.warn(
+                f"checkpoint step {step} at {path!r} is corrupt and was "
+                f"skipped ({e}); falling back to an older checkpoint",
+                RuntimeWarning,
+                stacklevel=2,
+            )
+    return None, None

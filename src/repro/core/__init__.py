@@ -25,6 +25,8 @@ from .api import (
     RgdConfig,
     RsdmConfig,
     SlpgConfig,
+    WatchdogConfig,
+    WatchdogState,
     leaf_distances,
     max_distance,
     method_overrides,
@@ -33,6 +35,8 @@ from .api import (
     ortho_states,
     plan_groups,
     register_method,
+    step_health,
+    watchdog_summary,
 )
 from .landing import landing_pc
 from .pogo import PogoState
@@ -72,4 +76,8 @@ __all__ = [
     "max_distance",
     "leaf_distances",
     "ortho_states",
+    "WatchdogConfig",
+    "WatchdogState",
+    "step_health",
+    "watchdog_summary",
 ]

@@ -45,6 +45,7 @@ from typing import Any, Callable, NamedTuple, Optional
 import jax
 import jax.numpy as jnp
 
+from ..health import StepHealth, from_residual
 from ..optim.transform import GradientTransformation
 from . import quartic, stiefel
 from .schedule import (  # noqa: F401  (re-exported public API)
@@ -202,7 +203,7 @@ def constraint_step(opt):
     """Donated, jitted resting-state step over :class:`ConstraintSet`s.
 
         step = constraint_step(orthogonal("pogo", use_kernel=True, ...))
-        params, state = step(params, state, grads)   # all ConstraintSet/IO
+        params, state, health = step(params, state, grads)
 
     The param stacks and the optimizer state (base moments, grouped
     distances) are **donated** into the step: XLA aliases each input
@@ -213,12 +214,18 @@ def constraint_step(opt):
     stacks stay batch-sharded through the step without ever visiting a
     replicated layout. Gradients are NOT donated (callers typically
     reuse grad buffers for accumulation).
+
+    The third output is the step's :class:`~repro.health.StepHealth`
+    (scalar finite verdict + worst feasibility residual) — derived
+    in-graph from telemetry the step already computes, so it is free.
+    Training/serving call sites must consume it (the orthocheck
+    ``unguarded-step-health`` lint rule flags drops).
     """
 
     @functools.partial(jax.jit, donate_argnums=(0, 1))
     def step(params: "ConstraintSet", state, grads: "ConstraintSet"):
         updates, state = opt.update(grads, state, params)
-        return params.apply(updates), state
+        return params.apply(updates), state, step_health(state)
 
     return step
 
@@ -401,8 +408,37 @@ class Method:
         """Instance-level gate for padded (ragged megagroup) batches."""
         return False
 
+    def escalated(self) -> Optional["Method"]:
+        """The *careful sibling* the feasibility watchdog escalates a
+        drifting group to: a variant of this method that trades speed
+        for a feasibility guarantee (POGO's exact quartic ``find_root``,
+        Landing's exact safe step). ``None`` (the default) means there is
+        no safer variant — watchdog escalation then folds into the
+        Newton-Schulz repair threshold instead."""
+        return None
+
+    def careful_blend(self) -> bool:
+        """True if this method's careful sibling folds into its own land
+        stage as per-matrix scalars, driven by ``ctx.scratch['wd_blend']``
+        (set by the watchdog driver to ``(escalated, hard_threshold)``).
+
+        A blending method decides per matrix — escalated group, or
+        residual past the hard threshold — and swaps only the *scalar*
+        it feeds its land polynomial (POGO: the land ``lambda``, solved
+        from the gram it already computes). The driver then skips both
+        the careful-sibling ``lax.cond`` and the Newton-Schulz repair
+        cond: on CPU/GPU a `lax.cond` whose operands or results touch
+        the (B, p, n) stack costs a full-stack copy per boundary even
+        when the branch never fires (~5-15% of a step), while the
+        blended form keeps every conditional operand at (B, p, p) or
+        smaller. The method must record the per-matrix repair mask in
+        ``ctx.scratch['wd_repaired']``."""
+        return False
+
     def fused_step(self, x: Array, g: Array, ctx: StepCtx, slots: FusedSlots):
-        """One fused group step: ``(x_next, mu', nu', dist)``."""
+        """One fused group step: ``(x_next, mu', nu', dist, finite)`` —
+        ``finite`` is the per-matrix ``(B,)`` StepHealth flag, derived as
+        ``isfinite(dist)`` (see ``kernels.ref.fused_group_step_ref``)."""
         from ..kernels import ops as kops
 
         return kops.fused_group_step(
@@ -454,17 +490,77 @@ class Pogo(Method):
         # Pure polynomial stages; find_root masks the quartic's identity.
         return True
 
+    def escalated(self) -> Optional["Method"]:
+        if self.find_root:
+            return None  # already the careful variant
+        return Pogo(lam=self.lam, find_root=True)
+
+    def careful_blend(self) -> bool:
+        # The careful sibling differs only in the land lambda, which is
+        # per-matrix scalars solved from the gram land computes anyway.
+        return not self.find_root
+
     def direction(self, x, g, ctx):
         return stiefel.riemannian_gradient(x, g)
 
     def land(self, m, ctx):
+        c = stiefel.gram(m)
+        wd_blend = None if self.find_root else ctx.scratch.get("wd_blend")
         if self.find_root:
             lam = quartic.optimal_lambda(m, fallback=self.lam, pv=ctx.pv)
             lam = lam[..., None, None].astype(_scalar_dtype(m.dtype))
+        elif wd_blend is not None:
+            lam = self._blend_lambda(m, c, ctx, wd_blend)
         else:
             lam = jnp.asarray(self.lam, _scalar_dtype(m.dtype))
-        c = stiefel.gram(m)
         return (1.0 + lam) * m - lam * (c @ m)
+
+    def _blend_lambda(self, m, c, ctx, wd_blend):
+        """Watchdog-blended per-matrix land lambda (see
+        :meth:`Method.careful_blend`): matrices in an escalated group, or
+        whose pre-land residual crossed the hard threshold, land with the
+        exact quartic-root lambda (== the ``find_root`` sibling); the
+        rest keep the fixed ``self.lam``. Steady-path cost discipline
+        (XLA:CPU charges every (B, p, p) traversal ~100-200us here, cond
+        boundary or not): the hard-threshold detector reads only the
+        gram DIAGONAL — ``diag(C) = row norms^2 - 1``, a (B, p) slice of
+        the already-live gram — which catches scale/blow-up drift and
+        non-finites (the fault kinds that actually occur) and never
+        false-positives, since ``||diag(C)|| <= ||C||_F``. A violation
+        living purely off-diagonal is caught one step later by the exact
+        post-step residual telemetry (it crosses ``soft`` long before
+        ``hard``), escalating the group into the same blended solve. The
+        lone ``lax.cond`` skips the C^2/C^3 quartic-solve matmuls while
+        nothing drifts; its operand is the gram, never the (B, p, n)
+        stack."""
+        esc, hard = wd_blend
+        p = m.shape[-2]
+        eye = (
+            jnp.eye(p, dtype=c.dtype) if ctx.pv is None
+            else stiefel.masked_eye(p, ctx.pv, c.dtype)
+        )
+        diag_dev = jnp.real(
+            jnp.diagonal(c, axis1=-2, axis2=-1)
+            - jnp.diagonal(eye, axis1=-2, axis2=-1)
+        )
+        dist_m = jnp.sqrt(jnp.sum(diag_dev * diag_dev, axis=-1))
+        rep = jnp.isfinite(dist_m) & (dist_m > hard)
+        need = esc | rep
+        ctx.scratch["wd_repaired"] = rep
+        lam_vec = jax.lax.cond(
+            jnp.any(need),
+            lambda cc: quartic.optimal_lambda_from_gram(
+                cc - eye, fallback=self.lam
+            ),
+            lambda cc: jnp.full(
+                cc.shape[:-2], self.lam, _scalar_dtype(m.dtype)
+            ),
+            c,
+        )
+        lam_vec = jnp.where(
+            need, lam_vec, jnp.asarray(self.lam, lam_vec.dtype)
+        )
+        return lam_vec[..., None, None].astype(_scalar_dtype(m.dtype))
 
     def kernel_update(self, x, g, ctx):
         from ..kernels import ops as kops
@@ -549,6 +645,11 @@ class Landing(Method):
         # Field and penalty are polynomial ((A - I)X has zero padded rows);
         # the safe-step quartic masks its identity via ctx.pv.
         return True
+
+    def escalated(self) -> Optional["Method"]:
+        if self.safe_step:
+            return None  # already the careful variant
+        return Landing(lam=self.lam, eps=self.eps, safe_step=True)
 
     def _field(self, x, g, ctx):
         if ctx.use_kernel and not jnp.issubdtype(x.dtype, jnp.complexfloating):
@@ -709,6 +810,58 @@ class Rsdm(Method):
 
 
 @dataclasses.dataclass(frozen=True)
+class WatchdogConfig:
+    """Feasibility watchdog + drift repair (DESIGN.md §Training robustness).
+
+    The watchdog reads each group's *previous-step* feasibility residual
+    (``OrthoState.last_distance`` — already computed, so the decision is
+    free) and reacts on two thresholds:
+
+    ``soft``   escalation: a group whose residual crossed ``soft`` runs
+               the method's careful sibling (:meth:`Method.escalated` —
+               POGO ``find_root``, Landing ``safe_step``) until its
+               residual drops back below ``soft * release`` (hysteresis:
+               one noisy step cannot flap the dispatch). Methods without
+               a careful sibling — and fused groups, whose kernel has no
+               in-kernel careful form — instead tighten the repair
+               threshold to ``soft`` while escalated.
+    ``hard``   repair: any matrix whose *post-step* residual exceeds
+               ``hard`` (finite only — NaN is the rollback policy's job)
+               is re-orthonormalized in place by ``ns_iters`` Newton-
+               Schulz iterations, inside the same compiled step. The
+               predicate is per matrix, so results are identical under
+               any shard_map split; the surrounding ``lax.cond`` only
+               skips the NS compute when no row tripped.
+
+    Thresholds are relative to the storage dtype's resting residual
+    (~1e-6 for f32, ~1e-2 for bf16 at p ~ 64): the defaults assume f32.
+    Repair/escalation counters live in :class:`WatchdogState` (in
+    ``OrthoState.extras``); with ``watchdog=None`` none of this exists
+    and the compiled step is byte-identical to the unguarded driver.
+    """
+
+    soft: float = 1e-3     # escalate the group to its careful sibling
+    hard: float = 1e-1     # per-matrix Newton-Schulz repair threshold
+    release: float = 0.25  # de-escalate below soft * release (hysteresis)
+    ns_iters: int = 12     # Newton-Schulz iterations per repair
+
+
+class WatchdogState(NamedTuple):
+    """Per-group watchdog telemetry, carried in ``OrthoState.extras``.
+
+    ``escalated[g]`` — scalar bool latch: group ``g`` is running its
+    careful sibling (or tightened repair threshold). ``repairs[g]`` /
+    ``escalations[g]`` — cumulative int32 counts of repaired matrices
+    and fresh escalation entries. Read host-side via
+    :func:`watchdog_summary`.
+    """
+
+    escalated: tuple    # per-group () bool
+    repairs: tuple      # per-group () int32
+    escalations: tuple  # per-group () int32
+
+
+@dataclasses.dataclass(frozen=True)
 class OrthoConfig:
     """Driver-level knobs shared by every method (see DESIGN.md §Driver)."""
 
@@ -722,6 +875,8 @@ class OrthoConfig:
     # path; "padded": merge heterogeneous shapes into few padded
     # megagroups (cost model in core/schedule.py; degrades to "auto" for
     # methods without ragged support)
+    watchdog: Optional[WatchdogConfig] = None  # feasibility watchdog +
+    # drift repair; None (default) compiles the exact unguarded step
 
 
 @dataclasses.dataclass(frozen=True)
@@ -828,6 +983,7 @@ def orthogonal(
     safety_project_every: int = 0,
     seed: int = 0,
     grouping: str = "auto",
+    watchdog: Optional[WatchdogConfig] = None,
     **method_kwargs,
 ) -> GradientTransformation:
     """Build any registered orthoptimizer by name. See module docstring.
@@ -854,6 +1010,7 @@ def orthogonal(
             safety_project_every=safety_project_every,
             seed=seed,
             grouping=grouping,
+            watchdog=watchdog,
             **method_kwargs,
         )
     except TypeError as e:
@@ -920,7 +1077,6 @@ def _build(method: Method, cfg: OrthoConfig) -> GradientTransformation:
     from ..optim import fused as optim_fused
 
     base = cfg.base_optimizer
-    has_kernel = cfg.use_kernel and method.kernel_update is not None
     # Single-pass fused group step: base moments + direction + leap + land
     # + telemetry in one HBM round trip. Requires a kernel-replayable base
     # (optim/fused.py) and a method instance with a fused stage.
@@ -941,6 +1097,34 @@ def _build(method: Method, cfg: OrthoConfig) -> GradientTransformation:
     grouping = cfg.grouping
     if grouping == "padded" and not method.ragged_ready():
         grouping = "auto"
+    # Feasibility watchdog: static config, so the watchdog=None path
+    # traces exactly the pre-watchdog program (byte-identity pinned by
+    # tests). The careful sibling is built once here — it is a static
+    # Python object, dispatched per group by a lax.cond.
+    wd = cfg.watchdog
+    careful = method.escalated() if wd is not None else None
+    # Blended careful path (Method.careful_blend): escalation + repair as
+    # per-matrix land scalars, no full-stack lax.cond. Requires the land
+    # stage to actually run — the use_kernel whole-update override
+    # bypasses land, so it keeps the generic cond dispatch.
+    blend_careful = (
+        careful is not None
+        and method.careful_blend()
+        and not (cfg.use_kernel and method.kernel_update is not None)
+    )
+
+    def _fresh_watchdog_state(plan: GroupPlan) -> WatchdogState:
+        return WatchdogState(
+            escalated=tuple(
+                jnp.zeros([], bool) for _ in plan.groups
+            ),
+            repairs=tuple(
+                jnp.zeros([], jnp.int32) for _ in plan.groups
+            ),
+            escalations=tuple(
+                jnp.zeros([], jnp.int32) for _ in plan.groups
+            ),
+        )
 
     def make_plan(params, leaves, treedef) -> GroupPlan:
         """The step's GroupPlan (static, trace-time). A ConstraintSet
@@ -973,7 +1157,7 @@ def _build(method: Method, cfg: OrthoConfig) -> GradientTransformation:
             base_state=base_state,
             rng=jax.random.PRNGKey(cfg.seed),
             last_distance=dist,
-            extras=(),
+            extras=_fresh_watchdog_state(plan) if wd is not None else (),
         )
 
     def update(grads, state, params=None):
@@ -1033,14 +1217,22 @@ def _build(method: Method, cfg: OrthoConfig) -> GradientTransformation:
                 return stiefel.manifold_distance(y)
             return stiefel.manifold_distance_masked(y, pv)
 
-        def group_step(group: GroupSpec, xg: Array, gg: Array, keys, eta,
-                       count, pv, nv):
+        def group_step(meth: Method, group: GroupSpec, xg: Array, gg: Array,
+                       keys, eta, count, pv, nv, wd_esc=None):
             """One batched two-stage update for a whole constraint group.
 
             Batch-parallel by construction (every operand and output is
             batch-leading or replicated — including the ragged ``(B,)``
             true-shape arrays), so it runs unchanged per shard under the
-            :func:`_run_group_step` shard_map schedule.
+            :func:`_run_group_step` shard_map schedule. ``meth`` is a
+            static Python object: the primary method, or — under the
+            feasibility watchdog's escalation cond — its careful sibling.
+
+            ``wd_esc`` (a traced () bool, watchdog blend path only) hands
+            the group's escalation latch to a :meth:`Method.careful_blend`
+            method via ``ctx.scratch``; the per-matrix repair mask comes
+            back as a third output so it stays a plain traced value under
+            the shard_map schedule.
             """
             x32 = xg.astype(_accum_dtype(xg.dtype))
             g32 = gg.astype(x32.dtype)
@@ -1056,15 +1248,19 @@ def _build(method: Method, cfg: OrthoConfig) -> GradientTransformation:
                 pv=pv,
                 nv=nv,
             )
-            if has_kernel:
-                x_next = method.kernel_update(x32, g32, ctx)
+            if wd_esc is not None:
+                ctx.scratch["wd_blend"] = (
+                    wd_esc, jnp.asarray(wd.hard, jnp.float32)
+                )
+            if cfg.use_kernel and meth.kernel_update is not None:
+                x_next = meth.kernel_update(x32, g32, ctx)
             else:
-                d = method.direction(x32, g32, ctx)
-                if method.multiplicative or d is None:
+                d = meth.direction(x32, g32, ctx)
+                if meth.multiplicative or d is None:
                     m = x32
                 else:
                     m = x32 - ctx.eta * d
-                x_next = method.land(m, ctx)
+                x_next = meth.land(m, ctx)
             if cfg.safety_project_every:
                 do = (count % cfg.safety_project_every) == 0
                 x_next = jax.lax.cond(
@@ -1075,6 +1271,11 @@ def _build(method: Method, cfg: OrthoConfig) -> GradientTransformation:
             # instead of thousands of per-leaf scalars.
             y = (xg + ug).astype(jnp.promote_types(xg.dtype, jnp.float32))
             dist = _measure(y, pv).astype(jnp.float32)
+            if wd_esc is not None:
+                rep = ctx.scratch.get("wd_repaired")
+                if rep is None:
+                    rep = jnp.zeros(dist.shape, bool)
+                return ug, dist, rep
             return ug, dist
 
         def group_step_fused(group: GroupSpec, xg: Array, gg: Array,
@@ -1097,7 +1298,11 @@ def _build(method: Method, cfg: OrthoConfig) -> GradientTransformation:
                 post_scale=fused_base.post_scale,
                 mu=mug, nu=nug, count=bcount,
             )
-            x_next, mu2, nu2, dist = method.fused_step(x32, g32, ctx, slots)
+            # The trailing per-matrix finite flag is isfinite(dist) by
+            # construction (see kernels/ref.py); the driver's telemetry
+            # contract re-derives it from the stored dist, so only the
+            # residual is threaded through.
+            x_next, mu2, nu2, dist, _ = method.fused_step(x32, g32, ctx, slots)
             if cfg.safety_project_every:
                 do = (count % cfg.safety_project_every) == 0
 
@@ -1121,16 +1326,128 @@ def _build(method: Method, cfg: OrthoConfig) -> GradientTransformation:
                 dist = _measure(y, pv)
             return ug, dist.astype(jnp.float32), mu2, nu2
 
+        def _repair(xg, ug, dist, pv, thresh):
+            """Hard-threshold drift repair: per-matrix Newton-Schulz
+            re-orthonormalization of rows whose post-step residual
+            exceeds ``thresh`` (finite rows only — NaN is the rollback
+            policy's job; NS cannot repair it). The predicate is per
+            matrix, so values are identical under any shard_map split;
+            the cond only skips the NS compute when no local row
+            tripped. Returns ``(ug, dist, repaired)`` with ``repaired``
+            the ``(B,)`` bool repair mask."""
+            rep_b = jnp.isfinite(dist) & (dist > thresh)
+
+            def _fix(args):
+                ug0, _ = args
+                acc = _accum_dtype(xg.dtype)
+                x32 = xg.astype(acc)
+                x_cur = x32 + ug0.astype(acc)
+                if cfg.use_kernel and not jnp.issubdtype(
+                    xg.dtype, jnp.complexfloating
+                ):
+                    from ..kernels import ops as kops
+
+                    xr = kops.newton_schulz(x_cur, iters=wd.ns_iters)
+                else:
+                    xr = stiefel.project_newton_schulz(
+                        x_cur, iters=wd.ns_iters
+                    )
+                ugr = jnp.where(
+                    rep_b[:, None, None], (xr - x32).astype(xg.dtype), ug0
+                )
+                y = (xg + ugr).astype(jnp.promote_types(xg.dtype, jnp.float32))
+                return ugr, _measure(y, pv).astype(jnp.float32)
+
+            ug, dist = jax.lax.cond(
+                jnp.any(rep_b), _fix, lambda args: args, (ug, dist)
+            )
+            return ug, dist, rep_b
+
+        def group_step_watchdog(group: GroupSpec, xg: Array, gg: Array,
+                                keys, eta, count, pv, nv, esc):
+            """Watchdog dispatch for the two-stage path: while a group is
+            escalated (``esc``, decided from the previous step's residual
+            with hysteresis) it runs the method's careful sibling under a
+            lax.cond — esc is a replicated scalar, so every shard takes
+            the same branch. Methods without a sibling tighten the repair
+            threshold to ``soft`` instead.
+
+            Methods whose careful sibling *blends* (see
+            :meth:`Method.careful_blend`) skip both the sibling cond and
+            the Newton-Schulz repair cond: escalation and hard-threshold
+            repair fold into per-matrix scalars inside the method's own
+            land stage, so no full-stack tensor ever crosses a lax.cond
+            boundary and the idle watchdog costs no extra stack copies."""
+            ops_ = (xg, gg, keys, eta, count, pv, nv)
+            if blend_careful:
+                return group_step(method, group, *ops_, wd_esc=esc)
+            if careful is not None:
+                ug, dist = jax.lax.cond(
+                    esc,
+                    lambda o: group_step(careful, group, *o),
+                    lambda o: group_step(method, group, *o),
+                    ops_,
+                )
+                thresh = jnp.asarray(wd.hard, jnp.float32)
+            else:
+                ug, dist = group_step(method, group, *ops_)
+                thresh = jnp.where(esc, wd.soft, wd.hard).astype(jnp.float32)
+            return _repair(xg, ug, dist, pv, thresh)
+
+        def group_step_fused_watchdog(group: GroupSpec, xg: Array, gg: Array,
+                                      mug, nug, eta, count, bcount, pv, nv,
+                                      esc):
+            """Watchdog wrapper for the fused path. The kernel has no
+            in-kernel careful form, so escalation tightens the repair
+            threshold from ``hard`` to ``soft``: an escalated fused group
+            re-orthonormalizes every matrix that strays past ``soft``
+            until the group de-escalates."""
+            ug, dist, mu2, nu2 = group_step_fused(
+                group, xg, gg, mug, nug, eta, count, bcount, pv, nv
+            )
+            thresh = jnp.where(esc, wd.soft, wd.hard).astype(jnp.float32)
+            ug, dist, rep_b = _repair(xg, ug, dist, pv, thresh)
+            return ug, dist, mu2, nu2, rep_b
+
         out: list = [None] * len(leaves)
         mu_out: list = [None] * len(leaves)
         nu_out: list = [None] * len(leaves)
         dists = []
+        if wd is not None:
+            wstate = state.extras
+            if (not isinstance(wstate, WatchdogState)
+                    or len(wstate.escalated) != len(plan.groups)):
+                # States restored from pre-watchdog checkpoints (or after
+                # a grouping change) re-arm from zeros.
+                wstate = _fresh_watchdog_state(plan)
+            prev = state.last_distance
+            use_prev = (
+                isinstance(prev, GroupedDistances)
+                and len(prev.per_group) == len(plan.groups)
+            )
+            new_esc: list = []
+            new_repairs: list = []
+            new_escalations: list = []
         # Every traced value a group step consumes rides as an explicit
         # operand (never a closure) so the shard_map schedule can declare
         # its replication: batch-leading operands shard, scalars replicate.
         eta32 = jnp.asarray(eta0, jnp.float32)
-        for group in plan.groups:
+        for gi, group in enumerate(plan.groups):
             _record_group_trace(method.name, group, fused_now)
+            esc = None
+            if wd is not None:
+                # Escalation is decided from the PREVIOUS step's residual
+                # (free: it is already in the state) with hysteresis — a
+                # NaN residual compares False on both thresholds, leaving
+                # the non-finite case to the trainer's rollback policy.
+                esc_prev = wstate.escalated[gi]
+                prev_max = (
+                    jnp.max(prev.per_group[gi]).astype(jnp.float32)
+                    if use_prev else jnp.zeros([], jnp.float32)
+                )
+                esc = prev_max > jnp.where(
+                    esc_prev, wd.soft * wd.release, wd.soft
+                ).astype(jnp.float32)
             xg = _gather_group(group, leaves)
             gg = _gather_group(group, gleaves)
             # Ragged megagroups carry their per-matrix true shapes as
@@ -1150,12 +1467,22 @@ def _build(method: Method, cfg: OrthoConfig) -> GradientTransformation:
                     _gather_group_scalars(group, nu_leaves)
                     if nu_leaves is not None else None
                 )
-                ug, dist, mu2, nu2 = _run_group_step(
-                    functools.partial(group_step_fused, group), group,
-                    (xg, gg, mug, nug, eta32, count, base_count, pv, nv),
-                    (3, 1, None if mug is None else 3,
-                     None if nug is None else 1),
-                )
+                if wd is not None:
+                    ug, dist, mu2, nu2, rep_b = _run_group_step(
+                        functools.partial(group_step_fused_watchdog, group),
+                        group,
+                        (xg, gg, mug, nug, eta32, count, base_count, pv, nv,
+                         esc),
+                        (3, 1, None if mug is None else 3,
+                         None if nug is None else 1, 1),
+                    )
+                else:
+                    ug, dist, mu2, nu2 = _run_group_step(
+                        functools.partial(group_step_fused, group), group,
+                        (xg, gg, mug, nug, eta32, count, base_count, pv, nv),
+                        (3, 1, None if mug is None else 3,
+                         None if nug is None else 1),
+                    )
                 if mu2 is not None:
                     _scatter_group(group, mu2, mu_out)
                 if nu2 is not None:
@@ -1171,9 +1498,24 @@ def _build(method: Method, cfg: OrthoConfig) -> GradientTransformation:
                         kparts[0] if len(kparts) == 1
                         else jnp.concatenate(kparts)
                     )
-                ug, dist = _run_group_step(
-                    functools.partial(group_step, group), group,
-                    (xg, gg, keys, eta32, count, pv, nv), (3, 1),
+                if wd is not None:
+                    ug, dist, rep_b = _run_group_step(
+                        functools.partial(group_step_watchdog, group), group,
+                        (xg, gg, keys, eta32, count, pv, nv, esc), (3, 1, 1),
+                    )
+                else:
+                    ug, dist = _run_group_step(
+                        functools.partial(group_step, method, group), group,
+                        (xg, gg, keys, eta32, count, pv, nv), (3, 1),
+                    )
+            if wd is not None:
+                new_esc.append(esc)
+                new_repairs.append(
+                    wstate.repairs[gi] + jnp.sum(rep_b.astype(jnp.int32))
+                )
+                new_escalations.append(
+                    wstate.escalations[gi]
+                    + (esc & ~wstate.escalated[gi]).astype(jnp.int32)
                 )
             dists.append(dist)
             _scatter_group(group, ug, out)
@@ -1188,12 +1530,19 @@ def _build(method: Method, cfg: OrthoConfig) -> GradientTransformation:
             )
             base_state = fused_base.set_slots(base_state, mu_tree2, nu_tree2)
         updates = jax.tree.unflatten(treedef, out)
+        extras = state.extras
+        if wd is not None:
+            extras = WatchdogState(
+                escalated=tuple(new_esc),
+                repairs=tuple(new_repairs),
+                escalations=tuple(new_escalations),
+            )
         return updates, OrthoState(
             count=count,
             base_state=base_state,
             rng=rng,
             last_distance=GroupedDistances(plan=plan, per_group=tuple(dists)),
-            extras=state.extras,
+            extras=extras,
         )
 
     return GradientTransformation(init, update)
@@ -1243,6 +1592,61 @@ def max_distance(opt_state) -> jax.Array:
     if not dists:
         return jnp.zeros([], jnp.float32)
     return jnp.max(jnp.stack([jnp.max(d) for d in dists]))
+
+
+def step_health(opt_state) -> StepHealth:
+    """The in-graph :class:`~repro.health.StepHealth` verdict of the last
+    constraint step: scalar ``finite`` plus the worst feasibility
+    residual across every orthoptimizer-managed matrix.
+
+    Derived from ``OrthoState.last_distance`` — telemetry the step
+    already computes — so calling this inside a jitted step adds one max
+    reduction over a handful of ``(B,)`` arrays. A NaN/Inf anywhere in a
+    stored iterate poisons its residual (the gram-diagonal propagation
+    argument in :mod:`repro.health`), so ``finite`` is the true
+    non-finite flag, not a heuristic.
+    """
+    per = []
+    for s in ortho_states(opt_state):
+        ld = s.last_distance
+        if not isinstance(ld, GroupedDistances):
+            _reject_legacy_distance(ld)
+        per.extend(ld.per_group)
+    if not per:
+        return StepHealth(
+            finite=jnp.ones([], bool), residual=jnp.zeros([], jnp.float32)
+        )
+    residual = jnp.max(jnp.stack([jnp.max(d) for d in per]))
+    return from_residual(residual)
+
+
+def watchdog_summary(opt_state) -> Optional[dict]:
+    """Host-side snapshot of the feasibility watchdog's counters.
+
+    Returns ``None`` when no state in ``opt_state`` carries a
+    :class:`WatchdogState` (watchdog disabled), else a dict with total
+    ``repairs`` (matrices re-orthonormalized), ``escalations`` (fresh
+    careful-sibling entries) and the per-group ``escalated`` latches.
+    """
+    repairs = 0
+    escalations = 0
+    escalated: list = []
+    found = False
+    for s in ortho_states(opt_state):
+        w = s.extras
+        if not isinstance(w, WatchdogState):
+            continue
+        found = True
+        repairs += sum(int(r) for r in w.repairs)
+        escalations += sum(int(e) for e in w.escalations)
+        escalated.extend(bool(e) for e in w.escalated)
+    if not found:
+        return None
+    return {
+        "repairs": repairs,
+        "escalations": escalations,
+        "escalated": escalated,
+    }
 
 
 def leaf_distances(state: OrthoState):

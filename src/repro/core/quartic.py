@@ -161,6 +161,40 @@ def landing_poly_coeffs(
     return a4, a3, a2, a1, a0
 
 
+def landing_poly_coeffs_from_gram(
+    cmat: Array,
+) -> tuple[Array, Array, Array, Array, Array]:
+    """Coefficients (a4..a0) of the landing polynomial from ``C`` alone.
+
+    With ``C = M M^H - I`` (already identity-masked for ragged batches),
+    the Lemma 3.1 matrices collapse to polynomials in C — ``D = A B^H +
+    B A^H = -((C + I) C + C (C + I)) = -2 (C^2 + C)`` and ``E = B B^H =
+    C (C + I) C = C^3 + C^2`` — so every coefficient is a trace of a
+    power of C. Two (p, p) matmuls (C^2, C^3) replace the three (p, n)
+    ones of :func:`landing_poly_coeffs`: this is the form the feasibility
+    watchdog's blended careful step uses, where the gram is already
+    materialized by the land stage and only small (B, p, p) operands may
+    cross a `lax.cond` boundary without copying the whole stack.
+    """
+    c2 = cmat @ cmat
+    c3 = c2 @ cmat
+
+    def ip(x, y):  # real Frobenius inner product <x, y>
+        return jnp.sum(jnp.real(jnp.conj(x) * y), axis=(-2, -1))
+
+    t2 = ip(cmat, cmat)  # tr C^2
+    t3 = ip(cmat, c2)    # tr C^3
+    t4 = ip(c2, c2)      # tr C^4
+    t5 = ip(c2, c3)      # tr C^5
+    t6 = ip(c3, c3)      # tr C^6
+    a4 = t6 + 2.0 * t5 + t4
+    a3 = -4.0 * (t5 + 2.0 * t4 + t3)
+    a2 = 4.0 * (t4 + 2.0 * t3 + t2) + 2.0 * (t4 + t3)
+    a1 = -4.0 * (t3 + t2)
+    a0 = t2
+    return a4, a3, a2, a1, a0
+
+
 def eval_quartic(coeffs, lam):
     a4, a3, a2, a1, a0 = coeffs
     return (((a4 * lam + a3) * lam + a2) * lam + a1) * lam + a0
@@ -184,7 +218,22 @@ def optimal_lambda(
     (iv) pick the candidate with the smallest |P(lambda)| — the paper's
     "closest real value to a root" criterion, made numerically total.
     """
-    coeffs = landing_poly_coeffs(m, pv)
+    return _optimal_lambda_from_coeffs(
+        landing_poly_coeffs(m, pv), fallback, newton_iters
+    )
+
+
+def optimal_lambda_from_gram(
+    cmat: Array, fallback: float = 0.5, newton_iters: int = 4
+) -> Array:
+    """:func:`optimal_lambda`, but from ``C = M M^H - I`` directly (see
+    :func:`landing_poly_coeffs_from_gram`)."""
+    return _optimal_lambda_from_coeffs(
+        landing_poly_coeffs_from_gram(cmat), fallback, newton_iters
+    )
+
+
+def _optimal_lambda_from_coeffs(coeffs, fallback: float, newton_iters: int):
     a4, a3, a2, a1, a0 = coeffs
     scale = jnp.maximum(
         jnp.maximum(jnp.maximum(jnp.abs(a4), jnp.abs(a3)), jnp.maximum(jnp.abs(a2), jnp.abs(a1))),

@@ -1,0 +1,74 @@
+"""StepHealth: the one in-graph health verdict shared by train and serve.
+
+Every hot-path compiled program in this repo that can go wrong mid-step
+reports the same typed container instead of an ad-hoc bool:
+
+  * the orthoptimizer driver derives it from the fused group step's
+    feasibility telemetry (``core.api.step_health``) — ``finite`` is the
+    non-finite flag of the residual, ``residual`` the feasibility
+    distance itself (``||X X^H - I||_F``);
+  * the serving decode/prefill programs return it per slot
+    (``models.transformer.decode_step_paged`` / ``prefill_chunk``) with
+    ``residual=None`` — token logits have no manifold residual;
+  * the trainer's divergence-rollback policy and the serve engine's
+    quarantine watchdog both branch on ``finite`` alone, so the two
+    recovery paths consume one contract.
+
+``StepHealth`` is a NamedTuple and therefore a pytree: it crosses jit
+boundaries as a first-class output (``residual=None`` flattens to an
+empty subtree, costing nothing).
+
+Why ``finite`` can be *derived* from the residual on the training side
+(DESIGN.md §Training robustness): the residual is computed from the
+gram ``X' X'^H`` whose diagonal entry ``i`` sums the squares of row
+``i`` — a NaN anywhere in a valid row poisons that entry (NaN
+propagates through the sum) and an Inf drives it to +Inf, so any
+non-finite value in the iterate makes the residual itself non-finite.
+One ``isfinite`` on the ``(B,)`` telemetry array is the whole flag — no
+extra kernel output, no extra HBM traffic.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+class StepHealth(NamedTuple):
+    """In-graph health verdict of one compiled step.
+
+    ``finite`` — bool array (any shape: scalar for a whole train step,
+    ``(B,)`` per decode slot / per group matrix): True where the step's
+    output is entirely finite.
+    ``residual`` — optional fp32 feasibility residual(s) matching
+    ``finite``'s shape (``None`` where no manifold residual exists,
+    e.g. serving logits).
+    """
+
+    finite: jax.Array
+    residual: Optional[jax.Array] = None
+
+    def ok(self) -> jax.Array:
+        """Scalar bool: every element finite (and every residual finite)."""
+        good = jnp.all(self.finite)
+        if self.residual is not None:
+            good = good & jnp.all(jnp.isfinite(self.residual))
+        return good
+
+
+def from_residual(residual: jax.Array) -> StepHealth:
+    """Health from a feasibility residual alone: non-finiteness of the
+    iterate provably propagates into the residual (module docstring), so
+    ``finite = isfinite(residual)`` IS the non-finite flag."""
+    return StepHealth(finite=jnp.isfinite(residual), residual=residual)
+
+
+def from_logits(logits: jax.Array, *, per_row: bool = False) -> StepHealth:
+    """Health of a logits tensor: scalar verdict, or per leading-axis row
+    (the serving decode batch) when ``per_row``."""
+    if per_row:
+        axes = tuple(range(1, logits.ndim))
+        return StepHealth(finite=jnp.isfinite(logits).all(axis=axes))
+    return StepHealth(finite=jnp.isfinite(logits).all())

@@ -429,9 +429,13 @@ def fused_group_step(
     ``trace`` | ``vadam`` — layout contract in ``optim/fused.py``), the
     ``method`` (``"pogo"`` | ``"landing"``) direction + leap + land, and
     per-matrix feasibility telemetry derived from the VMEM-resident
-    (p, p) accumulators. Returns ``(x_next, mu', nu', dist)`` — moments
-    ``None`` where the base has no such slot, ``dist`` a ``(B,)`` fp32
-    array of post-update ``||X' X'^H - I||_F``.
+    (p, p) accumulators. Returns ``(x_next, mu', nu', dist, finite)`` —
+    moments ``None`` where the base has no such slot, ``dist`` a ``(B,)``
+    fp32 array of post-update ``||X' X'^H - I||_F`` and ``finite`` the
+    ``(B,)`` bool StepHealth flag derived from it (non-finiteness of the
+    iterate provably propagates through the gram into ``dist``, so
+    ``isfinite(dist)`` is the per-matrix non-finite verdict at zero
+    extra HBM cost; the jnp oracle computes it identically).
 
     ``pv`` (``(B,)`` int32 valid-row counts) marks a ragged padded
     megagroup: zero-padded members stay exactly inert through every
@@ -459,10 +463,14 @@ def fused_group_step(
             hyper=hyper, post_scale=post_scale, mu=mu, nu=nu, count=count,
             pv=pv,
         )
-    return _fused_dispatch(
+    x2, mu2, nu2, dist = _fused_dispatch(
         x, g, mu, nu, pv, eta, lam, count, method=method, base_kind=base_kind,
         hyper=tuple(hyper), post_scale=float(post_scale), interpret=interpret,
     )
+    # StepHealth flag: same derivation as the oracle (isfinite of the
+    # VMEM-computed residual), outside the planner-keyed dispatch so the
+    # compiled kernel programs are untouched.
+    return x2, mu2, nu2, dist, jnp.isfinite(dist)
 
 
 # -------------------------------------------------------------- newton-schulz

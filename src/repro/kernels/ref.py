@@ -114,9 +114,13 @@ def fused_group_step_ref(
     POGO / Landing direction + leap + land, and the per-matrix feasibility
     distance ``||X' X'^H - I||_F`` — for POGO derived algebraically from
     the land-stage gram (:func:`pogo_gram_identity_ref`), never from a
-    re-read of X'. Returns ``(x_next_f32, mu', nu', dist)`` with the
-    moment buffers in their storage dtypes (``None`` where the base has
-    no such slot).
+    re-read of X'. Returns ``(x_next_f32, mu', nu', dist, finite)`` with
+    the moment buffers in their storage dtypes (``None`` where the base
+    has no such slot) and ``finite`` the per-matrix ``(B,)`` non-finite
+    flag of the StepHealth contract: a NaN/Inf anywhere in a valid row
+    of X' poisons its gram diagonal and therefore ``dist`` itself, so
+    ``isfinite(dist)`` IS the flag — zero extra telemetry traffic, and
+    the Pallas dispatch computes it the same way (bit-matching).
 
     ``pv`` (``(B,)`` valid-row counts) handles ragged megagroup batches:
     every stage is exactly inert on zero-padded rows/cols (zeros propagate
@@ -167,7 +171,8 @@ def fused_group_step_ref(
         dist = _residual_norm(x2 @ _bt(x2), pv)
     else:
         raise ValueError(f"unknown fused method {method!r}")
-    return x2, mu_out, nu_out, dist.astype(jnp.float32)
+    dist = dist.astype(jnp.float32)
+    return x2, mu_out, nu_out, dist, jnp.isfinite(dist)
 
 
 def manifold_distance_ref(x: Array) -> Array:

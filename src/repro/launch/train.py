@@ -59,6 +59,19 @@ def main(argv=None):
                          "megagroups (padded)")
     ap.add_argument("--checkpoint-dir", default=None)
     ap.add_argument("--save-every", type=int, default=50)
+    ap.add_argument("--watchdog", action="store_true",
+                    help="feasibility watchdog + in-step drift repair on "
+                         "the constraint step (DESIGN.md §Training "
+                         "robustness); off = byte-identical step programs")
+    ap.add_argument("--watchdog-soft", type=float, default=1e-3,
+                    help="escalation threshold on the feasibility residual")
+    ap.add_argument("--watchdog-hard", type=float, default=1e-1,
+                    help="in-step Newton-Schulz repair threshold")
+    ap.add_argument("--rollback", action="store_true",
+                    help="on a non-finite loss/StepHealth, restore the "
+                         "newest valid checkpoint and skip the poison "
+                         "batch (requires --checkpoint-dir)")
+    ap.add_argument("--max-rollbacks", type=int, default=8)
     ap.add_argument("--fake-devices", type=int, default=None)
     ap.add_argument("--mesh", default="none", choices=["none", "test", "test-multipod"])
     ap.add_argument("--distributed", action="store_true")
@@ -73,6 +86,7 @@ def main(argv=None):
     if args.distributed:
         jax.distributed.initialize()
 
+    from .. import core
     from ..configs import get_config
     from ..data.pipeline import DataConfig, DataIterator
     from ..distributed import shard_hints, sharding
@@ -111,6 +125,10 @@ def main(argv=None):
         pogo_use_kernel=args.pogo_kernel,
         warmup_steps=min(20, args.steps // 5 + 1),
         decay_steps=args.steps,
+        ortho_watchdog=(
+            core.WatchdogConfig(soft=args.watchdog_soft, hard=args.watchdog_hard)
+            if args.watchdog else None
+        ),
     )
     step_fn, optimizer = make_train_step(cfg, train_cfg)
     opt_state = optimizer.init(params)
@@ -142,6 +160,8 @@ def main(argv=None):
         total_steps=args.steps,
         save_every=args.save_every,
         checkpoint_dir=args.checkpoint_dir,
+        rollback=args.rollback,
+        max_rollbacks=args.max_rollbacks,
     )
     params, opt_state, step, history = train(
         jit_step, params, opt_state, data, loop_cfg

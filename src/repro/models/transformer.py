@@ -26,6 +26,7 @@ from typing import Any, Optional
 import jax
 import jax.numpy as jnp
 
+from .. import health as health_mod
 from ..distributed import shard_hints
 from . import attention, layers, mamba, moe, rglru
 
@@ -529,10 +530,12 @@ def decode_step_paged(params, cfg, tokens, caches, *, block_tables, lengths,
     batch) have their K/V writes redirected to the null block so they can
     never perturb a neighbour's stream.
 
-    Returns ``(logits, new_caches, health)`` where ``health`` is a (B,)
-    bool mask — True iff the row's logits are all finite. The reduction
-    runs in-graph so the serving watchdog gets a per-slot verdict without
-    a second device round trip. ``poison_mask`` ((B,) bool, optional) is
+    Returns ``(logits, new_caches, health)`` where ``health`` is a
+    :class:`repro.health.StepHealth` whose ``finite`` is the (B,) per-slot
+    mask — True iff the row's logits are all finite (``residual=None``:
+    logits have no manifold residual). The reduction runs in-graph so the
+    serving watchdog gets a per-slot verdict without a second device
+    round trip. ``poison_mask`` ((B,) bool, optional) is
     the fault-injection hook: True rows have their logits forced to NaN
     *before* the health reduction, exercising the same detection path a
     real divergence would take. The engine only compiles a poison variant
@@ -551,7 +554,7 @@ def decode_step_paged(params, cfg, tokens, caches, *, block_tables, lengths,
             poison_mask[:, None, None], jnp.float32(jnp.nan).astype(logits.dtype),
             logits,
         )
-    health = jnp.isfinite(logits).all(axis=tuple(range(1, logits.ndim)))
+    health = health_mod.from_logits(logits, per_row=True)
 
     # masked rows must not advance per-slot recurrent state either — the
     # pool writes are null-block-redirected inside the attention kernel,
@@ -585,8 +588,8 @@ def prefill_chunk(params, cfg, tokens, caches, *, block_table, start, n_valid,
 
     Returns (last_logits, new_caches, health): logits at prompt position
     ``start + n_valid - 1`` (shape (1, 1, V)), the updated cache, and a
-    scalar bool health verdict (all chunk logits finite) for the serving
-    watchdog.
+    :class:`repro.health.StepHealth` with a scalar ``finite`` verdict
+    (all chunk logits finite) for the serving watchdog.
     """
     if cfg.encoder_layers:
         raise NotImplementedError("paged serving does not support enc-dec archs")
@@ -609,7 +612,7 @@ def prefill_chunk(params, cfg, tokens, caches, *, block_table, start, n_valid,
     )
     last = jax.lax.dynamic_slice_in_dim(hidden, n_valid - 1, 1, axis=1)
     logits = logits_from_hidden(params, cfg, last)
-    health = jnp.isfinite(logits).all()
+    health = health_mod.from_logits(logits)
 
     def put(old, new, lay):
         if lay.role == "state":

@@ -27,8 +27,9 @@ Scheduling (one ``step()`` tick):
      into the request's own blocks).
   4. **decode** — one ``tfm.decode_step_paged`` over the full slot batch;
      rows that are free or still prefilling ride along masked. Both
-     compiled programs return an in-graph health verdict (all-finite
-     logits); an unhealthy row quarantines ONLY that slot — the request
+     compiled programs return an in-graph :class:`repro.health.StepHealth`
+     verdict (all-finite logits; the same container the training step
+     reports); an unhealthy row quarantines ONLY that slot — the request
      fails with :class:`~repro.serve.lifecycle.DivergenceError`, its
      blocks are freed, and neighbour slots decode on token-identical to
      a no-fault run.
@@ -72,6 +73,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from .. import health as health_mod
 from ..models import transformer as tfm
 from . import fold as fold_mod
 from . import kv_cache
@@ -692,7 +694,8 @@ class ServeEngine:
     def _dispatch_prefill(self, slot: int, req: Request, pos: int,
                           n_valid: int):
         """One chunk dispatch; returns (fp32 logits at the chunk's last
-        valid position (V,), healthy: bool)."""
+        valid position (V,), healthy: bool — the chunk's StepHealth
+        verdict)."""
         c = self.prefill_chunk if self._pad_chunks else n_valid
         tokens = np.zeros((1, c), np.int32)
         tokens[0, :n_valid] = req.prompt[pos:pos + n_valid]
@@ -701,7 +704,7 @@ class ServeEngine:
             self.params, jnp.asarray(tokens), self.caches, bt, pos, n_valid,
             slot,
         )
-        return np.asarray(logits.astype(jnp.float32))[0, 0], bool(health)
+        return np.asarray(logits.astype(jnp.float32))[0, 0], bool(health.finite)
 
     def _prefill_tick(self) -> bool:
         """Spend up to ``prefill_token_budget`` prompt tokens, round-robin
@@ -799,12 +802,12 @@ class ServeEngine:
                 jnp.asarray(mask),
             )
         logits = np.asarray(logits.astype(jnp.float32))[:, 0]  # (B, V)
-        health = np.asarray(health)
+        finite = np.asarray(health.finite)  # (B,) per-slot StepHealth mask
         now = time.perf_counter()
         self.stats["decode_time_s"] += now - t0
         self.stats["n_decode_dispatches"] += 1
         for s in active:
-            if not health[s]:
+            if not finite[s]:
                 self._quarantine(s, "decode")
                 continue
             self.slot_len[s] += 1
@@ -831,7 +834,11 @@ class ServeEngine:
         accepting work and drains what's in flight."""
         self.stats["weight_checks"] += 1
         worst, _path = fold_mod.feasibility_distance(self.params, self.cfg)
-        if worst > self.fold_atol:
+        # Same StepHealth contract as the training watchdog: a non-finite
+        # residual is unhealthy by definition (a bare `worst > atol` would
+        # read NaN as False and miss corrupted buffers entirely).
+        verdict = health_mod.from_residual(jnp.float32(worst))
+        if not bool(verdict.ok()) or worst > self.fold_atol:
             self.weight_healthy = False
             self.stats["weight_drift_trips"] += 1
 

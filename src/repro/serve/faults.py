@@ -1,161 +1,14 @@
-"""Deterministic fault injection for the serving engine.
-
-A :class:`FaultPlan` is a seeded, fully explicit schedule of faults the
-engine consults at well-defined hook points. The engine holds the plan
-behind a single ``is not None`` guard per hook site, so a disabled plan
-costs one pointer comparison per tick — nothing is threaded through the
-compiled programs unless a fault kind requires it (only ``nan_logits``
-compiles a poison-mask variant of the decode program, and only for
-engines constructed with such a plan).
-
-Fault kinds (all tick-granular and reproducible from the plan alone):
-
-  ``alloc_exhaust``  for ``duration`` ticks starting at ``tick``, the
-                     engine treats the block allocator as empty —
-                     admission stalls and (with preemption enabled) the
-                     preemption path fires.
-  ``nan_logits``     at ``tick``, slot ``slot``'s decode logits are
-                     poisoned to NaN *inside the compiled program*
-                     (before the in-graph health mask is computed), so
-                     the watchdog path is exercised end to end.
-  ``delay_prefill``  for ``duration`` ticks starting at ``tick``, slot
-                     ``slot`` (or every slot when ``slot is None``) is
-                     skipped by the prefill scheduler — TTFT/deadline
-                     enforcement sees a genuinely late request.
-  ``corrupt_swap``   the next swap-out of request ``uid`` (or of any
-                     request when ``uid is None``) has one byte of its
-                     host-side KV snapshot flipped AFTER the checksum is
-                     recorded, so the restore-side integrity check trips
-                     and fails exactly that victim.
-
-Every fault that actually fires is appended to ``plan.fired`` as
-``(tick, kind, detail)`` so tests and the chaos bench can assert the
-schedule executed.
+"""Back-compat shim: the seeded :class:`FaultPlan` now lives in
+:mod:`repro.faults`, shared between serving and training chaos (the
+training loop consults the same plan type for nan_grad / drift_inject /
+corrupt_checkpoint / delay_step hooks). This module keeps the PR-8
+import surface: ``FAULT_KINDS`` here stays the *serving* subset, so
+``FaultPlan.random(..., kinds=FAULT_KINDS)`` call sites keep sampling
+exactly the four engine-relevant kinds.
 """
 
-from __future__ import annotations
-
-import dataclasses
-from typing import List, Optional, Tuple
-
-import numpy as np
-
-FAULT_KINDS = ("alloc_exhaust", "nan_logits", "delay_prefill", "corrupt_swap")
-
-
-@dataclasses.dataclass(frozen=True)
-class FaultEvent:
-    kind: str
-    tick: int = 0                  # first tick the fault is active
-    duration: int = 1              # ticks the condition persists
-    slot: Optional[int] = None     # nan_logits / delay_prefill target
-    uid: Optional[int] = None      # corrupt_swap target (None = any)
-
-    def __post_init__(self):
-        if self.kind not in FAULT_KINDS:
-            raise ValueError(f"unknown fault kind {self.kind!r}")
-        if self.duration < 1:
-            raise ValueError(f"duration {self.duration} < 1")
-
-    def active(self, tick: int) -> bool:
-        return self.tick <= tick < self.tick + self.duration
-
-
-class FaultPlan:
-    """An explicit or seeded-random schedule of :class:`FaultEvent`.
-
-    Two plans built from the same events (or the same ``random`` seed and
-    arguments) inject byte-identical faults — determinism is the whole
-    point: every recovery path is exercised by a *reproducible* test.
-    """
-
-    def __init__(self, events: Tuple[FaultEvent, ...] = ()):
-        self.events: Tuple[FaultEvent, ...] = tuple(events)
-        self.fired: List[tuple] = []
-        # corrupt_swap events are one-shot; track spent ones by index
-        self._spent: set = set()
-
-    def __repr__(self):
-        return f"FaultPlan({list(self.events)!r})"
-
-    @property
-    def kinds(self) -> set:
-        return {e.kind for e in self.events}
-
-    @classmethod
-    def random(cls, seed: int, *, n_events: int, max_tick: int,
-               n_slots: int, kinds: Tuple[str, ...] = FAULT_KINDS,
-               max_duration: int = 4) -> "FaultPlan":
-        """A deterministic chaos schedule: ``n_events`` faults sampled
-        uniformly over ``kinds``, ticks ``[1, max_tick)`` and slots."""
-        rng = np.random.default_rng(seed)
-        events = []
-        for _ in range(n_events):
-            kind = kinds[int(rng.integers(0, len(kinds)))]
-            tick = int(rng.integers(1, max(2, max_tick)))
-            duration = int(rng.integers(1, max_duration + 1))
-            slot = int(rng.integers(0, n_slots))
-            if kind == "corrupt_swap":
-                events.append(FaultEvent(kind, tick=tick, uid=None))
-            elif kind == "alloc_exhaust":
-                events.append(FaultEvent(kind, tick=tick, duration=duration))
-            else:
-                events.append(FaultEvent(kind, tick=tick, duration=duration,
-                                         slot=slot))
-        return cls(tuple(events))
-
-    # ------------------------------------------------------------ hook queries
-
-    def _fire(self, tick: int, kind: str, detail) -> None:
-        self.fired.append((tick, kind, detail))
-
-    def alloc_blocked(self, tick: int) -> bool:
-        """True while an ``alloc_exhaust`` fault is active."""
-        for e in self.events:
-            if e.kind == "alloc_exhaust" and e.active(tick):
-                self._fire(tick, e.kind, None)
-                return True
-        return False
-
-    def nan_slots(self, tick: int) -> List[int]:
-        """Slots whose decode logits are poisoned this tick."""
-        out = []
-        for e in self.events:
-            if e.kind == "nan_logits" and e.active(tick) and e.slot is not None:
-                self._fire(tick, e.kind, e.slot)
-                out.append(e.slot)
-        return out
-
-    def has_nan_faults(self) -> bool:
-        """Whether the engine must compile the poison-mask decode variant."""
-        return any(e.kind == "nan_logits" for e in self.events)
-
-    def prefill_delayed(self, tick: int, slot: int) -> bool:
-        for e in self.events:
-            if e.kind == "delay_prefill" and e.active(tick) and (
-                e.slot is None or e.slot == slot
-            ):
-                self._fire(tick, e.kind, slot)
-                return True
-        return False
-
-    def corrupt_swap(self, tick: int, uid: int, buffers: List[np.ndarray]) -> bool:
-        """One-shot: flip one byte of the first non-empty snapshot buffer
-        of request ``uid``'s swap-out. Returns True if corruption fired.
-        Called AFTER the checksum was recorded, so the restore-side
-        integrity check is what detects it."""
-        for i, e in enumerate(self.events):
-            if e.kind != "corrupt_swap" or i in self._spent:
-                continue
-            if e.uid is not None and e.uid != uid:
-                continue
-            if tick < e.tick:
-                continue
-            for buf in buffers:
-                flat = buf.view(np.uint8).reshape(-1)
-                if flat.size:
-                    flat[flat.size // 2] ^= 0xFF
-                    self._spent.add(i)
-                    self._fire(tick, e.kind, uid)
-                    return True
-        return False
+from ..faults import (  # noqa: F401
+    SERVE_FAULT_KINDS as FAULT_KINDS,
+    FaultEvent,
+    FaultPlan,
+)

@@ -13,7 +13,19 @@ Production behaviours, all exercised by tests/examples on CPU:
     median; outliers are logged with the step index. On real multislice the
     remediation is slice hot-swap via the resource manager — out of scope
     for one host, but the detection plumbing is here;
-  * async checkpointing every ``save_every`` steps (keep-last-k).
+  * async checkpointing every ``save_every`` steps (keep-last-k);
+  * divergence rollback (``LoopConfig.rollback``): when the step's
+    ``StepHealth`` verdict (the ``health_finite`` metric) or the loss goes
+    non-finite, the loop restores the newest valid checkpoint, marks the
+    offending step's batch as poisoned (it is consumed and skipped on the
+    replay), and resumes. Because the data pipeline is step-indexed, the
+    replay of the intervening window is bit-exact; only the poison batch
+    is dropped. ``max_rollbacks`` bounds repeated divergence.
+
+Chaos testing: ``train(..., fault_plan=...)`` consults a seeded
+:class:`repro.faults.FaultPlan` at host-side hook points (every hook sits
+behind ``plan is not None``, so the no-plan loop runs the exact same
+compiled programs — nothing fault-related is ever traced into the step).
 """
 
 from __future__ import annotations
@@ -26,6 +38,7 @@ from collections import deque
 from typing import Any, Callable, Optional
 
 import jax
+import jax.numpy as jnp
 import numpy as np
 
 from ..checkpoint import checkpoint as ckpt
@@ -42,6 +55,11 @@ class LoopConfig:
     log_every: int = 10
     straggler_factor: float = 3.0  # step > factor * rolling median => flag
     async_save: bool = True
+    # Divergence rollback: on a non-finite loss or a failed StepHealth
+    # verdict, restore the newest valid checkpoint and skip the poison
+    # batch. Requires checkpoint_dir. DESIGN.md §Training robustness.
+    rollback: bool = False
+    max_rollbacks: int = 8
 
 
 class _PreemptionGuard:
@@ -67,6 +85,40 @@ class _PreemptionGuard:
         return False
 
 
+def _poison_params(params):
+    """Host-side nan_grad injection: scale every floating leaf by NaN so
+    the very next step's loss/grads/StepHealth all go non-finite. A
+    one-off jitted multiply — compiled only when the fault fires, so the
+    training step's own programs are untouched."""
+    def nan_leaf(x):
+        if hasattr(x, "dtype") and jnp.issubdtype(x.dtype, jnp.floating):
+            return x * jnp.asarray(np.nan, dtype=x.dtype)
+        return x
+    return jax.jit(lambda p: jax.tree.map(nan_leaf, p))(params)
+
+
+def _default_drift(params, scale: float):
+    """Default drift_inject target: scale every floating matrix leaf
+    (ndim >= 2) by ``1 + scale``, pushing constrained weights off the
+    manifold. Pass ``drift_apply`` to target specific leaves instead."""
+    def drift_leaf(x):
+        if (hasattr(x, "dtype") and jnp.issubdtype(x.dtype, jnp.floating)
+                and x.ndim >= 2):
+            return x * jnp.asarray(1.0 + scale, dtype=x.dtype)
+        return x
+    return jax.jit(lambda p: jax.tree.map(drift_leaf, p))(params)
+
+
+def _diverged(metrics) -> bool:
+    """Host-side divergence verdict for the rollback policy: a failed
+    in-graph StepHealth check (health_finite == 0) or a non-finite loss
+    (covers steps trained without the constraint-step telemetry)."""
+    health = metrics.get("health_finite")
+    if health is not None and float(health) == 0.0:
+        return True
+    return not bool(np.isfinite(float(metrics["loss"])))
+
+
 def train(
     train_step: Callable,  # (params, opt_state, batch) -> (params, opt_state, metrics)
     params: Any,
@@ -75,8 +127,34 @@ def train(
     loop_cfg: LoopConfig,
     *,
     on_metrics: Optional[Callable[[int, dict], None]] = None,
+    fault_plan=None,  # repro.faults.FaultPlan | None (None = zero-cost)
+    drift_apply: Optional[Callable[[Any, float], Any]] = None,
 ):
-    """Returns (params, opt_state, step, history). Resumes automatically."""
+    """Returns (params, opt_state, step, history). Resumes automatically.
+
+    With ``loop_cfg.rollback`` a diverged step (non-finite loss or failed
+    ``health_finite`` metric) restores the newest valid checkpoint and
+    skips the poison batch on replay; an initial checkpoint is written
+    before the first step so rollback is always possible. ``fault_plan``
+    injects scheduled training faults (see :mod:`repro.faults`);
+    ``drift_apply(params, scale)`` overrides the default drift_inject
+    target (all matrix leaves).
+    """
+    if loop_cfg.rollback and not loop_cfg.checkpoint_dir:
+        raise ValueError("LoopConfig.rollback requires a checkpoint_dir")
+    # corrupt_checkpoint must land on a *committed* directory before the
+    # rollback that reads it, so fault-plan runs checkpoint synchronously.
+    sync_saves = fault_plan is not None or not loop_cfg.async_save
+
+    def _save_sync(at_step, tree):
+        path = ckpt.save(
+            loop_cfg.checkpoint_dir, at_step, tree,
+            keep_last=loop_cfg.keep_last,
+        )
+        if fault_plan is not None:
+            fault_plan.corrupt_checkpoint(at_step, path)
+        return path
+
     start_step = 0
     if loop_cfg.checkpoint_dir:
         step_found, restored = ckpt.restore_latest(
@@ -87,14 +165,37 @@ def train(
             start_step = step_found
             data_iter.step = start_step
             log.info("resumed from checkpoint at step %d", start_step)
+        elif loop_cfg.rollback:
+            # guarantee a restore target for a divergence at step 0
+            _save_sync(0, (params, opt_state))
 
     history = []
     times: deque = deque(maxlen=50)
     pending_save = None
+    poisoned: set = set()
+    rollbacks = 0
     with _PreemptionGuard() as guard:
         step = start_step
         try:
             while step < loop_cfg.total_steps:
+                if step in poisoned:
+                    _ = next(data_iter)  # consume and drop the poison batch
+                    log.warning("skipping poisoned batch at step %d", step)
+                    step += 1
+                    continue
+                if fault_plan is not None:
+                    delay = fault_plan.step_delay(step)
+                    if delay:
+                        time.sleep(delay)
+                    scale = fault_plan.drift_scale(step)
+                    if scale is not None:
+                        params = (drift_apply or _default_drift)(params, scale)
+                        log.warning(
+                            "fault: drift_inject scale=%.4f at step %d", scale, step
+                        )
+                    if fault_plan.nan_grad(step):
+                        params = _poison_params(params)
+                        log.warning("fault: nan_grad at step %d", step)
                 t0 = time.monotonic()
                 batch = next(data_iter)
                 params, opt_state, metrics = train_step(params, opt_state, batch)
@@ -102,6 +203,37 @@ def train(
                 # straggler detector times wall-clock per step
                 jax.block_until_ready(metrics["loss"])
                 dt = time.monotonic() - t0
+                if loop_cfg.rollback and _diverged(metrics):
+                    rollbacks += 1
+                    if rollbacks > loop_cfg.max_rollbacks:
+                        raise RuntimeError(
+                            f"divergence at step {step}: rollback budget "
+                            f"({loop_cfg.max_rollbacks}) exhausted"
+                        )
+                    if pending_save is not None:
+                        pending_save.join()
+                        pending_save = None
+                    back_step, restored = ckpt.restore_latest(
+                        loop_cfg.checkpoint_dir, (params, opt_state)
+                    )
+                    if back_step is None:
+                        raise RuntimeError(
+                            f"divergence at step {step} but no valid "
+                            f"checkpoint to roll back to in "
+                            f"{loop_cfg.checkpoint_dir!r}"
+                        )
+                    params, opt_state = restored
+                    poisoned.add(step)
+                    log.warning(
+                        "divergence at step %d: rolled back to step %d "
+                        "(rollback %d/%d); the poisoned batch will be "
+                        "skipped on replay",
+                        step, back_step, rollbacks, loop_cfg.max_rollbacks,
+                    )
+                    step = back_step
+                    data_iter.step = back_step
+                    times.clear()  # wall times across a rollback are junk
+                    continue
                 times.append(dt)
                 med = float(np.median(times))
                 if len(times) >= 10 and dt > loop_cfg.straggler_factor * med:
@@ -124,16 +256,13 @@ def train(
                 if want_save:
                     if pending_save is not None:
                         pending_save.join()
-                    if loop_cfg.async_save and not guard.requested:
+                    if not sync_saves and not guard.requested:
                         pending_save = ckpt.save_async(
                             loop_cfg.checkpoint_dir, step, (params, opt_state),
                             keep_last=loop_cfg.keep_last,
                         )
                     else:
-                        ckpt.save(
-                            loop_cfg.checkpoint_dir, step, (params, opt_state),
-                            keep_last=loop_cfg.keep_last,
-                        )
+                        _save_sync(step, (params, opt_state))
                 if guard.requested:
                     log.warning("exiting cleanly after preemption at step %d", step)
                     break
@@ -142,10 +271,7 @@ def train(
                 if pending_save is not None:
                     pending_save.join()
                     pending_save = None
-                ckpt.save(
-                    loop_cfg.checkpoint_dir, step, (params, opt_state),
-                    keep_last=loop_cfg.keep_last,
-                )
+                _save_sync(step, (params, opt_state))
         except Exception:
             # crash path: best-effort checkpoint so restart loses nothing
             if loop_cfg.checkpoint_dir:

@@ -46,6 +46,9 @@ class TrainConfig:
     # constraint group (same-shape ortho leaves); "per_leaf": unrolled;
     # "padded": merge heterogeneous shapes into few padded megagroups
     # (ragged scheduler, DESIGN.md §Ragged scheduling)
+    ortho_watchdog: Optional[core.WatchdogConfig] = None  # feasibility
+    # watchdog + in-step drift repair (DESIGN.md §Training robustness);
+    # None compiles the exact unguarded step
 
 
 def make_optimizer(cfg, train_cfg: TrainConfig) -> optim.GradientTransformation:
@@ -85,7 +88,8 @@ def make_optimizer(cfg, train_cfg: TrainConfig) -> optim.GradientTransformation:
             f"ortho_kwargs may not set driver-level fields {sorted(reserved)}; "
             "use the dedicated TrainConfig fields (pogo_learning_rate, "
             "pogo_use_kernel, pogo_base, ortho_seed, "
-            "ortho_safety_project_every, ortho_grouping) instead"
+            "ortho_safety_project_every, ortho_grouping, ortho_watchdog) "
+            "instead"
         )
     method_kwargs.update(extra)
     # The ortho partition is handed the flat list of constrained leaves;
@@ -99,6 +103,7 @@ def make_optimizer(cfg, train_cfg: TrainConfig) -> optim.GradientTransformation:
         safety_project_every=train_cfg.ortho_safety_project_every,
         seed=train_cfg.ortho_seed,
         grouping=train_cfg.ortho_grouping,
+        watchdog=train_cfg.ortho_watchdog,
         **method_kwargs,
     )
     return optim.partition(
@@ -149,11 +154,17 @@ def make_train_step(cfg, train_cfg: TrainConfig, optimizer=None):
 
         updates, opt_state = optimizer.update(grads, opt_state, params)
         params = optim.apply_updates(params, updates)
+        # The in-graph StepHealth verdict of the constraint step — the
+        # rollback policy in train/loop.py branches on it host-side, so it
+        # rides the metrics dict as a floatable 0/1 scalar (history
+        # snapshots call float() on every metric).
+        health = core.step_health(opt_state)
         metrics_out = {
             "loss": loss,
             "grad_norm": optim.global_norm(grads),
             # Uniform telemetry: every method's OrthoState reports it.
             "ortho_distance": core.max_distance(opt_state),
+            "health_finite": health.ok().astype(jnp.float32),
         }
         return params, opt_state, metrics_out
 

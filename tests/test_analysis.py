@@ -446,3 +446,58 @@ def test_cli_rejects_unknown_rule(tmp_path):
 
     with pytest.raises(SystemExit):
         cli.main(["--rules", "NotARule"])
+
+
+def test_unguarded_step_health_drop_is_flagged(tmp_path):
+    fs = _lint(tmp_path, "train/x.py", """\
+        from repro import core
+
+        def run(opt, params, state, grads):
+            step = core.constraint_step(opt)
+            step(params, state, grads)
+        """)
+    assert [f.rule for f in fs] == ["unguarded-step-health"]
+    assert fs[0].severity == "error" and "x.py:5" in fs[0].location
+
+
+def test_unguarded_step_health_discard_unpack_is_flagged(tmp_path):
+    fs = _lint(tmp_path, "serve/x.py", """\
+        def tick(model, tokens, caches):
+            logits, caches, _ = model.decode_step_paged(tokens, caches)
+            return logits, caches
+        """)
+    assert [f.rule for f in fs] == ["unguarded-step-health"]
+
+
+def test_unguarded_step_health_consumed_is_clean(tmp_path):
+    fs = _lint(tmp_path, "train/x.py", """\
+        from repro import core
+
+        def run(opt, params, state, grads):
+            step = core.constraint_step(opt)
+            params, state, health = step(params, state, grads)
+            assert bool(health.ok())
+            return params, state
+        """)
+    assert fs == []
+
+
+def test_unguarded_step_health_waiver(tmp_path):
+    fs = _lint(tmp_path, "serve/x.py", """\
+        def tick(model, tokens, caches):
+            # lint-ok: unguarded-step-health health re-checked at fold time
+            logits, caches, _ = model.decode_step_paged(tokens, caches)
+            return logits, caches
+        """)
+    assert fs == []
+
+
+def test_unguarded_step_health_outside_scope_is_ignored(tmp_path):
+    """The rule polices the runtime policy layers only — a kernels-level
+    harness dropping the tuple is not a policy bug."""
+    fs = _lint(tmp_path, "kernels/x.py", """\
+        def run(opt, params, state, grads, core):
+            step = core.constraint_step(opt)
+            step(params, state, grads)
+        """)
+    assert fs == []

@@ -446,8 +446,9 @@ def test_constraint_step_donates_buffers_no_param_copy():
         bad = find_copies_of(txt, shapes)
         assert not bad, bad
         # and the step actually runs with donated inputs
-        p2, s2 = step(params, state, grads)
+        p2, s2, health = step(params, state, grads)
         assert p2.stacks[0].sharding.spec == P("data", None, None)
+        assert bool(health.finite)
         shard_hints.set_mesh(None)
         print("OK")
         """
@@ -486,7 +487,7 @@ def test_checkpoint_sharded_restore_smaller_mesh(tmp_path):
             base_optimizer=optim.chain(optim.trace(0.3)))
         state = opt.init(params)
         step = api.constraint_step(opt)
-        params, state = step(params, state, grads)  # sharded dists + moments
+        params, state, _h = step(params, state, grads)  # sharded dists + moments
         assert state.last_distance.per_group[0].sharding.spec == P("data")
         ckpt.save(DIR, 7, (params, state))
         digests = [hashlib.md5(np.asarray(l).tobytes()).hexdigest()
@@ -552,6 +553,81 @@ def test_batch_spec_divisibility_fallback():
         s4 = sharding.batch_spec(mesh, 4)
         print("s2", s2, "s4", s4)
         assert s4[0] == ("pod", "data")
+        print("OK")
+        """
+    )
+
+
+def test_sharded_resume_bit_identical(tmp_path):
+    """Resume determinism on the 8-device mesh: save the sharded
+    (ConstraintSet, OrthoState) at step 4, restore into fresh
+    batch-sharded objects, run 4 more steps — params and the
+    GroupedDistances telemetry must be bit-identical to the
+    uninterrupted 8-step run (the divergence-rollback policy depends on
+    exact replay)."""
+    ckpt_dir = str(tmp_path / "ckpt")
+    _run(
+        f"""
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        from repro import optim
+        from repro.checkpoint import checkpoint as ckpt
+        from repro.core import api, stiefel
+        from repro.distributed import shard_hints
+        from repro.launch.mesh import make_mesh
+
+        DIR = {ckpt_dir!r}
+        B, p, n = 32, 8, 64
+        mesh = make_mesh((8,), ("data",))
+        shard_hints.set_mesh(mesh)
+        sh = NamedSharding(mesh, P("data", None, None))
+
+        def fresh():
+            x = stiefel.random_stiefel(jax.random.PRNGKey(0), (B, p, n))
+            g = 0.1 * jax.random.normal(jax.random.PRNGKey(1), (B, p, n))
+            cs0 = api.ConstraintSet.from_tree({{"w": np.asarray(x)}})
+            gs0 = api.ConstraintSet.from_tree({{"w": np.asarray(g)}})
+            params = api.ConstraintSet(
+                cs0.plan, tuple(jax.device_put(s, sh) for s in cs0.stacks))
+            grads = api.ConstraintSet(
+                gs0.plan, tuple(jax.device_put(s, sh) for s in gs0.stacks))
+            opt = api.orthogonal(
+                "pogo", learning_rate=0.1,
+                base_optimizer=optim.chain(optim.trace(0.3)))
+            return opt, api.constraint_step(opt), params, grads
+
+        opt, step, params, grads = fresh()
+        state = opt.init(params)
+        for _ in range(8):
+            params, state, _h = step(params, state, grads)
+        full = [np.asarray(l) for l in jax.tree.leaves((params, state))]
+
+        opt, step, params, grads = fresh()
+        state = opt.init(params)
+        for _ in range(4):
+            params, state, _h = step(params, state, grads)
+        ckpt.save(DIR, 4, (params, state))
+
+        opt, step, params, grads = fresh()
+        like = (params, opt.init(params))
+
+        def shard_for(leaf):
+            if leaf.ndim >= 1 and leaf.shape[0] == B:
+                return NamedSharding(
+                    mesh, P("data", *([None] * (leaf.ndim - 1))))
+            return NamedSharding(mesh, P())
+
+        got_step, restored = ckpt.restore_latest(
+            DIR, like, shardings=jax.tree.map(shard_for, like))
+        assert got_step == 4
+        params, state = restored
+        for _ in range(4):
+            params, state, _h = step(params, state, grads)
+        resumed = [np.asarray(l) for l in jax.tree.leaves((params, state))]
+
+        assert len(full) == len(resumed)
+        for a, b in zip(full, resumed):
+            np.testing.assert_array_equal(a, b)
+        assert state.last_distance.per_group[0].sharding.spec == P("data")
         print("OK")
         """
     )

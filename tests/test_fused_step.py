@@ -58,7 +58,7 @@ def test_fused_whole_matches_oracle(shape, method, base_kind, hyper,
     r = ref.fused_group_step_ref(x, g, 0.1, **kwargs)
     k = ops.fused_group_step(x, g, 0.1, use_pallas=True, interpret=True,
                              **kwargs)
-    for a, b, name in zip(r, k, ("x", "mu", "nu", "dist")):
+    for a, b, name in zip(r, k, ("x", "mu", "nu", "dist", "finite")):
         if a is None:
             assert b is None
             continue
@@ -86,7 +86,7 @@ def test_fused_tiled_matches_oracle(shape, method, monkeypatch):
         x, g, 0.1, method=method, lam=0.5, base_kind="trace",
         hyper=(0.35, False), mu=mu, use_pallas=True, interpret=True,
     )
-    for a, b, name in zip(r, k, ("x", "mu", "nu", "dist")):
+    for a, b, name in zip(r, k, ("x", "mu", "nu", "dist", "finite")):
         if a is None:
             assert b is None
             continue
@@ -101,9 +101,10 @@ def test_fused_telemetry_matches_true_distance(method):
     """The algebraic (POGO) / accumulated (Landing) telemetry equals the
     measured ||X' X'^H - I||_F of the returned iterate to fp32 tolerance."""
     x, g, _, _ = _operands((3, 5, 40))
-    x2, _, _, dist = ops.fused_group_step(
+    x2, _, _, dist, finite = ops.fused_group_step(
         x, g, 0.1, method=method, lam=0.5, use_pallas=True, interpret=True,
     )
+    assert bool(jnp.all(finite))
     d_true = stiefel.manifold_distance(x2.astype(jnp.float32))
     np.testing.assert_allclose(
         np.asarray(dist), np.asarray(d_true), atol=1e-5, rtol=1e-3
@@ -141,7 +142,7 @@ def test_fused_ragged_whole_matches_oracle_and_true_shapes(
     r = ref.fused_group_step_ref(x, g, 0.1, **kwargs)
     k = ops.fused_group_step(x, g, 0.1, use_pallas=True, interpret=True,
                              **kwargs)
-    for a, b, name in zip(r, k, ("x", "mu", "nu", "dist")):
+    for a, b, name in zip(r, k, ("x", "mu", "nu", "dist", "finite")):
         if a is None:
             assert b is None
             continue
@@ -177,7 +178,7 @@ def test_fused_ragged_tiled_matches_oracle(method, monkeypatch):
     r = ref.fused_group_step_ref(x, g, 0.1, **kwargs)
     k = ops.fused_group_step(x, g, 0.1, use_pallas=True, interpret=True,
                              **kwargs)
-    for a, b, name in zip(r, k, ("x", "mu", "nu", "dist")):
+    for a, b, name in zip(r, k, ("x", "mu", "nu", "dist", "finite")):
         if a is None:
             assert b is None
             continue

@@ -79,3 +79,54 @@ def test_degenerate_on_manifold_falls_back():
     x = stiefel.random_stiefel(jax.random.PRNGKey(5), (4, 8))
     lam = quartic.optimal_lambda(x)  # M already on manifold
     assert np.isfinite(float(lam))
+
+
+def _gram_dev(m, pv=None):
+    p = m.shape[-2]
+    if pv is None:
+        eye = jnp.eye(p, dtype=m.dtype)
+    else:
+        eye = stiefel.masked_eye(p, pv, m.dtype)
+    return m @ jnp.conj(jnp.swapaxes(m, -1, -2)) - eye
+
+
+def test_coeffs_from_gram_match_direct():
+    """The gram-powers route (two Bp^3 matmuls, what the watchdog's
+    blended land uses in-graph) reproduces the direct Lemma-3.1
+    coefficients from the (B, p, n) stack."""
+    key = jax.random.PRNGKey(7)
+    x = stiefel.random_stiefel(key, (3, 6, 12))
+    g = jax.random.normal(jax.random.PRNGKey(8), (3, 6, 12))
+    m = 1.2 * x - 0.2 * g  # off-manifold: every coefficient nonzero
+    direct = quartic.landing_poly_coeffs(m)
+    fromg = quartic.landing_poly_coeffs_from_gram(_gram_dev(m))
+    for a, b in zip(direct, fromg):
+        np.testing.assert_allclose(
+            np.asarray(a), np.asarray(b), rtol=2e-4, atol=1e-6
+        )
+
+
+def test_optimal_lambda_from_gram_matches_direct():
+    """Same root from either coefficient route — real, ragged (pv) and
+    complex stacks."""
+    key = jax.random.PRNGKey(9)
+    x = stiefel.random_stiefel(key, (4, 6, 12))
+    g = jax.random.normal(jax.random.PRNGKey(10), (4, 6, 12))
+    m = 1.5 * x - 0.1 * g
+    lam_a = np.asarray(quartic.optimal_lambda(m))
+    lam_b = np.asarray(quartic.optimal_lambda_from_gram(_gram_dev(m)))
+    np.testing.assert_allclose(lam_a, lam_b, rtol=1e-4, atol=1e-5)
+
+    pv = jnp.array([6, 4, 3, 6])  # ragged: padded rows masked out
+    mz = m * (jnp.arange(6)[None, :, None] < pv[:, None, None])
+    lam_a = np.asarray(quartic.optimal_lambda(mz, pv=pv))
+    lam_b = np.asarray(quartic.optimal_lambda_from_gram(_gram_dev(mz, pv)))
+    np.testing.assert_allclose(lam_a, lam_b, rtol=1e-4, atol=1e-5)
+
+    kr, ki = jax.random.split(jax.random.PRNGKey(11))
+    mc = (jax.random.normal(kr, (2, 5, 9)).astype(jnp.complex64)
+          + 1j * jax.random.normal(ki, (2, 5, 9)).astype(jnp.complex64))
+    mc = 0.4 * mc
+    lam_a = np.asarray(quartic.optimal_lambda(mc))
+    lam_b = np.asarray(quartic.optimal_lambda_from_gram(_gram_dev(mc)))
+    np.testing.assert_allclose(lam_a, lam_b, rtol=1e-4, atol=1e-5)

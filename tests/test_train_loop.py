@@ -84,3 +84,50 @@ def test_crash_writes_checkpoint(tmp_path):
     cfg, step_fn2, params2, opt_state2, data2 = _setup()
     p, o, s, _ = train(step_fn2, params2, opt_state2, data2, lc)
     assert s == 10
+
+
+@pytest.mark.parametrize("grouping", ["auto", "padded"])
+def test_resume_bit_identical(tmp_path, grouping):
+    """Checkpoint at step 4, restore into fresh objects, run to step 8:
+    params AND the GroupedDistances telemetry must be bit-identical to
+    an uninterrupted 8-step run — the rollback policy depends on replay
+    being exact, not merely close."""
+    from repro import core
+
+    d = str(tmp_path / grouping)
+
+    def setup():
+        cfg = get_config("smollm-360m", smoke=True)
+        params = ortho.project_init(tfm.init_params(KEY, cfg), cfg)
+        tc = TrainConfig(warmup_steps=2, decay_steps=8, learning_rate=1e-2,
+                         pogo_learning_rate=0.3, ortho_grouping=grouping)
+        step_fn, optimizer = make_train_step(cfg, tc)
+        data = DataIterator(
+            DataConfig(vocab_size=cfg.vocab_size, seq_len=32,
+                       global_batch=8, seed=1)
+        )
+        return jax.jit(step_fn), params, optimizer.init(params), data
+
+    step_fn, params, opt_state, data = setup()
+    lc8 = LoopConfig(total_steps=8, log_every=1)
+    p_full, o_full, _, _ = train(step_fn, params, opt_state, data, lc8)
+
+    step_fn, params, opt_state, data = setup()
+    lc4 = LoopConfig(total_steps=4, checkpoint_dir=d, save_every=4,
+                     async_save=False)
+    train(step_fn, params, opt_state, data, lc4)
+    step_fn, params, opt_state, data = setup()
+    lc8r = LoopConfig(total_steps=8, checkpoint_dir=d, save_every=100,
+                      async_save=False)
+    p_res, o_res, s, _ = train(step_fn, params, opt_state, data, lc8r)
+    assert s == 8
+
+    for a, b in zip(jax.tree.leaves(p_full), jax.tree.leaves(p_res)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    st_full = core.ortho_states(o_full)
+    st_res = core.ortho_states(o_res)
+    assert st_full and len(st_full) == len(st_res)
+    for sa, sb in zip(st_full, st_res):
+        for da, db in zip(sa.last_distance.per_group,
+                          sb.last_distance.per_group):
+            np.testing.assert_array_equal(np.asarray(da), np.asarray(db))
