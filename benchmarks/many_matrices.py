@@ -53,6 +53,16 @@ mode: the sharded fused step (DESIGN.md §Sharded execution) on forced
 1- and 8-device host meshes, one subprocess per cell, reporting
 per-device bytes/s, 8-vs-1 aggregate speedup / scaling efficiency,
 donation aliasing, and a bit-identity digest across device counts.
+
+``run_tp`` (suite ``many_matrices_tp``) sweeps the DPxTP splits of an
+8-device mesh (8x1, 4x2, 2x4, 1x8) over the one-psum TP fused step
+(DESIGN.md §Tensor-parallel execution): per split it reports steady
+step time, per-device HBM bytes/s, and the psum wire bytes measured
+from the compiled HLO (exact fp32 AND the ``tp_compress=True`` int8
+lowering), asserting the one-psum contract per cell (DP-only cells
+collective-free, TP cells exactly one gram-sized all-reduce) plus the
+>= 4x analytic traffic-reduction gates; the crossover row compares the
+best TP split against DP-only at each n.
 """
 
 from __future__ import annotations
@@ -464,6 +474,260 @@ def run_sharded(full: bool = False, smoke: bool = False):
             )
 
 
+# --------------------------------------------------- DPxTP (tensor-parallel)
+
+
+def _tp_worker(dp: int, tp: int, n_mat: int, p: int, n: int,
+               steps: int) -> None:
+    """One DPxTP measurement process on the 8-fake-device host mesh.
+
+    The ConstraintSet stacks are device_put ``P(data, None, model)`` —
+    batch over the DP axis, n over the TP axis — so no device holds more
+    than a ``(B/dp, p, n/tp)`` block. Prints one JSON line: timings,
+    donation aliasing, and the collective footprint of the compiled
+    ``api.constraint_step`` parsed from its HLO, for the exact-psum step
+    and for the ``tp_compress=True`` (int8 + error feedback) lowering —
+    the wire-traffic numbers the parent turns into reduction ratios.
+    """
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    from repro import optim
+    from repro.analysis.lowering import parse_collectives
+    from repro.distributed import shard_hints
+    from repro.launch.mesh import make_mesh
+
+    n_dev = len(jax.devices())
+    assert n_dev == dp * tp, (n_dev, dp, tp)
+    mesh = make_mesh((dp, tp), ("data", "model"))
+    shard_hints.set_mesh(mesh)
+
+    base = stiefel.random_stiefel(
+        jax.random.PRNGKey(0), (n_mat, p, n)).astype(jnp.float32)
+    gbase = 0.1 * jax.random.normal(
+        jax.random.PRNGKey(1), (n_mat, p, n), jnp.float32)
+    spec = P("data" if dp > 1 and n_mat % dp == 0 else None, None,
+             "model" if tp > 1 and n % tp == 0 else None)
+    sh = NamedSharding(mesh, spec)
+
+    def put(cset):
+        return api.ConstraintSet(
+            cset.plan, tuple(jax.device_put(s, sh) for s in cset.stacks))
+
+    grads = put(api.ConstraintSet.from_tree({"w": gbase}))
+
+    def make(tp_compress):
+        opt = api.orthogonal(
+            "pogo", learning_rate=0.1, grouping="auto", use_kernel=True,
+            base_optimizer=optim.chain(optim.trace(0.3)),
+            tp_compress=tp_compress,
+        )
+        params = put(api.ConstraintSet.from_tree({"w": jnp.copy(base)}))
+        return opt, params, opt.init(params)
+
+    def lower(opt, params, state):
+        step = api.constraint_step(opt)
+        txt = step.lower(params, state, grads).compile().as_text()
+        colls = {
+            k: {"count": v["count"], "bytes": v["bytes"],
+                "ops": [o["bytes"] for o in v["ops"]]}
+            for k, v in parse_collectives(txt).items() if v["count"]
+        }
+        return step, colls, "input_output_alias" in txt
+
+    opt, params, state = make(False)
+    step, colls, aliased = lower(opt, params, state)
+
+    t0 = time.perf_counter()
+    params, state, _health = step(params, state, grads)
+    jax.block_until_ready(params.stacks[0])
+    trace_s = time.perf_counter() - t0
+
+    def run_steps(k):
+        nonlocal params, state
+        for _ in range(k):
+            params, state, _health = step(params, state, grads)
+        jax.block_until_ready(params.stacks[0])
+
+    us = min_window_us(run_steps, steps)
+    e2e_us = (1e6 * trace_s + us * steps) / steps
+
+    # Compressed-psum lowering only (no timing: int8 quantization on a
+    # shared-socket CPU mesh measures nothing; the wire bytes are the
+    # machine-independent signal).
+    optc, paramsc, statec = make(True)
+    _stepc, colls_c, _aliasedc = lower(optc, paramsc, statec)
+
+    print(json.dumps({
+        "n_dev": n_dev, "dp": dp, "tp": tp, "n_mat": n_mat, "p": p,
+        "n": n, "steps": steps, "trace_s": trace_s, "us": us,
+        "e2e_us": e2e_us, "aliased": bool(aliased), "colls": colls,
+        "colls_compressed": colls_c,
+    }))
+
+
+def _spawn_tp(dp: int, tp: int, n_mat: int, p: int, n: int,
+              steps: int) -> dict:
+    env = dict(os.environ)
+    env["JAX_PLATFORMS"] = "cpu"
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    src = os.path.join(os.path.dirname(__file__), "..", "src")
+    env["PYTHONPATH"] = (
+        os.path.abspath(src) + os.pathsep + env.get("PYTHONPATH", "")
+    )
+    res = subprocess.run(
+        [sys.executable, "-m", "benchmarks.many_matrices", "--tp-worker",
+         str(dp), str(tp), str(n_mat), str(p), str(n), str(steps)],
+        env=env, cwd=os.path.join(os.path.dirname(__file__), ".."),
+        capture_output=True, text=True, timeout=1800,
+    )
+    if res.returncode != 0:
+        raise RuntimeError(
+            f"tp worker (dp={dp}, tp={tp}) failed:\n{res.stderr[-2000:]}"
+        )
+    return json.loads(res.stdout.strip().splitlines()[-1])
+
+
+TP_SPLITS = ((8, 1), (4, 2), (2, 4), (1, 8))
+
+
+def run_tp(full: bool = False, smoke: bool = False):
+    """DPxTP split sweep of the one-psum TP fused group step (ISSUE-10).
+
+    Every (problem, split) cell is its own subprocess on a forced
+    8-device host mesh. Hard invariants per cell: donation aliased;
+    DP-only cells (tp=1) collective-free; TP cells exactly ONE
+    all-reduce whose per-device bytes are the flat gram payload
+    ``(B/dp) * 3p^2 * 4`` — never the matrix. Per problem: the crossover
+    row (best TP split vs DP-only wall clock — on a shared-socket CPU
+    mesh this mostly validates the schedule) and the traffic row, whose
+    two reduction ratios are machine-independent and gated at >= 4x:
+    gram-payload psum vs all-gathering the matrix columns, and exact
+    fp32 psum vs the measured ``tp_compress`` int8 wire bytes.
+    """
+    # The CI smoke cell (8, 16, 1024) stays in every grid so bench-smoke
+    # artifacts find matching baseline names (see check_regression.py).
+    if smoke:
+        grid, steps = [(8, 16, 1024)], 5
+    elif full:
+        grid = [(8, 16, 1024), (8, 64, 2048), (8, 64, 8192),
+                (8, 64, 16384)]
+        steps = STEPS
+    else:
+        grid, steps = [(8, 16, 1024), (8, 64, 2048), (8, 64, 16384)], STEPS
+    crossover_n = None
+    for n_mat, p, n in grid:
+        cells = {}
+        for dp, tp in TP_SPLITS:
+            r = _spawn_tp(dp, tp, n_mat, p, n, steps)
+            cells[(dp, tp)] = r
+            n_dev = dp * tp
+            bytes_per_step = FUSED_TRACE_PASSES * n_mat * p * n * 4 // n_dev
+            per_dev_bs = bytes_per_step / (r["us"] * 1e-6)
+            # GSPMD reduces telemetry scalars (the StepHealth finite
+            # flag) outside the shard_map body on DP meshes — a few
+            # bytes, allowed everywhere. The schedule contract is about
+            # the BULK ops: none at all for DP-only, exactly one
+            # gram-payload all-reduce for TP.
+            scalar_floor = 64
+            ar_ops = r["colls"].get("all-reduce", {}).get("ops", [])
+            bulk = [
+                b for v in r["colls"].values() for b in v["ops"]
+                if b > scalar_floor
+            ]
+            psum_b = max(ar_ops, default=0)
+            emit(
+                f"many_matrices/tp_fused/N{n_mat}_p{p}_n{n}/dp{dp}xtp{tp}",
+                r["us"],
+                f"trace_s={r['trace_s']:.3f},"
+                f"per_dev_gbs={per_dev_bs / 1e9:.2f},"
+                f"psum_B={psum_b},aliased={int(r['aliased'])}",
+                mode="tp_fused", n_matrices=n_mat, p=p, n=n, dp=dp, tp=tp,
+                n_devices=n_dev, steps=steps, trace_s=r["trace_s"],
+                e2e_us_per_step=r["e2e_us"],
+                per_device_bytes_per_s=per_dev_bs,
+                psum_bytes_per_device=psum_b,
+                collective_count=sum(
+                    v["count"] for v in r["colls"].values()),
+                donation_aliased=r["aliased"],
+            )
+            if not r["aliased"]:
+                raise RuntimeError(
+                    f"TP step dp{dp}xtp{tp} at n={n} lost donation aliasing"
+                )
+            if tp == 1 and bulk:
+                raise RuntimeError(
+                    f"DP-only cell dp{dp}xtp{tp} at n={n} moves bulk "
+                    f"collective traffic: {r['colls']}"
+                )
+            if tp > 1:
+                want = (n_mat // dp) * 3 * p * p * 4
+                if bulk != [want] or want not in ar_ops:
+                    raise RuntimeError(
+                        f"TP cell dp{dp}xtp{tp} at n={n} broke the "
+                        f"one-psum contract (want one {want}-B "
+                        f"all-reduce): {r['colls']}"
+                    )
+        dp_only = cells[(8, 1)]
+        best_split = min(
+            (s for s in TP_SPLITS if s[1] > 1), key=lambda s: cells[s]["us"])
+        best = cells[best_split]
+        tp_x = dp_only["us"] / best["us"]
+        if tp_x > 1.0 and crossover_n is None:
+            crossover_n = n
+        emit(
+            f"many_matrices/tp_crossover/N{n_mat}_p{p}_n{n}",
+            best["us"],
+            f"tp_x={tp_x:.2f},best=dp{best_split[0]}xtp{best_split[1]},"
+            f"dp_us={dp_only['us']:.0f}",
+            mode="tp_crossover", n_matrices=n_mat, p=p, n=n, steps=steps,
+            tp_vs_dp_speedup=tp_x, best_dp=best_split[0],
+            best_tp=best_split[1], dp_only_us=dp_only["us"],
+        )
+        # Machine-independent traffic ratios at the widest split (1x8):
+        # bulk wire bytes only (telemetry scalar reductions excluded).
+        wide = cells[(1, 8)]
+        exact_b = n_mat * 3 * p * p * 4
+        comp_b = sum(
+            b for v in wide["colls_compressed"].values() for b in v["ops"]
+            if b > 64)
+        # Lowered HLO width (int16 accumulation) vs the int8 payload
+        # entropy (the analytic 4x a packed wire format reaches).
+        compress_meas_x = exact_b / comp_b
+        compress_analytic_x = 4.0
+        # vs all-gathering the off-shard matrix columns so each device
+        # could form the full gram locally: (tp-1)/tp of B*p*n fp32.
+        gather_b = n_mat * p * n * 4 * (8 - 1) // 8
+        gram_x = gather_b / exact_b
+        emit(
+            f"many_matrices/tp_traffic/N{n_mat}_p{p}_n{n}",
+            float(comp_b),
+            f"exact_psum_B={exact_b},compressed_B={comp_b},"
+            f"compress_meas_x={compress_meas_x:.2f},"
+            f"gram_vs_gather_x={gram_x:.1f}",
+            mode="tp_traffic", n_matrices=n_mat, p=p, n=n,
+            exact_psum_bytes=exact_b, compressed_psum_bytes=comp_b,
+            compress_measured_x=compress_meas_x,
+            compress_analytic_x=compress_analytic_x,
+            gram_vs_gather_reduction_x=gram_x,
+        )
+        # The acceptance gate: gram-payload psum must beat matrix-scale
+        # traffic >= 4x, and the compressed lowering must actually
+        # shrink the wire payload (int16 accumulation: 2x measured; the
+        # int8 grid carries the analytic 4x).
+        if not (gram_x >= 4.0 and compress_meas_x >= 1.5):
+            raise RuntimeError(
+                f"TP traffic reduction below target at n={n}: "
+                f"gram_vs_gather_x={gram_x:.1f} (want >=4), "
+                f"compress_meas_x={compress_meas_x:.2f} (want >=1.5)"
+            )
+    emit(
+        "many_matrices/tp_crossover_n",
+        0.0,
+        f"crossover_n={crossover_n}",
+        mode="tp_crossover_n", crossover_n=crossover_n,
+    )
+
+
 def _emit_mode(mode, n_mat, p, trace_s, us, e2e_us, steps):
     emit(
         f"many_matrices/{mode}/N{n_mat}_p{p}",
@@ -551,6 +815,8 @@ def run(full: bool = False, smoke: bool = False):
 if __name__ == "__main__":
     if len(sys.argv) > 1 and sys.argv[1] == "--sharded-worker":
         _sharded_worker(*(int(a) for a in sys.argv[2:6]))
+    elif len(sys.argv) > 1 and sys.argv[1] == "--tp-worker":
+        _tp_worker(*(int(a) for a in sys.argv[2:8]))
     else:
         print("name,us_per_call,derived", flush=True)
         run()

@@ -58,6 +58,8 @@ def main(argv=None):
             full=args.full, smoke=args.smoke),
         "many_matrices_sharded": lambda: many_matrices.run_sharded(   # §Sharded
             full=args.full, smoke=args.smoke),
+        "many_matrices_tp": lambda: many_matrices.run_tp(             # §TP
+            full=args.full, smoke=args.smoke),
         "group_roofline": lambda: roofline.run_group_step(            # §Fusion
             full=args.full, smoke=args.smoke),
         "serve": lambda: serve_bench.run(                             # §Serving

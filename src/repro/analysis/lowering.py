@@ -170,33 +170,45 @@ def _data_mesh():
     return make_mesh((n,), ("data",))
 
 
-def _shard_stacks(cs_sds, mesh):
-    """Re-attach batch shardings to an abstract ConstraintSet's stacks."""
-    from jax.sharding import NamedSharding, PartitionSpec as P
+def _stack_spec(ndim: int, tp: str | None):
+    """Batch-sharded spec for one (B, ...) leaf; under TP the trailing
+    (n) axis of rank >= 3 stacks additionally shards over the model axis
+    — the resting layout of the DPxTP schedule, so donation analysis
+    sees buffers aliased without a reshard."""
+    from jax.sharding import PartitionSpec as P
+
+    if tp is not None and ndim >= 3:
+        return P("data", *([None] * (ndim - 2)), tp)
+    return P("data", *([None] * (ndim - 1)))
+
+
+def _shard_stacks(cs_sds, mesh, tp: str | None = None):
+    """Re-attach batch (and, under TP, column) shardings to an abstract
+    ConstraintSet's stacks."""
+    from jax.sharding import NamedSharding
 
     from ..core import api
 
     sh = tuple(
         jax.ShapeDtypeStruct(
             s.shape, s.dtype,
-            sharding=NamedSharding(mesh, P("data", *([None] * (s.ndim - 1)))),
+            sharding=NamedSharding(mesh, _stack_spec(s.ndim, tp)),
         )
         for s in cs_sds.stacks
     )
     return api.ConstraintSet(cs_sds.plan, sh)
 
 
-def _shard_state(state_sds, mesh, batch_sizes):
+def _shard_state(state_sds, mesh, batch_sizes, tp: str | None = None):
     """Batch-shard any state leaf whose leading dim is a group batch
     (moments, per-group distances) — mirrors what a real sharded init
     produces, so donation analysis sees production layouts."""
-    from jax.sharding import NamedSharding, PartitionSpec as P
+    from jax.sharding import NamedSharding
 
     def attach(leaf):
         if leaf.ndim >= 1 and leaf.shape[0] in batch_sizes \
                 and leaf.shape[0] % mesh.size == 0:
-            sharding = NamedSharding(
-                mesh, P("data", *([None] * (leaf.ndim - 1))))
+            sharding = NamedSharding(mesh, _stack_spec(leaf.ndim, tp))
             return jax.ShapeDtypeStruct(leaf.shape, leaf.dtype,
                                         sharding=sharding)
         return leaf
@@ -288,6 +300,60 @@ def _entry_constraint_step(mesh) -> LoweredEntry:
         "constraint_step", step, (params, state, grads),
         donate_argnums=(0, 1), mesh=mesh,
         meta={"kind": "train", "grouping": "auto"},
+    )
+
+
+def _entry_constraint_step_tp(mesh) -> LoweredEntry:
+    """The donated resting-state step under the DPxTP schedule: stacks
+    batch-sharded over "data" AND column-sharded over "model", so the
+    shard_map body holds exactly one psum — the gram-payload all-reduce
+    (DESIGN.md §Tensor-parallel execution). ``meta['tp_one_psum']`` arms
+    the CollectiveFree one-psum contract with the payload budget
+    ``3*B*p^2*itemsize + B*itemsize`` (the [A|B|S] gram block plus the
+    deferred-vadam scalar column — tp_payload_width); a psum of anything
+    matrix-sized is an error finding. Degrades to the plain (un-metered)
+    constraint step when fewer than 2 devices are visible."""
+    import numpy as np
+
+    from .. import optim
+    from ..core import api
+    from ..distributed import shard_hints
+    from ..launch.mesh import make_mesh
+
+    n_dev = len(jax.devices())
+    if mesh is None or n_dev < 2 or n_dev % 2:
+        entry = _entry_constraint_step(None)
+        entry.name = "constraint_step_tp"
+        return entry
+    tp_mesh = make_mesh((n_dev // 2, 2), ("data", "model"))
+    shard_hints.set_mesh(tp_mesh, "2d")
+    b, p, n = (8 * (n_dev // 2), 16, 512)
+    tree = {"w": jax.ShapeDtypeStruct((b, p, n), jnp.float32)}
+    params = jax.eval_shape(lambda t: api.ConstraintSet.from_tree(t), tree)
+    grads = jax.eval_shape(lambda t: api.ConstraintSet.from_tree(t), tree)
+    opt = api.orthogonal(
+        "pogo", learning_rate=0.1, use_kernel=True,
+        base_optimizer=optim.chain(optim.trace(0.3)),
+    )
+    state = jax.eval_shape(opt.init, params)
+    params = _shard_stacks(params, tp_mesh, tp="model")
+    grads = _shard_stacks(grads, tp_mesh, tp="model")
+    state = _shard_state(state, tp_mesh, {b}, tp="model")
+
+    def step(ps, s, g):
+        updates, s2 = opt.update(g, s, ps)
+        return ps.apply(updates), s2
+
+    itemsize = np.dtype(np.float32).itemsize
+    return lower_fn(
+        "constraint_step_tp", step, (params, state, grads),
+        donate_argnums=(0, 1), mesh=tp_mesh,
+        meta={
+            "kind": "train", "grouping": "auto",
+            "tp_one_psum": True,
+            "tp_psum_budget_bytes": (3 * b * p * p + b) * itemsize,
+            "collective_budget_bytes": 2 * (3 * b * p * p + b) * itemsize,
+        },
     )
 
 
@@ -390,6 +456,7 @@ def _entry_serve_prefill(mesh) -> LoweredEntry:
 # forces 8) and degrade to single-device analysis locally.
 ENTRYPOINTS: dict = {
     "constraint_step": _entry_constraint_step,
+    "constraint_step_tp": _entry_constraint_step_tp,
     "group_step_auto": lambda mesh: _entry_group_step("auto", mesh),
     "group_step_padded": lambda mesh: _entry_group_step("padded", mesh),
     "decode_step_paged": lambda mesh: _entry_decode_step_paged(None),

@@ -136,25 +136,63 @@ class DonationAliased:
 class CollectiveFree:
     """No collective primitive inside any shard_map body: constraint
     matrices are independent, so the per-shard group update must not
-    communicate (the whole point of the batch-sharded schedule)."""
+    communicate (the whole point of the batch-sharded schedule).
+
+    Entries flagged ``meta['tp_one_psum']`` run the DPxTP group schedule
+    instead (DESIGN.md §Tensor-parallel execution), whose proof
+    obligation is *exactly one* psum inside the shard_map body — the
+    gram-payload all-reduce — bounded by
+    ``meta['tp_psum_budget_bytes']`` when set. Zero psums (the schedule
+    silently fell back), more than one, any other collective kind, or an
+    oversized payload are all error findings.
+    """
 
     name = "CollectiveFree"
     kind = "entry"
 
     def check_entry(self, entry) -> list[Finding]:
         hits = [
-            eqn.primitive.name
+            (eqn.primitive.name, eqn)
             for eqn, in_sm in walk_eqns(entry.jaxpr)
             if in_sm and _is_collective(eqn.primitive.name)
         ]
-        if hits:
-            return [Finding(
-                self.name, "error", f"entry:{entry.name}",
-                "collective primitive(s) inside a shard_map body: "
-                f"{sorted(set(hits))} — the per-shard group update must "
-                "be collective-free.",
-            )]
-        return []
+        loc = f"entry:{entry.name}"
+        if not entry.meta.get("tp_one_psum"):
+            if hits:
+                return [Finding(
+                    self.name, "error", loc,
+                    "collective primitive(s) inside a shard_map body: "
+                    f"{sorted({n for n, _ in hits})} — the per-shard "
+                    "group update must be collective-free.",
+                )]
+            return []
+        findings = []
+        psums = [eqn for n, eqn in hits if n.startswith("psum")]
+        others = sorted({n for n, _ in hits if not n.startswith("psum")})
+        if others or len(psums) != 1:
+            findings.append(Finding(
+                self.name, "error", loc,
+                "TP group step must contain exactly one psum inside the "
+                f"shard_map body; found {len(psums)} psum(s)"
+                + (f" plus {others}" if others else "")
+                + " — the one-psum contract is broken.",
+            ))
+        budget = entry.meta.get("tp_psum_budget_bytes")
+        if psums and budget is not None:
+            nbytes = sum(
+                int(np.prod(v.aval.shape or (1,)))
+                * np.dtype(v.aval.dtype).itemsize
+                for eqn in psums for v in eqn.outvars
+            )
+            if nbytes > budget:
+                findings.append(Finding(
+                    self.name, "error", loc,
+                    f"TP gram-payload psum moves {nbytes} B/shard, over "
+                    f"the entry's budget {budget} B — the payload must "
+                    "stay at gram scale (3*B*p^2 + B scalars), never the "
+                    "matrix itself.",
+                ))
+        return findings
 
 
 class CollectiveBudget:

@@ -212,6 +212,33 @@ def _distance_runs(like: PyTree) -> list:
     return runs
 
 
+def _ef_runs(like: PyTree) -> list:
+    """Contiguous flat-leaf index ranges occupied by TP error-feedback
+    residuals (``core.api.TpEfState``) inside ``like``. Their shapes bake
+    in the saving mesh's TP width — ``(tp_width, B, K)`` — so an elastic
+    restore onto a different TP width resets them to zeros instead of
+    failing the shape check: EF carries only the previous step's
+    quantization error, which re-arms from nothing by construction, while
+    the math state (params, moments, telemetry) restores bit-exactly.
+    """
+    try:
+        from ..core.api import TpEfState
+    except ImportError:  # pragma: no cover - core always ships
+        return []
+    nodes = jax.tree.leaves(
+        like, is_leaf=lambda n: isinstance(n, TpEfState)
+    )
+    runs, cur = [], 0
+    for node in nodes:
+        if isinstance(node, TpEfState):
+            k = len(jax.tree.leaves(node))
+            runs.append((cur, cur + k))
+            cur += k
+        else:
+            cur += 1
+    return runs
+
+
 def _load_leaf(path: str, meta: dict) -> np.ndarray:
     fpath = os.path.join(path, meta["file"])
     stored = (
@@ -276,6 +303,7 @@ def restore(directory: str, step: int, like: PyTree, *, shardings: PyTree = None
         ) from e
     leaves_like, treedef = jax.tree.flatten(like)
     runs = _distance_runs(like)
+    ef_runs = _ef_runs(like)
     n_like, n_ckpt = len(leaves_like), manifest["n_leaves"]
     legacy = False
     if n_ckpt != n_like:
@@ -308,6 +336,9 @@ def restore(directory: str, step: int, like: PyTree, *, shardings: PyTree = None
     def in_distance_run(i: int) -> bool:
         return any(start <= i < stop for start, stop in runs)
 
+    def in_ef_run(i: int) -> bool:
+        return any(start <= i < stop for start, stop in ef_runs)
+
     def ckpt_index(i: int):
         """Map a ``like`` flat index to its checkpoint leaf, or None for a
         distance slot whose legacy counterpart was dropped."""
@@ -321,11 +352,19 @@ def restore(directory: str, step: int, like: PyTree, *, shardings: PyTree = None
         return i + (n_ckpt - n_like)
 
     telemetry_reset = False
+    ef_reset = False
     out = []
     for i, (ref, sh) in enumerate(zip(leaves_like, shard_leaves)):
         j = ckpt_index(i)
         arr = None if j is None else _load_leaf(path, manifest["leaves"][j])
-        if arr is None or (
+        if (arr is not None and tuple(arr.shape) != tuple(ref.shape)
+                and in_ef_run(i)):
+            # TP width changed between save and restore: the EF residual
+            # re-arms from zeros (see _ef_runs); everything else restores
+            # bit-exactly.
+            arr = np.zeros(ref.shape, np.float32)
+            ef_reset = True
+        elif arr is None or (
             tuple(arr.shape) != tuple(ref.shape) and in_distance_run(i)
         ):
             arr = np.zeros(ref.shape, np.float32)
@@ -344,6 +383,15 @@ def restore(directory: str, step: int, like: PyTree, *, shardings: PyTree = None
             "telemetry was dropped and re-initialized to zeros in the "
             "grouped layout (recomputed on the next optimizer step)",
             DeprecationWarning,
+            stacklevel=2,
+        )
+    if ef_reset:
+        warnings.warn(
+            "restored a TP-compressed checkpoint onto a different TP "
+            "width: error-feedback residuals were re-initialized to zeros "
+            "(the carried quantization error re-arms on the next step; "
+            "all other state restored bit-exactly)",
+            RuntimeWarning,
             stacklevel=2,
         )
     return jax.tree.unflatten(treedef, out)

@@ -54,6 +54,7 @@ from .schedule import (  # noqa: F401  (re-exported public API)
     GroupPlan,
     GroupSpec,
     plan_groups,
+    tp_spec,
 )
 
 Array = jax.Array
@@ -861,6 +862,25 @@ class WatchdogState(NamedTuple):
     escalations: tuple  # per-group () int32
 
 
+class TpEfState(NamedTuple):
+    """Error-feedback residuals of the compressed TP gram all-reduce
+    (``tp_compress=True``), carried in ``OrthoState.extras``.
+
+    ``residuals[g]`` is a ``(tp_width, B_g, K)`` fp32 array — each TP
+    shard's quantization residual of the group's payload all-reduce
+    (K = ``kernels.ref.tp_payload_width``), laid out shard-major so the
+    shard_map schedule partitions it ``P(tp, dp, None)`` and every shard
+    reads/writes exactly its own carry. ``None`` entries mark groups the
+    TP schedule does not cover (too narrow, non-fp32). The shapes bake in
+    the mesh's TP width: the driver re-arms from zeros on any mismatch
+    (fresh runs, checkpoints restored onto a different TP width — the
+    math state restores bit-exactly, only the carried quantization error
+    resets, which EF tolerates by construction).
+    """
+
+    residuals: tuple  # per-group (tp_width, B, K) fp32 | None
+
+
 @dataclasses.dataclass(frozen=True)
 class OrthoConfig:
     """Driver-level knobs shared by every method (see DESIGN.md §Driver)."""
@@ -877,6 +897,10 @@ class OrthoConfig:
     # methods without ragged support)
     watchdog: Optional[WatchdogConfig] = None  # feasibility watchdog +
     # drift repair; None (default) compiles the exact unguarded step
+    tp_compress: bool = False  # int8 error-feedback TP gram all-reduce
+    # (DESIGN.md §Tensor-parallel execution): trades the one-psum
+    # invariant (two collectives instead of one) for ~4x less wire
+    # traffic; EF residuals ride OrthoState.extras as a TpEfState
 
 
 @dataclasses.dataclass(frozen=True)
@@ -984,6 +1008,7 @@ def orthogonal(
     seed: int = 0,
     grouping: str = "auto",
     watchdog: Optional[WatchdogConfig] = None,
+    tp_compress: bool = False,
     **method_kwargs,
 ) -> GradientTransformation:
     """Build any registered orthoptimizer by name. See module docstring.
@@ -1011,6 +1036,7 @@ def orthogonal(
             seed=seed,
             grouping=grouping,
             watchdog=watchdog,
+            tp_compress=tp_compress,
             **method_kwargs,
         )
     except TypeError as e:
@@ -1070,6 +1096,58 @@ def _run_group_step(fn, group: GroupSpec, ops: tuple, out_ndims: tuple):
     )
     if wrapped is None:
         return fn(*ops)
+    return wrapped(*ops)
+
+
+def _pad_cols(x: Array, n_pad: int) -> Array:
+    """Zero-pad the trailing (n) axis to the TP shard granularity."""
+    if x.shape[-1] == n_pad:
+        return x
+    return jnp.pad(x, [(0, 0)] * (x.ndim - 1) + [(0, n_pad - x.shape[-1])])
+
+
+def _mesh_tp_axis():
+    """``(axis_name, width)`` of the mesh TP axis, or ``None`` — the
+    trace-time gate of the DPxTP group schedule. Lazy import like
+    :func:`_run_group_step`: distributed is optional at this layer."""
+    try:
+        from ..distributed import shard_hints
+    except ImportError:  # pragma: no cover - distributed always ships
+        return None
+    return shard_hints.tp_axis()
+
+
+def _run_group_step_tp(fn, group: GroupSpec, n_pad: int, ops: tuple,
+                       out_kinds: tuple):
+    """Run one group step under the DPxTP ``shard_map`` schedule.
+
+    The TP sibling of :func:`_run_group_step`: operands split over batch
+    on the DP axes *and* over the (padded) trailing n axis on the model
+    axis, so no device materializes a full matrix and the fused TP body's
+    single payload psum is the only cross-device traffic
+    (DESIGN.md §Tensor-parallel execution). Returns ``None`` when the
+    schedule cannot apply (no mesh / no model axis / bad divisibility) —
+    the caller keeps its fallback; the driver's gates make that a cold
+    path, not a silent perf cliff.
+    """
+    try:
+        from ..distributed import shard_hints
+    except ImportError:  # pragma: no cover - distributed always ships
+        return None
+    m0 = group.members[0]
+    simple = (
+        len(group.members) == 1 and not m0.transpose and len(m0.lead) == 1
+    )
+    # Same CPU host-platform concat miscompile workaround as the DP
+    # schedule (shard_hints.shard_group_step): gathered stacks consumed
+    # sharded produce WRONG VALUES off-TPU unless pinned replicated first.
+    pin = (not simple) and jax.default_backend() == "cpu"
+    res = shard_hints.shard_group_step_tp(
+        fn, group.batch, n_pad, out_kinds, pin_inputs=pin
+    )
+    if res is None:
+        return None
+    wrapped, _, _ = res
     return wrapped(*ops)
 
 
@@ -1140,7 +1218,12 @@ def _build(method: Method, cfg: OrthoConfig) -> GradientTransformation:
                     "grouping='auto' or 'per_leaf'"
                 )
             return plan
-        return plan_groups(leaves, treedef, grouping)
+        # TP-aware megagroup cost model: padded n rounds to shard x tile
+        # granularity, changing only merge decisions (schedule.padded_n).
+        ax = _mesh_tp_axis()
+        return plan_groups(
+            leaves, treedef, grouping, tp_shards=ax[1] if ax else 1
+        )
 
     def init(params):
         base_state = base.init(params) if base else ()
@@ -1178,6 +1261,27 @@ def _build(method: Method, cfg: OrthoConfig) -> GradientTransformation:
             jnp.issubdtype(grp.dtype, jnp.complexfloating)
             for grp in plan.groups
         )
+        # DPxTP routing (DESIGN.md §Tensor-parallel execution) — a static
+        # per-group decision, like fused routing. The one-psum TP step
+        # applies when the step is fused and unguarded (no watchdog, no
+        # Newton-Schulz safety projection: both reason about the full
+        # matrix), the group's storage dtype is exactly fp32 (the
+        # kernel's accumulation dtype, so fused telemetry needs no
+        # post-cast re-measure), the mesh has a TP axis and the group is
+        # wide enough that every shard owns real columns.
+        tp_ax = _mesh_tp_axis()
+        tp_now = (
+            fused_now and wd is None and not cfg.safety_project_every
+            and tp_ax is not None
+        )
+        tp_specs = tuple(
+            tp_spec(grp.n, tp_ax[1], axis=tp_ax[0])
+            if tp_now and jnp.dtype(grp.dtype) == jnp.dtype(jnp.float32)
+            else None
+            for grp in plan.groups
+        )
+        ef_prev = state.extras if isinstance(state.extras, TpEfState) else None
+        new_ef: list = [None] * len(plan.groups)
         mu_leaves = nu_leaves = None
         base_count = None
         if fused_now:
@@ -1325,6 +1429,56 @@ def _build(method: Method, cfg: OrthoConfig) -> GradientTransformation:
                 y = (xg + ug).astype(jnp.promote_types(xg.dtype, jnp.float32))
                 dist = _measure(y, pv)
             return ug, dist.astype(jnp.float32), mu2, nu2
+
+        def group_step_fused_tp(group: GroupSpec, xg: Array, gg: Array,
+                                mug, nug, eta, count, bcount, pv, nv, ef):
+            """shard_map body of the one-psum TP group step: each (dp, tp)
+            shard sees its ``(B_local, p, n_local)`` columns, computes the
+            local gram contributions in VMEM
+            (``kernels.ops.fused_group_step_tp_partial``), and exactly one
+            psum over the TP axis assembles the full ``(B, p, p)`` grams —
+            leap/land polynomial, moment update and telemetry then apply
+            column-locally with no further collective
+            (``fused_group_step_tp_finish``). With error feedback
+            (``tp_compress=True``) the payload rides int8 through
+            ``compression.compressed_psum_sum`` instead, carrying the
+            quantization residual in ``ef`` (this shard's ``(1, B, K)``
+            block of the group's :class:`TpEfState` leaf).
+
+            ``dist``/``nu'`` derive from the replicated post-psum grams
+            only, so they are bit-identical on every TP shard and leave
+            the shard_map DP-sharded (out kind ``"b"``); ``nv`` rides as
+            part of the group operand contract (column padding is exact
+            zeros through the gram algebra, so only ``pv`` is consumed).
+            """
+            from ..kernels import ops as kops
+
+            x32 = xg.astype(_accum_dtype(xg.dtype))
+            g32 = gg.astype(x32.dtype)
+            payload, gbase, mu2 = kops.fused_group_step_tp_partial(
+                x32, g32,
+                base_kind=fused_base.kind, hyper=fused_base.hyper,
+                post_scale=fused_base.post_scale, mu=mug,
+            )
+            if ef is None:
+                total = jax.lax.psum(payload, tp_ax[0])
+                ef2 = None
+            else:
+                from ..distributed import compression
+
+                total, res = compression.compressed_psum_sum(
+                    payload, tp_ax[0], ef[0]
+                )
+                ef2 = res[None]
+            x2, nu2, dist, _ = kops.fused_group_step_tp_finish(
+                x32, gbase, total, eta,
+                method=method.fused_stage, lam=method.lam,
+                base_kind=fused_base.kind, hyper=fused_base.hyper,
+                post_scale=fused_base.post_scale,
+                nu=nug, count=bcount, pv=pv,
+            )
+            ug = (x2 - x32).astype(xg.dtype)
+            return ug, dist.astype(jnp.float32), mu2, nu2, ef2
 
         def _repair(xg, ug, dist, pv, thresh):
             """Hard-threshold drift repair: per-matrix Newton-Schulz
@@ -1477,12 +1631,63 @@ def _build(method: Method, cfg: OrthoConfig) -> GradientTransformation:
                          None if nug is None else 1, 1),
                     )
                 else:
-                    ug, dist, mu2, nu2 = _run_group_step(
-                        functools.partial(group_step_fused, group), group,
-                        (xg, gg, mug, nug, eta32, count, base_count, pv, nv),
-                        (3, 1, None if mug is None else 3,
-                         None if nug is None else 1),
-                    )
+                    spec = tp_specs[gi]
+                    res = None
+                    if spec is not None:
+                        # Zero-pad n to shard granularity (exactly inert
+                        # through the TP algebra — TpSpec docstring) and
+                        # crop after; the EF carry re-arms from zeros on
+                        # any shape mismatch (fresh run, TP width change).
+                        efg = None
+                        if cfg.tp_compress:
+                            from ..kernels import ref as kref
+
+                            kw = kref.tp_payload_width(
+                                group.p, fused_base.kind
+                            )
+                            ef_shape = (spec.width, group.batch, kw)
+                            if (ef_prev is not None
+                                    and len(ef_prev.residuals)
+                                    == len(plan.groups)
+                                    and getattr(
+                                        ef_prev.residuals[gi], "shape", None
+                                    ) == ef_shape):
+                                efg = ef_prev.residuals[gi]
+                            else:
+                                efg = jnp.zeros(ef_shape, jnp.float32)
+                        mug_p = (
+                            _pad_cols(mug, spec.n_pad)
+                            if mug is not None else None
+                        )
+                        res = _run_group_step_tp(
+                            functools.partial(group_step_fused_tp, group),
+                            group, spec.n_pad,
+                            (_pad_cols(xg, spec.n_pad),
+                             _pad_cols(gg, spec.n_pad),
+                             mug_p, nug, eta32, count, base_count, pv, nv,
+                             efg),
+                            ("xn", "b",
+                             None if mug is None else "xn",
+                             None if nug is None else "b",
+                             None if efg is None else "ef"),
+                        )
+                    if res is not None:
+                        ug, dist, mu2, nu2, new_ef[gi] = res
+                        if spec.padded:
+                            ug = ug[..., :group.n]
+                            if mu2 is not None:
+                                mu2 = mu2[..., :group.n]
+                    else:
+                        # No TP spec, or the mesh vanished between trace
+                        # decisions — the DP-or-unsharded fused dispatch.
+                        ug, dist, mu2, nu2 = _run_group_step(
+                            functools.partial(group_step_fused, group),
+                            group,
+                            (xg, gg, mug, nug, eta32, count, base_count,
+                             pv, nv),
+                            (3, 1, None if mug is None else 3,
+                             None if nug is None else 1),
+                        )
                 if mu2 is not None:
                     _scatter_group(group, mu2, mu_out)
                 if nu2 is not None:
@@ -1537,6 +1742,8 @@ def _build(method: Method, cfg: OrthoConfig) -> GradientTransformation:
                 repairs=tuple(new_repairs),
                 escalations=tuple(new_escalations),
             )
+        elif cfg.tp_compress and any(e is not None for e in new_ef):
+            extras = TpEfState(residuals=tuple(new_ef))
         return updates, OrthoState(
             count=count,
             base_state=base_state,

@@ -232,43 +232,103 @@ def _tile() -> tuple[int, int]:
     return (_SUBLANE, _LANE) if jax.default_backend() == "tpu" else (1, 1)
 
 
-def aligned_stack_bytes(p: int, n: int, batch: int, dtype) -> int:
+def padded_n(n: int, tp_shards: int = 1) -> int:
+    """n at the execution schedule's padding granularity: lane-aligned,
+    and under TP rounded so every shard's LOCAL column count is itself
+    lane-aligned — padded n rounds up to shard x tile granularity (the
+    TP-aware megagroup cost model and the driver's divisibility/padding
+    logic share this one definition)."""
+    _, tn = _tile()
+    if tp_shards <= 1:
+        return _round_up(n, tn)
+    local = _round_up(-(-n // tp_shards), tn)
+    return local * tp_shards
+
+
+def aligned_stack_bytes(p: int, n: int, batch: int, dtype,
+                        tp_shards: int = 1) -> int:
     """Bytes of one ``(B, p, n)`` stack at the backend's padding
     granularity (:func:`_tile`): MXU-aligned on TPU (shapes inside one
-    8x128 tile merge for free), true bytes elsewhere."""
+    8x128 tile merge for free), true bytes elsewhere. ``tp_shards > 1``
+    charges the TP execution schedule's padding (:func:`padded_n`)."""
     itemsize = jnp.dtype(dtype).itemsize
-    tp, tn = _tile()
-    return batch * _round_up(p, tp) * _round_up(n, tn) * itemsize
+    tp, _ = _tile()
+    return batch * _round_up(p, tp) * padded_n(n, tp_shards) * itemsize
 
 
 def dispatch_cost_bytes(
     p: int, n: int, batch: int, dtype,
     overhead_bytes: int = DISPATCH_OVERHEAD_BYTES,
+    tp_shards: int = 1,
 ) -> float:
     """Modelled cost of dispatching one ``(B, p, n)`` group, in HBM-byte
     equivalents: fixed per-dispatch overhead + padded traffic over the
     fused step's HBM passes, with a mild penalty when the per-matrix
     working set no longer fits the whole-matrix kernel's VMEM budget
     (reusing the autotuner's accounting — ``kernels.ops`` is the single
-    source of truth for the VMEM model)."""
+    source of truth for the VMEM model). Under TP (``tp_shards > 1``)
+    the traffic is the TP-padded stack and the VMEM fit is checked on
+    the LOCAL column count — an n-sharded group that fits per shard is
+    not penalized for its global width."""
     from ..kernels import ops as kops  # lazy: core must import without pallas
 
     traffic = kops.FUSED_TRACE_HBM_PASSES * aligned_stack_bytes(
-        p, n, batch, dtype
+        p, n, batch, dtype, tp_shards
     )
     p_pad = _round_up(p, _SUBLANE)
-    n_pad = _round_up(n, _LANE)
+    n_fit = padded_n(n, tp_shards) // max(tp_shards, 1)
+    n_fit = _round_up(n_fit, _LANE)
     if not jnp.issubdtype(jnp.dtype(dtype), jnp.complexfloating) and any(
-        kops.whole_vmem_bytes(p_pad, n_pad, s) > kops.VMEM_BUDGET_BYTES
+        kops.whole_vmem_bytes(p_pad, n_fit, s) > kops.VMEM_BUDGET_BYTES
         for s in _WORST_STAGE_SETS
     ):
         traffic = _TILED_PENALTY * traffic
     return overhead_bytes + traffic
 
 
+# --------------------------------------------------------- tensor parallelism
+
+
+@dataclasses.dataclass(frozen=True)
+class TpSpec:
+    """Static n-axis sharding plan for one constraint group.
+
+    ``width`` devices along ``axis`` each own ``local_n`` contiguous
+    columns of the group's stacked tensor, zero-padded from the true
+    ``n`` to ``n_pad = width * local_n`` (lane-aligned per shard on TPU).
+    Zero column padding is exactly inert through the TP algebra: padded
+    columns contribute zero to every gram partial and receive exact
+    zeros from the column-local finish, so the driver pads before the
+    shard_map and crops after."""
+
+    width: int
+    axis: str
+    n: int
+    n_pad: int
+    local_n: int
+
+    @property
+    def padded(self) -> bool:
+        return self.n_pad != self.n
+
+
+def tp_spec(n: int, width: int, axis: str = "model") -> Optional[TpSpec]:
+    """TP plan for a group of column count ``n`` over ``width`` devices,
+    or ``None`` when TP cannot help (width < 2, or the matrices are so
+    narrow that a shard would own only padding)."""
+    if width < 2:
+        return None
+    n_pad = padded_n(n, width)
+    local = n_pad // width
+    if local * (width - 1) >= n:  # some shard would be pure padding
+        return None
+    return TpSpec(width=width, axis=axis, n=n, n_pad=n_pad, local_n=local)
+
+
 def plan_megagroups(
     shapes: list[tuple[int, int, int, Any]],
     overhead_bytes: int = DISPATCH_OVERHEAD_BYTES,
+    tp_shards: int = 1,
 ) -> list[list[int]]:
     """Partition exact buckets into padded megagroups.
 
@@ -288,7 +348,7 @@ def plan_megagroups(
         nmax = max(shapes[i][1] for i in idxs)
         bsum = sum(shapes[i][2] for i in idxs)
         return dispatch_cost_bytes(
-            pmax, nmax, bsum, shapes[idxs[0]][3], overhead_bytes
+            pmax, nmax, bsum, shapes[idxs[0]][3], overhead_bytes, tp_shards
         )
 
     while len(groups) > 1:
@@ -338,6 +398,7 @@ def _finalize_group(p, n, dtype, members) -> GroupSpec:
 def plan_groups(
     leaves, treedef, grouping: str = "auto",
     pad_overhead_bytes: int = DISPATCH_OVERHEAD_BYTES,
+    tp_shards: int = 1,
 ) -> GroupPlan:
     """Bucket flat param ``leaves`` into :class:`GroupSpec` batches.
 
@@ -349,6 +410,9 @@ def plan_groups(
     within a group. ``grouping="padded"`` merges the exact buckets into
     megagroups chosen by :func:`plan_megagroups`, padding members to the
     megagroup shape and recording true shapes in ``GroupSpec.valid``.
+    ``tp_shards`` makes the megagroup cost model TP-aware (padded n
+    rounds to shard x tile granularity — :func:`padded_n`); it changes
+    only merge decisions, never the group contract.
     """
     if grouping not in GROUPINGS:
         raise ValueError(
@@ -357,7 +421,7 @@ def plan_groups(
     buckets, n_matrices = _exact_buckets(leaves, grouping)
     if grouping == "padded" and len(buckets) > 1:
         shapes = [(b["p"], b["n"], b["batch"], b["dtype"]) for b in buckets]
-        partition = plan_megagroups(shapes, pad_overhead_bytes)
+        partition = plan_megagroups(shapes, pad_overhead_bytes, tp_shards)
         groups = []
         for idxs in partition:
             p = max(buckets[i]["p"] for i in idxs)

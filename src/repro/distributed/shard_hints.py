@@ -135,6 +135,113 @@ def shard_group_step(fn, batch: int, out_ndims, *, pin_inputs: bool = False):
     return wrapped
 
 
+def tp_axis():
+    """``(axis_name, width)`` of the mesh axis the TP group schedule
+    partitions n over, or ``None``. The "model" axis is TP's home: the DP
+    group schedule (:func:`_batch_axes` in the default "2d" mode) never
+    claims it, so batch and n partition disjoint axes of the same mesh.
+    In "dp" mode every axis belongs to the batch — no TP."""
+    if _MESH is None or _MODE == "dp":
+        return None
+    width = _MESH.shape.get("model", 1)
+    if width < 2:
+        return None
+    return "model", int(width)
+
+
+def shard_group_step_tp(fn, batch: int, n: int, out_kinds, *,
+                        pin_inputs: bool = False):
+    """DPxTP ``shard_map`` schedule for a constraint group's fused step.
+
+    Extends :func:`shard_group_step` with a second partitioned dimension:
+    the stacked ``(B, p, n)`` operands split over batch on the DP axes
+    *and* over the trailing n axis on the "model" axis, so no device ever
+    materializes a full matrix (DESIGN.md §Tensor-parallel execution).
+    ``fn`` runs once per (dp, tp) shard on its ``(B_local, p, n_local)``
+    block and must contain exactly one psum over the returned TP axis
+    name (the orthocheck ``tp_one_psum`` contract).
+
+    ``out_kinds`` is a pytree of per-output markers:
+      * ``"xn"``   — batch-leading, n-trailing (x', mu'): P(dp, None.., tp)
+      * ``"b"``    — per-matrix (dist, nu'): P(dp); the value must be
+        TP-replicated by construction (the TP finish derives it from the
+        post-psum grams only)
+      * ``"ef"``   — TP-resident error-feedback state (tp, B, K):
+        P(tp, dp, None)
+      * ``None``   — an output ``fn`` returns as None
+
+    Operands are classified the same way: rank >= 2 arrays with
+    ``shape[0] == batch and shape[-1] == n`` split over (dp, tp); other
+    batch-leading arrays over dp only; a ``(tp_width, batch, ...)`` EF
+    leaf over (tp, dp); everything else replicated. When B divides no DP
+    subset the step stays batch-replicated and TP-only. Returns
+    ``(wrapped, axis_name, tp_width)`` or ``None`` when no mesh / no
+    usable model axis / n not divisible by the TP width (the driver pads
+    n to shard granularity before asking — core/schedule.py ``tp_spec``).
+
+    ``pin_inputs`` replays the CPU host-platform concat workaround of
+    :func:`shard_group_step` (see its docstring).
+    """
+    if _MESH is None or batch < 1:
+        return None
+    tp = tp_axis()
+    if tp is None:
+        return None
+    tname, twidth = tp
+    if n % twidth != 0:
+        return None
+    axes = _batch_axes(_MESH, batch) if batch > 1 else None
+    from .compat import shard_map
+
+    mesh = _MESH
+
+    def dp_spec(nd):
+        return P(axes, *([None] * (nd - 1)))
+
+    def spec_for_kind(kind):
+        if kind is None:
+            return None
+        if kind == "xn":
+            return P(axes, None, tname)
+        if kind == "b":
+            return dp_spec(1)
+        if kind == "ef":
+            return P(tname, axes, None)
+        raise ValueError(f"unknown TP out kind {kind!r}")
+
+    out_specs = jax.tree.map(
+        spec_for_kind, out_kinds,
+        is_leaf=lambda k: k is None or isinstance(k, str),
+    )
+    replicated = NamedSharding(mesh, P())
+
+    def in_spec(a):
+        if getattr(a, "ndim", 0) == 0:
+            return P()
+        if a.ndim >= 2 and a.shape[0] == batch and a.shape[-1] == n:
+            return P(axes, *([None] * (a.ndim - 2)), tname)
+        if a.ndim >= 2 and a.shape[0] == twidth and a.shape[1] == batch:
+            return P(tname, axes, *([None] * (a.ndim - 2)))
+        if a.ndim >= 1 and a.shape[0] == batch:
+            return dp_spec(a.ndim)
+        return P()
+
+    def wrapped(*args):
+        if pin_inputs:
+            args = tuple(
+                jax.lax.with_sharding_constraint(a, replicated)
+                if getattr(a, "ndim", 0) >= 1 else a
+                for a in args
+            )
+        in_specs = jax.tree.map(in_spec, tuple(args))
+        return shard_map(
+            fn, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+            check_vma=False,
+        )(*args)
+
+    return wrapped, tname, twidth
+
+
 def activation(x: jax.Array, model_dim: Optional[int] = None) -> jax.Array:
     """Pin batch dim -> (pod, data); optionally one dim -> model."""
     if _MESH is None or x.ndim == 0:

@@ -241,6 +241,235 @@ def fused_step_whole(
     return x2, mu2, nu2, dist
 
 
+# ------------------------------------------------------------ tensor-parallel
+#
+# The TP execution schedule (DESIGN.md §Tensor-parallel execution) splits
+# each matrix's n axis across a "model" mesh axis. Two whole-block kernels
+# bracket the single psum:
+#
+#   * ``tp_gram_whole``  — the shard's base-stage moments plus its partial
+#     contribution to the three (p, p) grams A = X X^T, B = X Gb^T,
+#     S = Gb Gb^T (vadam grams over the UNSCALED first moment; the scalar
+#     normalization commutes and is applied post-psum).
+#   * ``tp_apply_whole`` — the column-local finish on the full post-psum
+#     grams: R's local columns need only (A, B), and C = M M^T is exact
+#     gram algebra (tangency: C = A + eta^2 R R^T — see ref.py), so the
+#     leap/land polynomial, update and telemetry all run with no further
+#     collective and no (n x n)-sized intermediate.
+#
+# Both are whole-matrix variants over the LOCAL columns (n_local = n / TP);
+# the ops dispatcher falls back to the jnp reference when the local working
+# set does not fit the VMEM plan (no tiled TP variant yet — a TP shard's
+# n_local is by construction 1/width of the full n).
+
+
+def _tp_gram_kernel(scal_ref, *refs, base_kind, nesterov):
+    """Grid over batch: base moments on the shard's columns + the three
+    (p, p) gram partials and (vadam) the raw sum-of-squares partial. Also
+    writes the scaled gram operand ``gb`` so the apply stage re-reads it
+    instead of re-deriving the base stage."""
+    it = iter(refs)
+    x_ref = next(it)
+    g_ref = next(it)
+    mu_ref = next(it) if base_kind != "none" else None
+    a_ref = next(it)
+    b_ref = next(it)
+    s_ref = next(it)
+    gb_ref = next(it)
+    mu_out = next(it) if base_kind != "none" else None
+    sq_ref = next(it) if base_kind == "vadam" else None
+
+    x = x_ref[...].astype(jnp.float32)
+    g = g_ref[...].astype(jnp.float32)
+    ps = scal_ref[2]
+    if base_kind == "none":
+        gb = ps * g
+    elif base_kind == "trace":
+        decay = scal_ref[3]
+        mu2 = decay * mu_ref[...].astype(jnp.float32) + g
+        mu_out[...] = mu2.astype(mu_out.dtype)
+        gb = ps * (decay * mu2 + g if nesterov else mu2)
+    else:  # vadam: per-matrix scalar deferred to the post-psum apply stage
+        b1 = scal_ref[3]
+        mu2 = b1 * mu_ref[...].astype(jnp.float32) + (1.0 - b1) * g
+        mu_out[...] = mu2.astype(mu_out.dtype)
+        gb = mu2
+        sq_ref[...] = jnp.sum(g * g, axis=(1, 2))[:, None]
+    gb_ref[...] = gb
+    a_ref[...] = _dot(x, x, _DN)
+    b_ref[...] = _dot(x, gb, _DN)
+    s_ref[...] = _dot(gb, gb, _DN)
+
+
+def tp_gram_whole(
+    x: Array,
+    g: Array,
+    mu: Array | None,
+    scal: Array,
+    *,
+    base_kind: str,
+    nesterov: bool = False,
+    block_b: int = 1,
+    interpret: bool = False,
+):
+    """TP partial-gram stage. x, g, mu the shard's padded/aligned
+    ``(B, p, n_local)`` columns; scal the N_SCALARS vector (only
+    ``post_scale`` and ``h0`` are read here). Returns
+    ``(a, b, s, gb, mu', sq)`` — the (B, p, p) fp32 gram partials, the
+    fp32 gram operand, and ``mu'``/``sq`` per ``base_kind``."""
+    bsz, p, n = x.shape
+    assert bsz % block_b == 0, (bsz, block_b)
+    mat_spec = pl.BlockSpec((block_b, p, n), lambda i, s: (i, 0, 0))
+    pp_spec = pl.BlockSpec((block_b, p, p), lambda i, s: (i, 0, 0))
+    col_spec = pl.BlockSpec((block_b, 1), lambda i, s: (i, 0))
+    in_specs = [mat_spec, mat_spec]
+    operands = [x, g]
+    if base_kind != "none":
+        in_specs.append(mat_spec)
+        operands.append(mu)
+    out_specs = [pp_spec, pp_spec, pp_spec, mat_spec]
+    out_shape = [jax.ShapeDtypeStruct((bsz, p, p), jnp.float32)] * 3 + [
+        jax.ShapeDtypeStruct((bsz, p, n), jnp.float32)
+    ]
+    if base_kind != "none":
+        out_specs.append(mat_spec)
+        out_shape.append(jax.ShapeDtypeStruct(mu.shape, mu.dtype))
+    if base_kind == "vadam":
+        out_specs.append(col_spec)
+        out_shape.append(jax.ShapeDtypeStruct((bsz, 1), jnp.float32))
+    outs = pl.pallas_call(
+        functools.partial(
+            _tp_gram_kernel, base_kind=base_kind, nesterov=nesterov
+        ),
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=(bsz // block_b,),
+            in_specs=in_specs,
+            out_specs=out_specs,
+        ),
+        out_shape=out_shape,
+        interpret=interpret,
+    )(scal, *operands)
+    outs = list(outs)
+    a, b, s, gb = outs.pop(0), outs.pop(0), outs.pop(0), outs.pop(0)
+    mu2 = outs.pop(0) if base_kind != "none" else None
+    sq = outs.pop(0) if base_kind == "vadam" else None
+    return a, b, s, gb, mu2, sq
+
+
+def _tp_apply_kernel(scal_ref, *refs, method, base_kind, p_valid, ragged):
+    """Column-local finish on the full post-psum grams (gram-only algebra;
+    the numerics contract is ref.tp_finish_ref)."""
+    eta = scal_ref[0]
+    lam = scal_ref[1]
+    it = iter(refs)
+    x_ref = next(it)
+    gb_ref = next(it)
+    a_ref = next(it)
+    b_ref = next(it)
+    s_ref = next(it)
+    scl_ref = next(it) if base_kind == "vadam" else None
+    pv_ref = next(it) if ragged else None
+    o_ref = next(it)
+    dist_ref = next(it)
+
+    x = x_ref[...].astype(jnp.float32)
+    a = a_ref[...]
+    b = b_ref[...]
+    s = s_ref[...]
+    geff = gb_ref[...].astype(jnp.float32)
+    if base_kind == "vadam":
+        scl = scl_ref[...][:, :, None]  # (bm, 1, 1)
+        geff = scl * geff
+        b = scl * b
+        s = (scl * scl) * s
+    bt = jnp.swapaxes(b, -1, -2)
+    r = 0.5 * (_dot(a, geff, _DP) - _dot(b, x, _DP))
+    rr = 0.25 * (
+        _dot(_dot(a, s, _DP), a, _DP)
+        - _dot(_dot(a, bt, _DP), bt, _DP)
+        - _dot(_dot(b, b, _DP), a, _DP)
+        + _dot(_dot(b, a, _DP), bt, _DP)
+    )
+    if method == "pogo":
+        m = x - eta * r
+        c = a + (eta * eta) * rr  # C = M M^T via exact tangency
+        o_ref[...] = ((1.0 + lam) * m - lam * _dot(c, m, _DP)).astype(o_ref.dtype)
+        cc = _dot(c, c, _DP)
+        ccc = _dot(cc, c, _DP)
+        w = (1.0 + lam) ** 2 * c - 2.0 * lam * (1.0 + lam) * cc + lam**2 * ccc
+    else:  # landing
+        o_ref[...] = (
+            x - eta * (r + lam * (_dot(a, x, _DP) - x))
+        ).astype(o_ref.dtype)
+        a2 = _dot(a, a, _DP)
+        rx = 0.5 * (_dot(a, bt, _DP) - _dot(b, a, _DP))  # R X^T
+        rn = _dot(rx, a, _DP) - rx  # R N^T, N = (A - I) X
+        nn = _dot(a2, a, _DP) - 2.0 * a2 + a  # N N^T = A^3 - 2A^2 + A
+        fft = rr + lam * (rn + jnp.swapaxes(rn, -1, -2)) + lam * lam * nn
+        w = a - 2.0 * eta * lam * (a2 - a) + (eta * eta) * fft
+    if ragged:
+        dist_ref[...] = _residual_dist_ragged(w, pv_ref[...])[:, None]
+    else:
+        dist_ref[...] = _residual_dist(w, p_valid)[:, None]
+
+
+def tp_apply_whole(
+    x: Array,
+    gb: Array,
+    a: Array,
+    b: Array,
+    s: Array,
+    scl: Array | None,
+    scal: Array,
+    *,
+    method: str,
+    base_kind: str,
+    block_b: int = 1,
+    interpret: bool = False,
+    p_valid: int | None = None,
+    pv: Array | None = None,
+):
+    """TP finish stage: x/gb the shard's padded ``(B, p, n_local)``
+    columns, a/b/s the full post-psum ``(B, p, p)`` fp32 grams, ``scl``
+    the (B, 1) vadam scalar column (None otherwise). Returns
+    ``(x', dist)`` with dist (B, 1) — identical on every TP shard (a
+    function of the replicated grams only)."""
+    bsz, p, n = x.shape
+    assert bsz % block_b == 0, (bsz, block_b)
+    mat_spec = pl.BlockSpec((block_b, p, n), lambda i, s_: (i, 0, 0))
+    pp_spec = pl.BlockSpec((block_b, p, p), lambda i, s_: (i, 0, 0))
+    col_spec = pl.BlockSpec((block_b, 1), lambda i, s_: (i, 0))
+    in_specs = [mat_spec, mat_spec, pp_spec, pp_spec, pp_spec]
+    operands = [x, gb, a, b, s]
+    if base_kind == "vadam":
+        in_specs.append(col_spec)
+        operands.append(scl)
+    if pv is not None:
+        in_specs.append(col_spec)
+        operands.append(pv)
+    out_specs = [mat_spec, col_spec]
+    out_shape = [
+        jax.ShapeDtypeStruct(x.shape, x.dtype),
+        jax.ShapeDtypeStruct((bsz, 1), jnp.float32),
+    ]
+    x2, dist = pl.pallas_call(
+        functools.partial(
+            _tp_apply_kernel, method=method, base_kind=base_kind,
+            p_valid=p if p_valid is None else p_valid, ragged=pv is not None,
+        ),
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=(bsz // block_b,),
+            in_specs=in_specs,
+            out_specs=out_specs,
+        ),
+        out_shape=out_shape,
+        interpret=interpret,
+    )(scal, *operands)
+    return x2, dist
+
+
 # ---------------------------------------------------------------------- tiled
 
 

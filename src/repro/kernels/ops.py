@@ -61,6 +61,10 @@ _WHOLE_COUNTS = {
     "ns": (4, 1),          # x y yyy out | yy
     "fused_pogo": (8, 6),  # + geff | + cc ccc w
     "fused_landing": (9, 3),
+    # TP stages run on the LOCAL columns (n here is n_local = n / width)
+    "tp_gram": (3, 3),         # x g gb | a b s
+    "tp_apply_pogo": (6, 10),  # x gb geff r m out | a b s bt c cc ccc w +2 tmp
+    "tp_apply_landing": (6, 12),
 }
 _BASE_EXTRA_PN = {"none": 0, "trace": 3, "vadam": 3}  # mu_in, mu', comb/scale
 
@@ -471,6 +475,205 @@ def fused_group_step(
     # VMEM-computed residual), outside the planner-keyed dispatch so the
     # compiled kernel programs are untouched.
     return x2, mu2, nu2, dist, jnp.isfinite(dist)
+
+
+# ----------------------------------------- tensor-parallel fused group step
+
+
+def _tp_scal(base_kind, hyper, post_scale, eta=None, lam=None):
+    """N_SCALARS vector for the TP kernels (eta/lam zero for the partial
+    stage, which never reads them)."""
+    h0 = jnp.zeros((), jnp.float32)
+    if base_kind == "trace":
+        h0 = jnp.asarray(hyper[0], jnp.float32)
+    elif base_kind == "vadam":
+        h0 = jnp.asarray(hyper[0], jnp.float32)
+    z = jnp.zeros((), jnp.float32)
+    eta = z if eta is None else jnp.asarray(eta, jnp.float32)
+    lam = z if lam is None else jnp.asarray(lam, jnp.float32)
+    return jnp.stack(
+        [eta, lam, jnp.asarray(post_scale, jnp.float32), h0, z, z, z, z]
+    )
+
+
+def fused_group_step_tp_partial(
+    x, g, *,
+    base_kind: str = "none",
+    hyper: tuple = (),
+    post_scale: float = 1.0,
+    mu=None,
+    interpret: bool | None = None,
+    use_pallas: bool | None = None,
+):
+    """Local (per n-shard) stage of the one-psum TP group step.
+
+    Call inside the shard_map body on the shard's ``(B, p, n_local)``
+    columns; psum the returned ``(B, K)`` payload over the TP axis, then
+    apply :func:`fused_group_step_tp_finish`. Contract and payload layout:
+    ``ref.tp_partial_ref`` / ``ref.tp_payload_width``. Returns
+    ``(payload, gbase_f32, mu')``.
+
+    The kernel planner is consulted on every dispatch — including the
+    off-TPU reference route — so the autotune cache keys on the LOCAL
+    ``n`` this shard actually sees (the TP analog of the per-shard local
+    batch keying, DESIGN.md §Tensor-parallel execution). Only whole-block
+    TP kernels exist; non-whole plans fall back to the jnp reference.
+    """
+    if interpret is None:
+        interpret = _interpret_default()
+    if use_pallas is None:
+        use_pallas = jax.default_backend() == "tpu"
+    bsz, p, n = x.shape
+    kind, arg, p_pad, n_pad = _plan(
+        p, n, bsz, x.dtype, f"tp_gram+{base_kind}", interpret
+    )
+    if not use_pallas or kind != "whole":
+        return ref.tp_partial_ref(
+            x, g, base_kind=base_kind, hyper=hyper, post_scale=post_scale,
+            mu=mu,
+        )
+    nesterov = bool(hyper[1]) if base_kind == "trace" else False
+    scal = _tp_scal(base_kind, hyper, post_scale)
+    block_b = max(1, min(arg, bsz))
+    b_pad = _round_up(bsz, block_b)
+    xp = _pad_b(_pad_pn(x, p_pad, n_pad), b_pad)
+    gp = _pad_b(_pad_pn(g, p_pad, n_pad), b_pad)
+    mup = _pad_b(_pad_pn(mu, p_pad, n_pad), b_pad) if mu is not None else None
+    a, b, s, gb, mu2, sq = _fs.tp_gram_whole(
+        xp, gp, mup, scal, base_kind=base_kind, nesterov=nesterov,
+        block_b=block_b, interpret=interpret,
+    )
+    # Crop the zero pad rows/cols (exact: zero rows add nothing to a gram)
+    # so the payload width matches ref.tp_payload_width on the true p.
+    parts = [
+        a[:bsz, :p, :p].reshape(bsz, -1),
+        b[:bsz, :p, :p].reshape(bsz, -1),
+        s[:bsz, :p, :p].reshape(bsz, -1),
+    ]
+    if base_kind == "vadam":
+        parts.append(sq[:bsz])
+    payload = jnp.concatenate(parts, axis=-1)
+    gbase = gb[:bsz, :p, :n]
+    mu_out = mu2[:bsz, :p, :n] if mu2 is not None else None
+    return payload, gbase, mu_out
+
+
+def fused_group_step_tp_finish(
+    x, gbase, payload, eta, *,
+    method: str,
+    lam,
+    base_kind: str = "none",
+    hyper: tuple = (),
+    post_scale: float = 1.0,
+    nu=None,
+    count=None,
+    pv=None,
+    interpret: bool | None = None,
+    use_pallas: bool | None = None,
+):
+    """Column-local finish of the TP group step on the full post-psum
+    payload (contract: ``ref.tp_finish_ref``). ``dist`` is a function of
+    the replicated grams only, so it is bit-identical on every TP shard.
+    Returns ``(x2_f32, nu', dist, finite)``."""
+    if interpret is None:
+        interpret = _interpret_default()
+    if use_pallas is None:
+        use_pallas = jax.default_backend() == "tpu"
+    bsz, p, n = x.shape
+    kind, arg, p_pad, n_pad = _plan(
+        p, n, bsz, x.dtype, f"tp_apply_{method}+{base_kind}", interpret
+    )
+    if not use_pallas or kind != "whole":
+        return ref.tp_finish_ref(
+            x, gbase, payload, eta, method=method, lam=lam,
+            base_kind=base_kind, hyper=hyper, post_scale=post_scale, nu=nu,
+            count=count, pv=pv,
+        )
+    eta = jnp.asarray(eta, jnp.float32)
+    lam = jnp.asarray(lam, jnp.float32)
+    pp = p * p
+    a = payload[:, :pp].reshape(bsz, p, p)
+    b = payload[:, pp: 2 * pp].reshape(bsz, p, p)
+    s = payload[:, 2 * pp: 3 * pp].reshape(bsz, p, p)
+    nu_out = None
+    scl_col = None
+    if base_kind == "vadam":
+        b1, b2, eps = hyper
+        t = (count + 1).astype(jnp.float32)
+        sq = payload[:, 3 * pp]
+        nu2 = b2 * nu.astype(jnp.float32) + (1.0 - b2) * sq
+        denom = jnp.sqrt(nu2 / (1.0 - b2**t)) + eps
+        scl_col = (post_scale / ((1.0 - b1**t) * denom))[:, None]
+        nu_out = nu2.astype(nu.dtype)
+    scal = _tp_scal(base_kind, hyper, post_scale, eta=eta, lam=lam)
+    block_b = max(1, min(arg, bsz))
+    b_pad = _round_up(bsz, block_b)
+    xp = _pad_b(_pad_pn(x, p_pad, n_pad), b_pad)
+    gbp = _pad_b(_pad_pn(gbase, p_pad, n_pad), b_pad)
+    ap = _pad_b(_pad_pn(a, p_pad, p_pad), b_pad)
+    bp = _pad_b(_pad_pn(b, p_pad, p_pad), b_pad)
+    sp = _pad_b(_pad_pn(s, p_pad, p_pad), b_pad)
+    sclp = _pad_b(scl_col, b_pad) if scl_col is not None else None
+    pvp = (
+        _pad_b(pv.reshape(bsz, 1).astype(jnp.int32), b_pad)
+        if pv is not None else None
+    )
+    x2, dist = _fs.tp_apply_whole(
+        xp, gbp, ap, bp, sp, sclp, scal, method=method, base_kind=base_kind,
+        block_b=block_b, interpret=interpret, p_valid=p, pv=pvp,
+    )
+    x2 = x2[:bsz, :p, :n]
+    dist = dist[:bsz, 0]
+    return x2, nu_out, dist, jnp.isfinite(dist)
+
+
+def fused_group_step_tp(
+    x, g, eta, *,
+    method: str,
+    lam,
+    base_kind: str = "none",
+    hyper: tuple = (),
+    post_scale: float = 1.0,
+    mu=None,
+    nu=None,
+    count=None,
+    pv=None,
+    tp_shards: int = 1,
+    interpret: bool | None = None,
+    use_pallas: bool | None = None,
+):
+    """Single-device TP-schedule step: split ``n`` into ``tp_shards``
+    chunks, left-fold the partial payloads in shard order (bit-matching
+    the mesh psum — the parity contract tests/test_distributed.py pins),
+    finish column-locally on the full matrix. Same 5-tuple as
+    :func:`fused_group_step`. This is the comparator the TP-sharded
+    driver path is bit-pinned against, and the driver's fallback when a
+    TP spec applies but the mesh is gone at dispatch time."""
+    if jnp.issubdtype(x.dtype, jnp.complexfloating):
+        raise ValueError("fused_group_step_tp is real-only (caller must gate)")
+    n = x.shape[-1]
+    assert n % tp_shards == 0, (n, tp_shards)
+    loc = n // tp_shards
+    total = None
+    gbs, mus = [], []
+    for k in range(tp_shards):
+        sl = slice(k * loc, (k + 1) * loc)
+        pay, gb, mo = fused_group_step_tp_partial(
+            x[..., sl], g[..., sl], base_kind=base_kind, hyper=hyper,
+            post_scale=post_scale, mu=None if mu is None else mu[..., sl],
+            interpret=interpret, use_pallas=use_pallas,
+        )
+        total = pay if total is None else total + pay
+        gbs.append(gb)
+        mus.append(mo)
+    gbase = jnp.concatenate(gbs, axis=-1)
+    mu_out = None if mu is None else jnp.concatenate(mus, axis=-1)
+    x2, nu_out, dist, finite = fused_group_step_tp_finish(
+        x, gbase, total, eta, method=method, lam=lam, base_kind=base_kind,
+        hyper=hyper, post_scale=post_scale, nu=nu, count=count, pv=pv,
+        interpret=interpret, use_pallas=use_pallas,
+    )
+    return x2, mu_out, nu_out, dist, finite
 
 
 # -------------------------------------------------------------- newton-schulz

@@ -139,6 +139,56 @@ def test_collective_budget_reports_info_without_budget():
     assert "512 B" in fs[0].detail  # 128 x f32
 
 
+# ------------------------------- CollectiveFree TP one-psum contract
+
+
+def _tp_entry(body, meta, out_specs=P()):
+    """Lower a shard_map body on a 1-device "model" mesh and arm the
+    TP one-psum contract via meta (what _entry_constraint_step_tp sets)."""
+    mesh = Mesh(np.asarray(jax.devices()[:1]), ("model",))
+    fn = shard_map(body, mesh=mesh, in_specs=P(None, "model"),
+                   out_specs=out_specs)
+    entry = lowering.lower_fn(
+        "tp", fn, (jax.ShapeDtypeStruct((4, 8), jnp.float32),), mesh=mesh)
+    return dataclasses.replace(entry, meta=meta)
+
+
+def test_tp_one_psum_within_budget_is_clean():
+    entry = _tp_entry(
+        lambda x: jax.lax.psum(x, "model"),
+        {"tp_one_psum": True, "tp_psum_budget_bytes": 4 * 8 * 4})
+    assert rules.CollectiveFree().check_entry(entry) == []
+
+
+def test_tp_zero_psums_is_flagged():
+    """A TP entry whose body lost its psum (the schedule silently fell
+    back) must be an error, not a clean pass."""
+    entry = _tp_entry(lambda x: x + x, {"tp_one_psum": True},
+                      out_specs=P(None, "model"))
+    fs = rules.CollectiveFree().check_entry(entry)
+    assert [f.severity for f in fs] == ["error"]
+    assert "exactly one psum" in fs[0].detail
+
+
+def test_tp_two_psums_is_flagged():
+    entry = _tp_entry(
+        lambda x: jax.lax.psum(jax.lax.psum(x, "model"), "model"),
+        {"tp_one_psum": True})
+    fs = rules.CollectiveFree().check_entry(entry)
+    assert [f.severity for f in fs] == ["error"]
+    assert "2 psum(s)" in fs[0].detail
+
+
+def test_tp_psum_over_budget_is_flagged():
+    """One psum, but matrix-sized: the gram-scale payload budget fires."""
+    entry = _tp_entry(
+        lambda x: jax.lax.psum(x, "model"),
+        {"tp_one_psum": True, "tp_psum_budget_bytes": 8})
+    fs = rules.CollectiveFree().check_entry(entry)
+    assert [f.severity for f in fs] == ["error"]
+    assert "over" in fs[0].detail and "gram scale" in fs[0].detail
+
+
 # -------------------------------------------- NoWideningPromotion (negative)
 
 

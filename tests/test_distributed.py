@@ -248,8 +248,11 @@ def test_group_shard_map_replaces_cpu_miscompile():
         params = {"a": np.asarray(x[:3]), "b": np.asarray(x[3:])}
         grads = {"a": np.asarray(g[:3]), "b": np.asarray(g[3:])}
 
-        def run(mesh, method, **kw):
-            shard_hints.set_mesh(mesh)
+        def run(mesh, method, mode="2d", **kw):
+            if mesh is None:
+                shard_hints.set_mesh(None)
+            else:
+                shard_hints.set_mesh(mesh, mode)
             try:
                 opt = api.orthogonal(
                     method, learning_rate=0.1,
@@ -261,15 +264,35 @@ def test_group_shard_map_replaces_cpu_miscompile():
             finally:
                 shard_hints.set_mesh(None)
 
-        for method, kw in (("pogo", {}), ("pogo", {"use_kernel": True}),
-                           ("landing", {"safe_step": False}),
-                           ("rsdm", {})):
+        # DP bit-identity through the gathered concat. Non-fused methods
+        # never route to TP, so the default "2d" mode shards batch over
+        # data=4 exactly as at PR 4; the fused pogo step WOULD claim the
+        # model axis for TP in "2d", so its bit-identity pin runs in "dp"
+        # mode (all 8 devices to the batch — per-matrix math still never
+        # crosses shards).
+        for method, mode, kw in (
+                ("pogo", "2d", {}),
+                ("pogo", "dp", {"use_kernel": True}),
+                ("landing", "2d", {"safe_step": False}),
+                ("rsdm", "2d", {})):
             u_ref, d_ref = run(None, method, **kw)
-            u_sh, d_sh = run(mesh, method, **kw)
+            u_sh, d_sh = run(mesh, method, mode=mode, **kw)
             for lr, ls in zip(jax.tree.leaves(u_ref), jax.tree.leaves(u_sh)):
                 assert np.array_equal(lr, ls), (method, kw)
             assert np.array_equal(d_ref, d_sh), (method, kw)
             print(method, kw, "bit-identical")
+
+        # In the default "2d" mode the model axis now belongs to the TP
+        # group schedule, whose chunked grams differ from the literal
+        # single-device gram by O(eps) (parity vs the chunked oracle is
+        # pinned in the TP tests). Here pin only that the gathered-group
+        # TP route returns sane values on the miscompile repro shape — the
+        # CPU partitioner bug produced garbage, not ulp drift.
+        u_ref, d_ref = run(None, "pogo", use_kernel=True)
+        u_tp, d_tp = run(mesh, "pogo", use_kernel=True)
+        for lr, ls in zip(jax.tree.leaves(u_ref), jax.tree.leaves(u_tp)):
+            assert np.allclose(lr, ls, atol=1e-6), "TP gathered-group route"
+        assert np.allclose(d_ref, d_tp, atol=1e-5), "TP telemetry"
         print("OK")
         """
     )
@@ -631,3 +654,278 @@ def test_sharded_resume_bit_identical(tmp_path):
         print("OK")
         """
     )
+
+
+def test_tp_group_step_one_psum_parity_donation():
+    """ISSUE-10 acceptance: a (B=8, p=64, n=16384) fp32 group step on a
+    pure-TP model=8 mesh partitions n so no device ever materializes a
+    full matrix, lowers to EXACTLY ONE collective (the flat gram-payload
+    all-reduce, 3*B*p^2 fp32), donates the n-sharded param stack in
+    place, stays per-matrix fp32 bit-identical to the single-device
+    TP-schedule oracle (``kops.fused_group_step_tp``), and the kernel
+    planner keys on the LOCAL n shard, never the global n."""
+    _run(
+        """
+        import tempfile
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        from repro import optim
+        from repro.analysis.lowering import (
+            find_copies_of, hlo_shape_str, parse_collectives)
+        from repro.core import api, stiefel
+        from repro.distributed import shard_hints
+        from repro.kernels import autotune
+        from repro.kernels import ops as kops
+        from repro.launch.mesh import make_mesh
+        from repro.optim import fused as optim_fused
+
+        autotune.set_cache(autotune.PlanCache(
+            path=os.path.join(tempfile.mkdtemp(), "autotune.json")))
+
+        B, p, n = 8, 64, 16384
+        mesh = make_mesh((8,), ("model",))
+        shard_hints.set_mesh(mesh)  # "2d": batch replicated, n over model
+        x = stiefel.random_stiefel(jax.random.PRNGKey(0), (B, p, n))
+        g = 0.1 * jax.random.normal(jax.random.PRNGKey(1), (B, p, n))
+        sh = NamedSharding(mesh, P(None, None, "model"))
+        cs0 = api.ConstraintSet.from_tree({"w": np.asarray(x, np.float32)})
+        gs0 = api.ConstraintSet.from_tree({"w": np.asarray(g, np.float32)})
+        params = api.ConstraintSet(
+            cs0.plan, tuple(jax.device_put(s, sh) for s in cs0.stacks))
+        grads = api.ConstraintSet(
+            gs0.plan, tuple(jax.device_put(s, sh) for s in gs0.stacks))
+        # no device holds more than the (B, p, n/8) local block
+        assert params.stacks[0].sharding.shard_shape(
+            (B, p, n)) == (B, p, n // 8)
+
+        base = optim.chain(optim.trace(0.3))
+        opt = api.orthogonal("pogo", learning_rate=0.1, use_kernel=True,
+                             base_optimizer=base)
+        state = opt.init(params)
+
+        # --- exactly one TP collective in the lowered update
+        txt = jax.jit(opt.update).lower(
+            grads, state, params).compile().as_text()
+        colls = parse_collectives(txt)
+        counts = {k: v["count"] for k, v in colls.items() if v["count"]}
+        assert counts == {"all-reduce": 1}, counts
+        op = colls["all-reduce"]["ops"][0]
+        assert op["group"] == 8, op
+        # flat (B, 3*p*p) fp32 gram payload — never the matrix itself
+        assert op["bytes"] == B * 3 * p * p * 4, op
+
+        # --- donation: in-place rewrite, no stack-sized copy (global OR
+        # the per-device (B, p, n/8) local block)
+        step = api.constraint_step(opt)
+        stxt = step.lower(params, state, grads).compile().as_text()
+        assert "input_output_alias" in stxt, "no donation in TP step"
+        shapes = [
+            hlo_shape_str(jax.ShapeDtypeStruct((B, p, n), np.float32)),
+            hlo_shape_str(jax.ShapeDtypeStruct((B, p, n // 8), np.float32)),
+        ]
+        bad = find_copies_of(stxt, shapes)
+        assert not bad, bad
+
+        # --- fp32 bit-parity vs the single-device TP-schedule oracle
+        # (chunked left-fold partial-gram sum == psum contribution order;
+        # the oracle step is jitted as ONE graph, like the driver — at
+        # p=64 eager per-op compilation drifts by an ulp)
+        fb = optim_fused.resolve_fused_base(base)
+        upd = jax.jit(opt.update)
+        ps, s = params, state
+        dists = []
+        for _ in range(2):
+            u, s = upd(grads, s, ps)
+            ps = ps.apply(u)
+            dists.append(np.asarray(s.last_distance.per_group[0]))
+
+        # --- planner keys carry the LOCAL n shard, never the global n
+        # (checked BEFORE the single-device oracle below, whose own
+        # full-width dispatches legitimately key on n=16384)
+        keys = list(autotune.get_cache()._mem)
+        assert any("n=2048," in k for k in keys), keys
+        assert not any("n=16384," in k for k in keys), keys
+
+        @jax.jit
+        def oracle(xo, go, mu):
+            x2, mu2, _, dist, _ = kops.fused_group_step_tp(
+                xo, go, jnp.float32(0.1), method="pogo", lam=0.5,
+                base_kind=fb.kind, hyper=fb.hyper,
+                post_scale=fb.post_scale, mu=mu, tp_shards=8)
+            ug = (x2 - xo).astype(xo.dtype)
+            return xo + ug, mu2, dist
+
+        xo = jnp.asarray(np.asarray(x), jnp.float32)
+        go = jnp.asarray(np.asarray(g), jnp.float32)
+        mu = jnp.zeros_like(xo)
+        odists = []
+        for _ in range(2):
+            xo, mu, dist = oracle(xo, go, mu)
+            odists.append(np.asarray(dist))
+        assert np.array_equal(np.asarray(ps.stacks[0]), np.asarray(xo))
+        mu_drv = np.asarray(jax.tree.leaves(s.base_state)[0])
+        assert np.array_equal(mu_drv, np.asarray(mu))
+        for d1, d2 in zip(dists, odists):
+            assert np.array_equal(d1, d2)
+
+        # --- and the donated step actually runs sharded + healthy
+        p2, s2, health = step(params, state, grads)
+        assert p2.stacks[0].sharding.spec == P(None, None, "model")
+        assert bool(health.finite)
+        shard_hints.set_mesh(None)
+        print("OK")
+        """
+    )
+
+
+def test_tp_compressed_psum_error_feedback_bounded():
+    """tp_compress=True (int8-quantized gram-payload psum with error
+    feedback, DESIGN.md §Tensor-parallel execution): long-run feasibility
+    stays BOUNDED at the int8 quantization floor — finite, plateaued, no
+    secular growth — with the EF residual carried shard-major in
+    ``OrthoState.extras``. The exact-psum run on the same DPxTP mesh
+    reaches a floor orders of magnitude tighter (the compressed floor
+    ~ max|payload|/127 is inherent to the wire format, not drift)."""
+    _run(
+        """
+        from repro import optim
+        from repro.core import api, stiefel
+        from repro.distributed import shard_hints
+        from repro.kernels import ref as kref
+        from repro.launch.mesh import make_test_mesh
+
+        B, p, n = 8, 16, 256
+        params = {"w": np.asarray(stiefel.random_stiefel(
+            jax.random.PRNGKey(0), (B, p, n)), np.float32)}
+        grads = {"w": np.asarray(0.1 * jax.random.normal(
+            jax.random.PRNGKey(9), (B, p, n)), np.float32)}
+        mesh = make_test_mesh(8)  # data=4, model=2 -> DP x TP
+        shard_hints.set_mesh(mesh, "2d")
+        base = optim.chain(optim.trace(0.3))
+
+        def run(tp_compress, steps):
+            opt = api.orthogonal("pogo", learning_rate=0.1,
+                                 use_kernel=True, base_optimizer=base,
+                                 tp_compress=tp_compress)
+            s = opt.init(params)
+            ps = params
+            upd = jax.jit(opt.update)
+            trace = []
+            for _ in range(steps):
+                u, s = upd(grads, s, ps)
+                ps = optim.apply_updates(ps, u)
+                trace.append(float(api.max_distance(s)))
+            return np.asarray(trace), s
+
+        exact, _ = run(False, 40)
+        comp, sc = run(True, 40)
+        # exact psum: same floor as the single-device fused step
+        assert exact[-1] < 1e-3, exact[-1]
+        # EF state carried shard-major (tp_width, B, K) across steps
+        assert isinstance(sc.extras, api.TpEfState), type(sc.extras)
+        ef = np.asarray(sc.extras.residuals[0])
+        K = kref.tp_payload_width(p, "trace")
+        assert ef.shape == (2, B, K) and ef.dtype == np.float32, ef.shape
+        # bounded at the quantization floor, no secular growth
+        assert np.all(np.isfinite(comp)), comp
+        assert comp.max() < 0.1, comp.max()
+        early, late = comp[10:20].mean(), comp[30:40].mean()
+        assert late <= 2.0 * early + 1e-3, (early, late)
+        assert exact[-1] < comp[-1]
+        shard_hints.set_mesh(None)
+        print("exact", exact[-1], "compressed", comp[-1])
+        print("OK")
+        """
+    )
+
+
+def test_checkpoint_tp_restore_different_width(tmp_path):
+    """A TP-compressed OrthoState saved at TP=8 restores onto a
+    (2, 4) DPxTP mesh bit-exactly for every math leaf; the
+    ``TpEfState`` error-feedback residual — whose leading dim IS the TP
+    width — is re-armed to zeros at the new width with a RuntimeWarning
+    (mirrors the PR-4 elastic DP resharding test)."""
+    ckpt_dir = str(tmp_path / "ckpt")
+    save_body = f"""
+        import hashlib, json, os
+        from repro import optim
+        from repro.checkpoint import checkpoint as ckpt
+        from repro.core import api, stiefel
+        from repro.distributed import shard_hints
+        from repro.launch.mesh import make_mesh
+
+        DIR = {ckpt_dir!r}
+        B, p, n = 8, 16, 256
+        mesh = make_mesh((8,), ("model",))
+        shard_hints.set_mesh(mesh)
+        params = {{"w": np.asarray(stiefel.random_stiefel(
+            jax.random.PRNGKey(0), (B, p, n)), np.float32)}}
+        grads = {{"w": np.asarray(0.1 * jax.random.normal(
+            jax.random.PRNGKey(9), (B, p, n)), np.float32)}}
+        opt = api.orthogonal("pogo", learning_rate=0.1, use_kernel=True,
+                             base_optimizer=optim.chain(optim.trace(0.3)),
+                             tp_compress=True)
+        s = opt.init(params)
+        for _ in range(3):
+            u, s = jax.jit(opt.update)(grads, s, params)
+            params = optim.apply_updates(params, u)
+        assert isinstance(s.extras, api.TpEfState)
+        assert s.extras.residuals[0].shape[0] == 8  # saved at TP width 8
+        ckpt.save(DIR, 7, (params, s))
+        meta = [
+            [list(np.asarray(l).shape),
+             hashlib.md5(np.asarray(l).tobytes()).hexdigest()]
+            for l in jax.tree.leaves((params, s))]
+        with open(os.path.join(DIR, "digests.json"), "w") as f:
+            json.dump(meta, f)
+        print("OK")
+    """
+    restore_body = f"""
+        import hashlib, json, os, warnings
+        from repro import optim
+        from repro.checkpoint import checkpoint as ckpt
+        from repro.core import api
+        from repro.distributed import shard_hints
+        from repro.launch.mesh import make_mesh
+
+        DIR = {ckpt_dir!r}
+        B, p, n = 8, 16, 256
+        mesh = make_mesh((2, 4), ("data", "model"))
+        shard_hints.set_mesh(mesh, "2d")
+        params = {{"w": np.zeros((B, p, n), np.float32)}}
+        grads = {{"w": np.zeros((B, p, n), np.float32)}}
+        opt = api.orthogonal("pogo", learning_rate=0.1, use_kernel=True,
+                             base_optimizer=optim.chain(optim.trace(0.3)),
+                             tp_compress=True)
+        s = opt.init(params)
+        # one step materializes the width-4 TpEfState in the like tree
+        _u, s = jax.jit(opt.update)(grads, s, params)
+        assert isinstance(s.extras, api.TpEfState)
+        assert s.extras.residuals[0].shape[0] == 4
+        like = (params, s)
+        with warnings.catch_warnings(record=True) as wlog:
+            warnings.simplefilter("always")
+            step, restored = ckpt.restore_latest(DIR, like)
+        assert step == 7
+        assert any(issubclass(w.category, RuntimeWarning)
+                   and "error-feedback" in str(w.message) for w in wlog), (
+            [str(w.message) for w in wlog])
+        with open(os.path.join(DIR, "digests.json")) as f:
+            meta = json.load(f)
+        leaves = jax.tree.leaves(restored)
+        assert len(leaves) == len(meta)
+        reset = 0
+        for leaf, (shape, digest) in zip(leaves, meta):
+            a = np.asarray(leaf)
+            if list(a.shape) == shape:
+                assert hashlib.md5(a.tobytes()).hexdigest() == digest
+            else:
+                # the EF leaf: re-armed at the new TP width, all zeros
+                assert a.shape == (4, B, 3 * p * p), a.shape
+                assert not a.any()
+                reset += 1
+        assert reset == 1, reset
+        shard_hints.set_mesh(None)
+        print("OK")
+    """
+    _run(save_body, n_devices=8)
+    _run(restore_body, n_devices=8)
